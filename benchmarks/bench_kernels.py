@@ -1,0 +1,48 @@
+"""Pallas kernel micro-bench (interpret mode on CPU: correctness-grade
+timing, TPU numbers come from the roofline). Reports us/call vs the jnp
+reference path so regressions in kernel structure are visible."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from .common import time_us
+
+
+def main():
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    B, S, Hq, Hkv, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, Hq, hd))
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd))
+    us = time_us(lambda: ops.flash_attention(q, k, v, block_q=64, block_k=64))
+    us_ref = time_us(lambda: ref.flash_attention_ref(q, k, v))
+    rows.append(("kernel_flash_attention_interp", us, f"ref={us_ref:.0f}us"))
+
+    E, C, d, f = 8, 128, 256, 256
+    x = jax.random.normal(ks[0], (E, C, d))
+    w = jax.random.normal(ks[1], (E, d, f))
+    sizes = jnp.full((E,), C, jnp.int32)
+    us = time_us(lambda: ops.grouped_matmul(x, w, sizes))
+    us_ref = time_us(lambda: ref.grouped_matmul_ref(x, w, sizes))
+    rows.append(("kernel_grouped_matmul_interp", us, f"ref={us_ref:.0f}us"))
+
+    B, S, nh, hd, n = 1, 256, 4, 64, 16
+    xh = jax.random.normal(ks[0], (B, S, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    dA = -jnp.abs(jax.random.normal(ks[2], (B, S, nh))) * 0.1
+    Bh = jax.random.normal(ks[3], (B, S, nh, n))
+    Ch = jax.random.normal(ks[0], (B, S, nh, n))
+    h0 = jnp.zeros((B, nh, hd, n))
+    us = time_us(lambda: ops.ssd_scan(xh, dt, dA, Bh, Ch, h0, chunk=64))
+    us_ref = time_us(lambda: ref.ssd_scan_ref(xh, dt, dA, Bh, Ch, h0))
+    rows.append(("kernel_ssd_scan_interp", us, f"ref={us_ref:.0f}us"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,96 @@
+"""Fig. 3 / §3.3: asynchronous off-policy training overlap.
+
+Event-driven simulation of the trainer/inference pipeline with long-tailed
+rollout lengths (the regime of reasoning-model RL). Compares makespan for:
+
+  sync        trainer waits for the whole batch; inference stalls while the
+              trainer runs (the paper: ">2x step time without in-flight").
+  async-k     inference keeps generating under a policy up to k steps old;
+              trainer runs as soon as a batch is ready (continuous batching
+              + in-flight updates).
+
+The paper reports ~1500 s steps WITH in-flight updates and >2x worse
+without; the simulation reproduces the mechanism (batch-boundary bubbles +
+straggler tails) rather than the absolute numbers.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+def simulate(num_steps: int = 40, batch: int = 64, pool: int = 64, *,
+             async_k: int = 0, trainer_time: float = 1.0,
+             mean_len: float = 1.0, tail: float = 3.0, seed: int = 0) -> float:
+    """Returns makespan (arbitrary time units).
+
+    async_k == 0 -> synchronous: generation and training never overlap.
+    async_k >= 1 -> trainer overlaps; rollouts older than k are discarded
+    and regenerated (cost of staleness appears as wasted slots).
+    """
+    rng = np.random.default_rng(seed)
+
+    def draw(n):
+        # lognormal tail: most rollouts short, some very long
+        return rng.lognormal(mean=np.log(mean_len), sigma=np.log(tail), size=n)
+
+    t = 0.0
+    if async_k == 0:
+        for _ in range(num_steps):
+            lengths = draw(batch)
+            # pool slots process `batch` rollouts, slowest gates the batch
+            slots = np.zeros(pool)
+            for length in lengths:
+                i = int(np.argmin(slots))
+                slots[i] += length
+            t += slots.max()          # generation (inference idle after)
+            t += trainer_time         # training (inference stalled)
+        return t
+
+    # async: continuous batching — rollouts stream; trainer consumes the
+    # oldest `batch` finished rollouts; generation never pauses.
+    finish_heap = []                  # (finish_time, version_at_start)
+    slot_free = np.zeros(pool)
+    version = 0
+    version_time = 0.0                # when current policy was installed
+    done_steps = 0
+    ready: list[tuple[float, int]] = []
+    while done_steps < num_steps:
+        # keep the pool saturated
+        for i in range(pool):
+            if slot_free[i] <= t:
+                L = float(draw(1)[0])
+                heapq.heappush(finish_heap, (max(t, slot_free[i]) + L,
+                                             version))
+                slot_free[i] = max(t, slot_free[i]) + L
+        ft, v0 = heapq.heappop(finish_heap)
+        t = max(t, ft)
+        if version - v0 <= async_k:   # staleness filter
+            ready.append((ft, v0))
+        if len(ready) >= batch:
+            # trainer consumes a batch; runs concurrently with generation
+            version_time = max(version_time, t) + trainer_time
+            version += 1
+            done_steps += 1
+            ready = ready[batch:]
+            t = max(t, version_time - trainer_time)  # overlap: no stall
+    return max(t, version_time)
+
+
+def main() -> list[tuple[str, float, str]]:
+    rows = []
+    sync = simulate(async_k=0)
+    for k in (1, 4, 8):
+        a = simulate(async_k=k)
+        rows.append((f"fig3_async{k}_speedup_vs_sync", 0.0,
+                     f"{sync / a:.2f}x"))
+    rows.insert(0, ("fig3_sync_makespan", sync, ""))
+    a8 = simulate(async_k=8)
+    assert sync / a8 > 2.0, "paper claims >2x from overlap; sim disagrees"
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,37 @@
+"""Deliverable (g): per-(arch x shape) roofline summary from the dry-run
+results directory (results/dryrun). Emits one CSV row per pair with the
+dominant term; the full markdown table is rendered by
+repro.launch.roofline for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import os
+
+from repro.launch.roofline import load_results
+
+RESULT_DIR = os.environ.get("DRYRUN_RESULTS",
+                            os.path.join(os.path.dirname(__file__), "..",
+                                         "results", "dryrun"))
+
+
+def main():
+    rows = []
+    results = load_results(RESULT_DIR, mesh="16x16")
+    if not results:
+        rows.append(("roofline_table", 0.0,
+                     "no results; run: python -m repro.launch.dryrun --all "
+                     "--mesh both --out results/dryrun"))
+        return rows
+    for r in results:
+        dom = {"compute": r["t_compute"], "memory": r["t_memory"],
+               "collective": r["t_collective"]}[r["bottleneck"]]
+        rows.append((f"roofline_{r['arch']}_{r['shape']}", dom * 1e6,
+                     f"{r['bottleneck']} uf={r.get('useful_frac', 0):.2f}"))
+    n_coll = sum(r["bottleneck"] == "collective" for r in results)
+    rows.append(("roofline_pairs_total", float(len(results)),
+                 f"{n_coll} collective-bound"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,58 @@
+"""Two-stage SFT recipe (paper §3.2, toy scale).
+
+Stage 1: general reasoning SFT (Muon, linear warmup) on synthetic
+reasoning traces. Stage 2: agentic SFT (Muon, linear decay, resumed from
+stage 1) on tool-call traces with tool turns loss-masked.
+
+Run:  PYTHONPATH=src python examples/sft_train.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, ParallelConfig
+from repro.data import (TOKENIZER, agentic_tool_docs, pack_documents,
+                        synthetic_reasoning_docs)
+from repro.train import Trainer, save_checkpoint
+
+cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
+                          vocab_size=TOKENIZER.vocab_size)
+pcfg = ParallelConfig(remat="full", loss_chunk=64)   # paper: full remat
+
+
+def run_stage(trainer, docs_fn, steps, tag):
+    losses = []
+    for step in range(steps):
+        docs = list(docs_fn(16, seed=step))
+        batch = pack_documents(docs, seq_len=96, num_rows=8).as_dict()
+        batch.pop("positions"); batch.pop("segment_ids")
+        m = trainer.step(batch)
+        losses.append(m["lm_loss"])
+        print(f"[{tag}] step {step:3d} loss={m['lm_loss']:.4f} "
+              f"lr_scale={m['lr_scale']:.3f}", flush=True)
+    return losses
+
+
+# Stage 1: general reasoning (warmup -> constant, paper: 5e-5 warmed from 1e-8)
+opt1 = OptimizerConfig(name="muon", lr=3e-3, weight_decay=0.01,
+                       schedule="linear_warmup", warmup_steps=3,
+                       total_steps=12)
+trainer = Trainer(jax.random.PRNGKey(0), cfg, opt1, pcfg=pcfg,
+                  dtype=jnp.float32, mode="sft")
+l1 = run_stage(trainer, synthetic_reasoning_docs, 12, "stage1-reasoning")
+save_checkpoint("/tmp/repro_sft_stage1.npz", trainer.state.params, step=12)
+
+# Stage 2: agentic SFT (linear decay, resumed weights)
+opt2 = OptimizerConfig(name="muon", lr=1e-3, weight_decay=0.01,
+                       schedule="linear_decay", total_steps=8)
+trainer2 = Trainer(jax.random.PRNGKey(1), cfg, opt2, pcfg=pcfg,
+                   dtype=jnp.float32, mode="sft")
+trainer2.state = trainer2.state._replace(params=trainer.state.params)
+l2 = run_stage(trainer2, agentic_tool_docs, 8, "stage2-agentic")
+
+assert l1[-1] < l1[0] and l2[-1] < l2[0]
+print(f"\nstage1: {l1[0]:.3f} -> {l1[-1]:.3f}   "
+      f"stage2: {l2[0]:.3f} -> {l2[-1]:.3f}")
+print("two-stage SFT OK; checkpoint at /tmp/repro_sft_stage1.npz")

@@ -1,0 +1,36 @@
+"""Dev smoke: one forward+loss+decode per reduced arch on CPU."""
+import sys
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+from repro.configs import ASSIGNED, get_config
+from repro.models import (forward, init_decode_state, init_params, lm_loss,
+                          prefill, serve_step)
+from repro.configs.base import ParallelConfig
+
+pcfg = ParallelConfig(remat="none", loss_chunk=64)
+
+for arch in ASSIGNED:
+    cfg = get_config(arch + ":reduced")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg, dtype=jnp.float32)
+    B, S = 2, 48
+    batch = {"tokens": jnp.ones((B, S), jnp.int32),
+             "labels": jnp.ones((B, S), jnp.int32),
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.zeros((B, cfg.num_image_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((B, cfg.encoder_seq_len, cfg.d_model))
+    loss, metrics = jax.jit(lambda p, b: lm_loss(p, b, cfg, pcfg))(params, batch)
+    logits, aux = forward(params, batch, cfg, pcfg)
+    assert logits.shape == (B, S, cfg.vocab_size), (arch, logits.shape)
+    assert not jnp.isnan(loss), arch
+    # decode
+    lg, state = prefill(params, batch, cfg, max_seq=64, pcfg=pcfg)
+    lg2, state = serve_step(params, state, jnp.ones((B,), jnp.int32), cfg, pcfg)
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert not jnp.any(jnp.isnan(lg2)), arch
+    print(f"OK {arch:24s} loss={float(loss):.3f} decode_logit0={float(lg2[0,0]):+.3f}")
+print("all model families OK")

@@ -1,0 +1,57 @@
+"""Architecture registry: one module per assigned architecture + the paper's own.
+
+``get_config("<arch-id>")`` accepts the public arch ids from the assignment
+(dashes) and applies optional variants: ``"yi-9b:swa"`` returns the explicit
+sliding-window variant used for long_500k decode on full-attention archs.
+"""
+from __future__ import annotations
+
+from .base import (InputShape, ModelConfig, MoEConfig, OptimizerConfig,
+                   ParallelConfig, RLConfig, SSMConfig, describe)
+from .shapes import SHAPES, get_shape
+
+from . import (h2o_danube_3_4b, hymba_1_5b, intellect_3, internvl2_26b,
+               mamba2_370m, minicpm_2b, minitron_4b, qwen2_moe_a2_7b,
+               qwen3_moe_235b_a22b, whisper_large_v3, yi_9b)
+
+_MODULES = (
+    h2o_danube_3_4b,
+    qwen2_moe_a2_7b,
+    internvl2_26b,
+    minicpm_2b,
+    minitron_4b,
+    qwen3_moe_235b_a22b,
+    mamba2_370m,
+    yi_9b,
+    hymba_1_5b,
+    whisper_large_v3,
+    intellect_3,
+)
+
+REGISTRY: dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+# The ten assigned architectures (excludes the paper's own intellect-3).
+ASSIGNED = [m.CONFIG.name for m in _MODULES[:-1]]
+
+
+def get_config(arch: str) -> ModelConfig:
+    name, _, variant = arch.partition(":")
+    try:
+        cfg = REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(REGISTRY)}") from None
+    if variant == "swa":
+        if cfg.sliding_window == 0:
+            cfg = cfg.with_sliding_window()
+    elif variant == "reduced":
+        cfg = cfg.reduced()
+    elif variant:
+        raise KeyError(f"unknown variant {variant!r} (have: swa, reduced)")
+    return cfg
+
+
+__all__ = [
+    "ASSIGNED", "REGISTRY", "SHAPES", "InputShape", "ModelConfig", "MoEConfig",
+    "OptimizerConfig", "ParallelConfig", "RLConfig", "SSMConfig", "describe",
+    "get_config", "get_shape",
+]

@@ -1,0 +1,305 @@
+"""Config dataclasses for the repro framework.
+
+Every assigned architecture is expressed as a ``ModelConfig``. Configs are
+plain frozen dataclasses so they are hashable (usable as jit static args) and
+trivially serializable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts layer config (paper §2.1.8)."""
+
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    router_aux_loss_coef: float = 1e-3
+    # jitter/noise on router logits during training
+    router_noise: float = 0.0
+    # normalize top-k router weights to sum to 1 (qwen-style)
+    norm_topk_prob: bool = True
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD config (arXiv:2405.21060)."""
+
+    state_size: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_kernel: int = 4
+    chunk_size: int = 256
+    n_groups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single decoder-style (or enc-dec) transformer family member."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    max_seq_len: int = 1 << 20
+    rope_theta: float = 1e6
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # attention variants
+    sliding_window: int = 0  # 0 = full attention
+    attn_logit_softcap: float = 0.0
+    qk_norm: bool = False
+    # mixture-of-experts (None for dense)
+    moe: Optional[MoEConfig] = None
+    # state-space (None for attention-only); for family=="ssm" replaces attn
+    ssm: Optional[SSMConfig] = None
+    # hymba-style: attention and SSM run in parallel in every layer
+    parallel_ssm: bool = False
+    num_meta_tokens: int = 0
+    # encoder-decoder (whisper): encoder stack config
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0  # e.g. 1500 audio frames
+    # vlm: number of prepended image-patch embedding slots in input_specs
+    num_image_tokens: int = 0
+    # citation / provenance
+    source: str = ""
+    dtype: str = "bfloat16"
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.num_heads == 0:  # attention-free (pure SSM)
+            return 0
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.resolved_head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    @property
+    def uses_attention(self) -> bool:
+        return self.family != "ssm"
+
+    @property
+    def uses_ssm(self) -> bool:
+        return self.ssm is not None
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode cost per token is o(seq): SWA or SSM."""
+        if self.family == "ssm":
+            return True
+        if self.parallel_ssm and self.sliding_window:
+            return True
+        return self.sliding_window > 0
+
+    def with_sliding_window(self, window: int = 8192) -> "ModelConfig":
+        """Explicit SWA variant used for long_500k on full-attention archs."""
+        return replace(self, name=self.name + "-swa", sliding_window=window)
+
+    def reduced(self) -> "ModelConfig":
+        """Reduced-config smoke variant: 2 layers, d_model<=512, <=4 experts."""
+        d_model = min(self.d_model, 256)
+        heads = max(1, min(self.num_heads, 4))
+        kv = max(1, min(self.num_kv_heads, heads))
+        # keep the GQA ratio when possible
+        if self.num_kv_heads < self.num_heads:
+            kv = max(1, heads // max(1, self.num_heads // self.num_kv_heads))
+        moe = None
+        if self.moe is not None:
+            moe = replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                expert_d_ff=min(self.moe.expert_d_ff, 128),
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                shared_d_ff=min(self.moe.shared_d_ff, 128) if self.moe.shared_d_ff else 0,
+            )
+        ssm = None
+        if self.ssm is not None:
+            ssm = replace(self.ssm, state_size=min(self.ssm.state_size, 16),
+                          head_dim=32, chunk_size=32)
+        return replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=2,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            moe=moe,
+            ssm=ssm,
+            num_encoder_layers=2 if self.is_encoder_decoder else 0,
+            encoder_seq_len=min(self.encoder_seq_len, 64) if self.is_encoder_decoder else 0,
+            num_meta_tokens=min(self.num_meta_tokens, 8),
+            num_image_tokens=min(self.num_image_tokens, 16),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+        )
+
+    # -- parameter counting (for roofline MODEL_FLOPS) ----------------------
+    def param_counts(self) -> dict:
+        """Analytic parameter counts: total and active-per-token."""
+        d = self.d_model
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        dense_mlp = 3 * d * self.d_ff if self.d_ff else 0
+        per_layer_total = 0
+        per_layer_active = 0
+        if self.family == "ssm" or (self.ssm and not self.parallel_ssm and self.family == "ssm"):
+            pass
+        if self.uses_attention:
+            per_layer_total += attn
+            per_layer_active += attn
+        if self.ssm is not None:
+            s = self.ssm
+            d_in = s.d_inner(d)
+            nh = s.n_heads(d)
+            ssm_p = (
+                d * (2 * d_in + 2 * s.n_groups * s.state_size + nh)  # in_proj
+                + s.conv_kernel * (d_in + 2 * s.n_groups * s.state_size)  # conv
+                + nh * 2  # A_log, D
+                + d_in * d  # out_proj
+            )
+            per_layer_total += ssm_p
+            per_layer_active += ssm_p
+        if self.moe is not None:
+            m = self.moe
+            expert = 3 * d * m.expert_d_ff
+            per_layer_total += m.num_experts * expert + d * m.num_experts
+            per_layer_active += m.top_k * expert + d * m.num_experts
+            if m.num_shared_experts:
+                shared = 3 * d * (m.shared_d_ff or m.expert_d_ff * m.num_shared_experts)
+                per_layer_total += shared
+                per_layer_active += shared
+        else:
+            per_layer_total += dense_mlp
+            per_layer_active += dense_mlp
+        per_layer_total += 2 * d  # norms
+        per_layer_active += 2 * d
+
+        emb = self.vocab_size * d
+        head = 0 if self.tie_embeddings else self.vocab_size * d
+        total = self.num_layers * per_layer_total + emb + head + d
+        active = self.num_layers * per_layer_active + emb + head + d
+        if self.is_encoder_decoder:
+            enc_layer = attn + dense_mlp + 2 * d
+            # decoder cross-attention
+            total += self.num_encoder_layers * enc_layer + self.num_layers * attn
+            active += self.num_encoder_layers * enc_layer + self.num_layers * attn
+        return {"total": total, "active": active}
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+# ---------------------------------------------------------------------------
+# Training / runtime configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "muon"  # muon | adamw
+    lr: float = 1e-6
+    weight_decay: float = 0.01
+    momentum: float = 0.95
+    ns_steps: int = 5
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    schedule: str = "constant"  # constant | linear_warmup | wsd
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    decay_frac: float = 0.1  # for WSD
+    # §Perf / §2.1.7: reshard stacked [L, m, n] momentum to layer-sharded
+    # before Newton-Schulz (the Dion all-to-all scheme expressed as GSPMD
+    # sharding constraints) instead of running NS on FSDP-sharded tensors.
+    # Requires a mesh context with a "model" axis at trace time.
+    layer_reshard_ns: bool = False
+
+
+@dataclass(frozen=True)
+class RLConfig:
+    """Paper §3.3 defaults."""
+
+    batch_prompts: int = 256
+    group_size: int = 16
+    max_context: int = 65536
+    max_off_policy_steps: int = 8
+    alpha: float = 0.5
+    beta: float = 5.0
+    rollout_kill_threshold: float = 1e-5
+    algorithm: str = "icepop"  # icepop | cispo | gspo
+    # online filtering
+    drop_zero_signal_groups: bool = True
+    easy_pool_pass_rate: float = 1.0
+
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    expert_parallel: bool = False
+    context_parallel: int = 1
+    remat: str = "full"  # full | selective | none
+    loss_chunk: int = 1024  # vocab-loss sequence chunking; 0 = unchunked
+    scan_layers: bool = True
+    # use Pallas kernels for attention / grouped GEMM / SSD (TPU target;
+    # interpret=True on CPU in tests)
+    use_pallas: bool = False
+    # beyond-paper knobs discovered during hillclimbing
+    gather_dtype: str = "bf16"
+    # §Perf H5: explicit FSDP gather-at-use — constrain each layer's weights
+    # to replicated inside the scan body so GSPMD all-gathers WEIGHT shards
+    # (MBs) instead of resharding ACTIVATIONS (GBs). This is the faithful
+    # FSDP2 semantics; off by default to preserve the naive-GSPMD baseline.
+    fsdp_gather_weights: bool = False
+    # decode: ring-buffer KV cache sized to the window for SWA archs
+    swa_ring_cache: bool = False
+
+
+def describe(cfg: ModelConfig) -> str:
+    pc = cfg.param_counts()
+    return (
+        f"{cfg.name} [{cfg.family}] L={cfg.num_layers} d={cfg.d_model} "
+        f"H={cfg.num_heads}/kv{cfg.num_kv_heads} ff={cfg.d_ff} V={cfg.vocab_size} "
+        f"params={pc['total']/1e9:.2f}B active={pc['active']/1e9:.2f}B"
+    )

@@ -1,0 +1,26 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads in every layer.
+
+[arXiv:2411.13676]. 32L d_model=1600 25H (GQA kv=5) d_ff=5504, ssm_state=16,
+128 learned meta tokens prepended to the sequence, sliding-window attention
+(global attention in a few layers is simplified to SWA-everywhere; noted in
+DESIGN.md). Attention and SSM branches run in parallel and their (normed)
+outputs are averaged.
+"""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    sliding_window=1024,
+    num_meta_tokens=128,
+    parallel_ssm=True,
+    ssm=SSMConfig(state_size=16, head_dim=64, expand=2, conv_kernel=4,
+                  chunk_size=256, n_groups=1),
+    source="arXiv:2411.13676",
+)

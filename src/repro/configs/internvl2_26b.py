@@ -1,0 +1,21 @@
+"""internvl2-26b [vlm] — InternViT + InternLM2 language backbone.
+
+[arXiv:2404.16821]. 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+The ViT vision encoder + MLP projector is a STUB per the assignment carve-out:
+``input_specs`` provides precomputed patch embeddings of shape
+[B, num_image_tokens, d_model] consumed by the LM backbone.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    num_image_tokens=256,  # one 448px tile -> 256 patch embeddings post-projector
+    source="arXiv:2404.16821",
+)

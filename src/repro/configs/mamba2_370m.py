@@ -1,0 +1,22 @@
+"""mamba2-370m [ssm] — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060]. 48L d_model=1024, ssm_state=128, no attention, no MLP
+(d_ff=0): each block is a Mamba-2 mixer. Decode state is O(1) in sequence
+length so long_500k decode is natively cheap.
+"""
+from .base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    tie_embeddings=True,
+    ssm=SSMConfig(state_size=128, head_dim=64, expand=2, conv_kernel=4,
+                  chunk_size=256, n_groups=1),
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,22 @@
+"""minicpm-2b [dense] — llama-like arch trained with WSD schedule.
+
+[arXiv:2404.06395]. 40L d_model=2304 36H (GQA kv=36 => MHA) d_ff=5760
+vocab=122753. The WSD (warmup-stable-decay) schedule is implemented in
+``repro.optim.schedules`` and selected by this arch's training preset.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    num_layers=40,
+    d_model=2304,
+    num_heads=36,
+    num_kv_heads=36,
+    d_ff=5760,
+    vocab_size=122753,
+    tie_embeddings=True,
+    source="arXiv:2404.06395",
+)
+
+TRAIN_SCHEDULE = "wsd"

@@ -1,0 +1,26 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed experts, top-4.
+
+[hf:Qwen/Qwen1.5-MoE-A2.7B]. 24L d_model=2048 16H (GQA kv=16) d_ff=1408
+(expert intermediate) vocab=151936, MoE 60e top-4.
+"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    moe=MoEConfig(
+        num_experts=60,
+        top_k=4,
+        expert_d_ff=1408,
+        num_shared_experts=4,
+        shared_d_ff=5632,  # 4x expert_d_ff, per HF config
+        norm_topk_prob=False,
+    ),
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)

@@ -1,0 +1,27 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts, top-8, no shared experts.
+
+[hf:Qwen/Qwen3-30B-A3B family scaled]. 94L d_model=4096 64H (GQA kv=4)
+expert d_ff=1536 vocab=151936, MoE 128e top-8. The deepest assigned config —
+the compile-hygiene stress test for scan-over-layers under GSPMD.
+"""
+from .base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    d_ff=1536,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=8,
+        expert_d_ff=1536,
+        norm_topk_prob=True,
+    ),
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

@@ -1,0 +1,27 @@
+"""whisper-large-v3 [audio] — encoder-decoder transformer backbone.
+
+[arXiv:2212.04356]. 32L (decoder) d_model=1280 20H (MHA kv=20) d_ff=5120
+vocab=51866, 32 encoder layers. The mel-spectrogram + conv feature extractor
+frontend is a STUB per the assignment carve-out: ``input_specs`` provides
+precomputed frame embeddings [B, 1500, d_model] for the encoder.
+
+decode_32k / long_500k exercise the decoder mechanically (far beyond the 30 s
+audio use case; documented in DESIGN.md §6).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    is_encoder_decoder=True,
+    num_encoder_layers=32,
+    encoder_seq_len=1500,
+    rope_theta=0.0,  # whisper uses learned/sinusoidal positions, not rope
+    source="arXiv:2212.04356",
+)

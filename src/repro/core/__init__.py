@@ -1,0 +1,19 @@
+"""The paper's primary contribution: asynchronous RL orchestration.
+
+losses       IcePop (Eq. 1-2) + CISPO/GSPO baselines
+rollouts     policy-version-stamped trajectories, staleness filter, packing
+filtering    difficulty pools + online zero-signal filtering
+orchestrator continuous batching, in-flight weight relays, batch assembly
+"""
+from .losses import (LOSSES, cispo_loss, group_advantages, gspo_loss,
+                     icepop_loss, rl_loss, rollout_kill_mask)
+from .rollouts import Rollout, RolloutGroup, filter_stale, pack_batch
+from .filtering import DifficultyPools, filter_zero_signal
+from .orchestrator import AsyncPoolClient, Orchestrator, OrchestratorStats
+
+__all__ = [
+    "AsyncPoolClient", "DifficultyPools", "LOSSES", "Orchestrator",
+    "OrchestratorStats", "Rollout", "RolloutGroup", "cispo_loss",
+    "filter_stale", "filter_zero_signal", "group_advantages", "gspo_loss",
+    "icepop_loss", "pack_batch", "rl_loss", "rollout_kill_mask",
+]

@@ -1,0 +1,120 @@
+"""Online data filtering & difficulty curriculum (paper §2.1.5).
+
+Problems are sorted into difficulty pools (easy / normal / hard) keyed by the
+observed solve rate (exponential moving average over rollout groups). The
+curriculum sampler draws a configurable mix from each pool; problems whose
+pass rate reaches 1.0 are retired to the easy pool and excluded from future
+sampling (they contribute no learning signal). The *online* filter discards
+zero-signal groups (all-solve / all-fail) before they reach the trainer.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from .rollouts import RolloutGroup
+
+EASY, NORMAL, HARD = "easy", "normal", "hard"
+
+
+@dataclass
+class ProblemStats:
+    problem_id: str
+    solve_rate: float = 0.5       # EMA; optimistic-neutral prior
+    attempts: int = 0
+    retired: bool = False         # pass rate hit 1.0 -> never sampled again
+
+
+class DifficultyPools:
+    """Solve-rate-keyed curriculum pools with online updates.
+
+    Thresholds follow the paper's easy/normal/hard split; `mix` gives the
+    fraction of each step's draw taken from each pool.
+    """
+
+    def __init__(self, problem_ids: Sequence[str], *, ema: float = 0.3,
+                 easy_above: float = 0.8, hard_below: float = 0.2,
+                 mix: Dict[str, float] | None = None, seed: int = 0,
+                 retire_at: float = 1.0,
+                 initial_solve_rates: Dict[str, float] | None = None):
+        self.stats: Dict[str, ProblemStats] = {}
+        for pid in problem_ids:
+            sr = (initial_solve_rates or {}).get(pid, 0.5)
+            self.stats[pid] = ProblemStats(pid, solve_rate=sr)
+        self.ema = ema
+        self.easy_above = easy_above
+        self.hard_below = hard_below
+        self.retire_at = retire_at
+        self.mix = mix or {EASY: 0.1, NORMAL: 0.7, HARD: 0.2}
+        self.rng = random.Random(seed)
+
+    # -- classification -----------------------------------------------------
+
+    def pool_of(self, pid: str) -> str:
+        sr = self.stats[pid].solve_rate
+        if sr >= self.easy_above:
+            return EASY
+        if sr <= self.hard_below:
+            return HARD
+        return NORMAL
+
+    def pools(self) -> Dict[str, List[str]]:
+        out: Dict[str, List[str]] = {EASY: [], NORMAL: [], HARD: []}
+        for pid, st in self.stats.items():
+            if not st.retired:
+                out[self.pool_of(pid)].append(pid)
+        return out
+
+    # -- online updates -----------------------------------------------------
+
+    def update(self, group: RolloutGroup) -> None:
+        st = self.stats[group.problem_id]
+        sr = group.solve_rate
+        st.solve_rate = (1 - self.ema) * st.solve_rate + self.ema * sr \
+            if st.attempts else sr
+        st.attempts += 1
+        if sr >= self.retire_at:
+            # paper: pass rate 1 -> removed from the sampling pool
+            st.retired = True
+
+    # -- sampling -----------------------------------------------------------
+
+    def sample(self, n: int) -> List[str]:
+        """Draw n problem ids according to the pool mix. Short pools spill
+        into NORMAL, then into whatever is non-empty."""
+        pools = self.pools()
+        want = {p: int(round(n * frac)) for p, frac in self.mix.items()}
+        # fix rounding drift
+        while sum(want.values()) < n:
+            want[NORMAL] = want.get(NORMAL, 0) + 1
+        while sum(want.values()) > n:
+            k = max(want, key=want.get)
+            want[k] -= 1
+        out: List[str] = []
+        deficit = 0
+        for pool, k in want.items():
+            ids = pools[pool]
+            if len(ids) >= k:
+                out.extend(self.rng.sample(ids, k))
+            else:
+                out.extend(ids)
+                deficit += k - len(ids)
+        if deficit:
+            remaining = [pid for pool in (NORMAL, HARD, EASY)
+                         for pid in pools[pool] if pid not in out]
+            take = min(deficit, len(remaining))
+            if take:
+                out.extend(self.rng.sample(remaining, take))
+        return out
+
+    @property
+    def num_active(self) -> int:
+        return sum(1 for s in self.stats.values() if not s.retired)
+
+
+def filter_zero_signal(groups: Sequence[RolloutGroup]) \
+        -> tuple[list[RolloutGroup], int]:
+    """Drop groups whose rewards are all identical (no gradient signal)."""
+    kept = [g for g in groups if not g.zero_signal()]
+    return kept, len(groups) - len(kept)

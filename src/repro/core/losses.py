@@ -1,0 +1,130 @@
+"""RL objectives: IcePop (paper §3.3, Eq. 1–2), CISPO and GSPO baselines.
+
+All losses share the same token-level interface:
+
+    loss, metrics = <algo>_loss(train_logp, batch, rl_cfg)
+
+with ``train_logp [B, S]`` the current-policy token log-probs (gradients flow
+through it) and ``batch`` carrying:
+
+    infer_logp  [B, S]  log-probs recorded by the inference service (data)
+    advantages  [B, S]  token advantages Â (group-mean baseline, broadcast)
+    loss_mask   [B, S]  1.0 on completion tokens that participate
+
+The paper's key stability mechanism is IcePop's *double-sided masking*
+(Eq. 2): tokens whose trainer/inference importance ratio k leaves [α, β] are
+zeroed (not clipped), which drops the noisy-update tail that CISPO's clipping
+keeps. A second guard kills *whole rollouts* containing any token with
+k < rollout_kill_threshold (1e-5 in the paper's runs), the signature of a
+trainer/inference numerical mismatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RLConfig
+
+
+def group_advantages(rewards, group_size: int):
+    """Â_i = S_i − mean(group) (paper's Dr.GRPO-style estimator [28]).
+
+    rewards: [N] with N = num_groups * group_size, groups contiguous.
+    Returns [N] advantages (identical for every token of rollout i).
+    """
+    g = rewards.reshape(-1, group_size)
+    adv = g - g.mean(axis=1, keepdims=True)
+    return adv.reshape(-1)
+
+
+def _masked_total(x, mask):
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (x * mask).sum() / denom
+
+
+def _ratio(train_logp, infer_logp):
+    # infer_logp is recorded data; stop_gradient for clarity (it is a leaf).
+    return jnp.exp(train_logp - jax.lax.stop_gradient(infer_logp))
+
+
+def rollout_kill_mask(train_logp, infer_logp, loss_mask, threshold: float):
+    """Zero the whole rollout if ANY of its tokens has ratio < threshold
+    (paper: 1e-5) — the trainer-inference mismatch guard."""
+    k = _ratio(train_logp, infer_logp)
+    bad = jnp.any((k < threshold) & (loss_mask > 0), axis=-1, keepdims=True)
+    return loss_mask * (1.0 - bad.astype(loss_mask.dtype))
+
+
+def icepop_loss(train_logp, batch, cfg: RLConfig):
+    """Masked token-level importance sampling (Eq. 1–2).
+
+    J = (1/Σ|y|) Σ_i Σ_t M(k_it; α, β) Â_it,   M(k) = k·1[α ≤ k ≤ β].
+
+    The ratio keeps its gradient (∇ k·Â = k·∇logπ·Â); the band mask is a
+    straight-through gate computed on the detached ratio.
+    """
+    mask = rollout_kill_mask(train_logp, batch["infer_logp"],
+                             batch["loss_mask"], cfg.rollout_kill_threshold)
+    k = _ratio(train_logp, batch["infer_logp"])
+    k_det = jax.lax.stop_gradient(k)
+    in_band = ((k_det >= cfg.alpha) & (k_det <= cfg.beta)).astype(jnp.float32)
+    obj = k * in_band * batch["advantages"]
+    loss = -_masked_total(obj, mask)
+    metrics = {
+        "rl_loss": loss,
+        "masked_frac": 1.0 - _masked_total(in_band, mask),
+        "killed_frac": 1.0 - (mask.sum() /
+                              jnp.maximum(batch["loss_mask"].sum(), 1.0)),
+        "mean_ratio": _masked_total(k_det, mask),
+        "mean_kl": _masked_total(jax.lax.stop_gradient(
+            batch["infer_logp"] - train_logp), mask),
+    }
+    return loss, metrics
+
+
+def cispo_loss(train_logp, batch, cfg: RLConfig):
+    """CISPO [32]: clipped-IS-weight REINFORCE. The detached clipped ratio
+    scales the logπ gradient — clipping *keeps* out-of-band tokens at the
+    band edge (contrast IcePop, which zeroes them)."""
+    mask = rollout_kill_mask(train_logp, batch["infer_logp"],
+                             batch["loss_mask"], cfg.rollout_kill_threshold)
+    k = _ratio(train_logp, batch["infer_logp"])
+    k_clip = jax.lax.stop_gradient(jnp.clip(k, cfg.alpha, cfg.beta))
+    obj = k_clip * train_logp * batch["advantages"]
+    loss = -_masked_total(obj, mask)
+    clipped = jax.lax.stop_gradient(
+        ((k < cfg.alpha) | (k > cfg.beta)).astype(jnp.float32))
+    return loss, {"rl_loss": loss, "clipped_frac": _masked_total(clipped, mask),
+                  "mean_ratio": _masked_total(jax.lax.stop_gradient(k), mask)}
+
+
+def gspo_loss(train_logp, batch, cfg: RLConfig, eps: float = 3e-4):
+    """GSPO: sequence-level geometric-mean ratio with PPO clipping.
+
+    s_i = exp(mean_t (logπ_train − logπ_infer)); the Fig. 10 ablation shows
+    this collapses under async-8 staleness, which our stability test
+    reproduces on a toy model.
+    """
+    mask = batch["loss_mask"]
+    ntok = jnp.maximum(mask.sum(axis=-1), 1.0)
+    diff = (train_logp - jax.lax.stop_gradient(batch["infer_logp"])) * mask
+    s = jnp.exp(diff.sum(axis=-1) / ntok)                       # [B]
+    # sequence advantage = advantage of any token (constant per rollout)
+    adv = (batch["advantages"] * mask).sum(axis=-1) / ntok       # [B]
+    unclipped = s * adv
+    clipped = jnp.clip(s, 1.0 - eps, 1.0 + eps) * adv
+    seq_obj = jnp.minimum(unclipped, clipped)
+    has_tok = (mask.sum(axis=-1) > 0).astype(jnp.float32)
+    loss = -(seq_obj * has_tok).sum() / jnp.maximum(has_tok.sum(), 1.0)
+    frac_clip = ((jnp.abs(s - 1.0) > eps).astype(jnp.float32) * has_tok).sum() \
+        / jnp.maximum(has_tok.sum(), 1.0)
+    return loss, {"rl_loss": loss, "clipped_frac": frac_clip,
+                  "mean_seq_ratio": jax.lax.stop_gradient(
+                      (s * has_tok).sum() / jnp.maximum(has_tok.sum(), 1.0))}
+
+
+LOSSES = {"icepop": icepop_loss, "cispo": cispo_loss, "gspo": gspo_loss}
+
+
+def rl_loss(train_logp, batch, cfg: RLConfig):
+    return LOSSES[cfg.algorithm](train_logp, batch, cfg)

@@ -1,0 +1,200 @@
+"""The orchestrator (paper §2.1.1–§2.1.5): the CPU process between trainer
+and inference.
+
+Bidirectional relays:
+  rollouts  — environment rollout coroutines run against the inference pool
+              (continuous batching keeps the pool saturated; finished rollout
+              groups are immediately replaced with new requests);
+  weights   — after every trainer step the new policy is pushed to every
+              engine *in-flight* (mid-trajectory), so rollouts span policies.
+
+Async off-policy semantics (§2.1.2): the trainer consumes the oldest ready
+batch; rollouts older than ``max_off_policy_steps`` are discarded. With
+``async_level = k`` the trainer is allowed to run k steps ahead of the
+freshest rollout policy (async-8 was the paper's production setting).
+
+This is an in-process, event-driven reproduction: inference "time" advances
+one decode step per pump tick, and the trainer step happens between ticks.
+The same orchestrator drives the toy end-to-end RL example and the
+utilization/overlap benchmarks.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import RLConfig
+from .filtering import DifficultyPools, filter_zero_signal
+from .rollouts import GenOutput, Rollout, RolloutGroup, filter_stale, pack_batch
+
+if TYPE_CHECKING:  # avoid circular imports: envs/inference import core
+    from repro.envs.environment import Environment
+    from repro.inference.client import InferencePool
+
+
+class AsyncPoolClient:
+    """asyncio bridge: env rollout coroutines await `generate`; the
+    orchestrator's pump loop steps the engines and resolves futures."""
+
+    def __init__(self, pool: "InferencePool", *, max_new_tokens: int = 64):
+        self.pool = pool
+        self.default_max_new_tokens = max_new_tokens
+        self._futures: Dict[int, asyncio.Future] = {}
+
+    async def generate(self, prompt_tokens, *, max_new_tokens=None,
+                       temperature=1.0) -> GenOutput:
+        req = self.pool.submit_request(
+            np.asarray(prompt_tokens, np.int32),
+            max_new_tokens=max_new_tokens or self.default_max_new_tokens,
+            temperature=temperature)
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[req.request_id] = fut
+        return await fut
+
+    def pump(self) -> int:
+        """One decode tick: advance engines, resolve finished requests."""
+        n = self.pool.step()
+        for req in self.pool.drain_requests():
+            fut = self._futures.pop(req.request_id, None)
+            if fut is not None and not fut.done():
+                fut.set_result(GenOutput(
+                    tokens=np.asarray(req.completion, np.int32),
+                    logprobs=np.asarray(req.logprobs, np.float32),
+                    versions=np.asarray(req.versions, np.int32)))
+        return n
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._futures)
+
+
+@dataclass
+class OrchestratorStats:
+    batches_emitted: int = 0
+    groups_completed: int = 0
+    rollouts_dropped_stale: int = 0
+    groups_dropped_zero_signal: int = 0
+    decode_ticks: int = 0
+    weight_pushes: int = 0
+    rewards: List[float] = field(default_factory=list)
+
+
+class Orchestrator:
+    """Continuous-batching RL orchestrator over an environment and a pool."""
+
+    def __init__(self, env: "Environment", pool: "InferencePool", cfg: RLConfig,
+                 *, pools: Optional[DifficultyPools] = None,
+                 max_new_tokens: int = 32, seed: int = 0):
+        self.env = env
+        self.pool = pool
+        self.cfg = cfg
+        self.client = AsyncPoolClient(pool, max_new_tokens=max_new_tokens)
+        self.pools = pools or DifficultyPools(env.problem_ids(), seed=seed)
+        self.stats = OrchestratorStats()
+        self._ready_groups: List[RolloutGroup] = []
+        self._tasks: set = set()
+        self._trainer_step = 0
+
+    # ---------------------------------------------------------------- fills
+
+    def _spawn_group(self) -> bool:
+        ids = self.pools.sample(1)
+        if not ids:
+            return False
+        row = self.env.row(ids[0])
+
+        async def run_group():
+            outs = await asyncio.gather(*(
+                self.env.rollout(self.client, row)
+                for _ in range(self.cfg.group_size)))
+            group = RolloutGroup(row["id"], list(outs))
+            self.pools.update(group)
+            self.stats.groups_completed += 1
+            self.stats.rewards.extend([r.reward for r in outs])
+            self._ready_groups.append(group)
+
+        task = asyncio.get_event_loop().create_task(run_group())
+        self._tasks.add(task)
+        task.add_done_callback(self._tasks.discard)
+        return True
+
+    def _saturate(self, target_groups: int) -> None:
+        """Continuous batching: keep `target_groups` groups in flight."""
+        while len(self._tasks) < target_groups:
+            if not self._spawn_group():
+                break
+
+    # ---------------------------------------------------------------- steps
+
+    async def _tick(self) -> None:
+        """Let rollout coroutines run, then advance decode one step."""
+        await asyncio.sleep(0)      # run any ready coroutine steps
+        self.client.pump()
+        self.stats.decode_ticks += 1
+        await asyncio.sleep(0)
+
+    async def gather_batch(self, num_groups: int, *,
+                           concurrent_groups: Optional[int] = None) -> dict:
+        """Run continuous batching until `num_groups` usable groups are
+        ready, then pack them into a training batch."""
+        concurrent = concurrent_groups or max(2 * num_groups, 2)
+        usable: List[RolloutGroup] = []
+        guard = 0
+        while len(usable) < num_groups:
+            self._saturate(concurrent)
+            await self._tick()
+            if self._ready_groups:
+                groups, self._ready_groups = self._ready_groups, []
+                if self.cfg.drop_zero_signal_groups:
+                    groups, ndrop = filter_zero_signal(groups)
+                    self.stats.groups_dropped_zero_signal += ndrop
+                groups, ndrop = filter_stale(groups, self._trainer_step,
+                                             self.cfg)
+                self.stats.rollouts_dropped_stale += ndrop
+                usable.extend(groups)
+            guard += 1
+            if guard > 200_000:
+                raise RuntimeError("orchestrator stalled")
+            if not self._tasks and not usable and self.pools.num_active == 0:
+                raise RuntimeError("dataset exhausted with no usable groups")
+        self.stats.batches_emitted += 1
+        seq_len = self._batch_seq_len(usable[:num_groups])
+        return pack_batch(usable[:num_groups], seq_len)
+
+    @staticmethod
+    def _batch_seq_len(groups: List[RolloutGroup]) -> int:
+        longest = max(r.num_tokens for g in groups for r in g.rollouts)
+        return max(8, int(np.ceil(longest / 8)) * 8)
+
+    def push_weights(self, params, version: int) -> None:
+        """In-flight weight update relay (trainer -> every engine)."""
+        self._trainer_step = version
+        self.pool.update_weights(params, version)
+        self.stats.weight_pushes += 1
+
+    # ---------------------------------------------------------- online eval
+
+    async def evaluate(self, eval_env: "Environment", *, avg_at: int = 1,
+                       problems: Optional[int] = None) -> dict:
+        """Online evaluation (§2.2.4): eval rollouts share the training
+        inference pool; requests interleave with any in-flight training
+        rollouts on the same engines (the same pump drives both), so eval
+        overhead hides behind generation capacity."""
+        rows = eval_env.dataset[: problems or len(eval_env.dataset)]
+        tasks = [asyncio.get_event_loop().create_task(
+            eval_env.rollout(self.client, row))
+            for row in rows for _ in range(avg_at)]
+        while not all(t.done() for t in tasks):
+            await self._tick()
+        by_problem: Dict[str, list] = {}
+        for t in tasks:
+            r = t.result()
+            by_problem.setdefault(r.problem_id, []).append(r.reward)
+        per_problem = {pid: float(np.mean(v)) for pid, v in by_problem.items()}
+        return {"avg_at": avg_at,
+                "score": float(np.mean(list(per_problem.values()))),
+                "per_problem": per_problem}

@@ -1,0 +1,11 @@
+"""Data pipeline: byte tokenizer + chat template, packing, SFT sources."""
+from .tokenizer import (BOS_ID, EOS_ID, PAD_ID, TOKENIZER, ByteTokenizer,
+                        parse_reasoning, render_chat, render_turn)
+from .packing import PackedBatch, pack_documents
+from .sft import agentic_tool_docs, chat_to_doc, synthetic_reasoning_docs
+
+__all__ = [
+    "BOS_ID", "ByteTokenizer", "EOS_ID", "PAD_ID", "PackedBatch", "TOKENIZER",
+    "agentic_tool_docs", "chat_to_doc", "pack_documents", "parse_reasoning",
+    "render_chat", "render_turn", "synthetic_reasoning_docs",
+]

@@ -1,0 +1,70 @@
+"""SFT datasets (paper §3.2): chat/reasoning traces rendered through the
+chat template, loss-masked to assistant tokens only.
+
+``synthetic_reasoning_docs`` stands in for the paper's two-stage mixture
+(OpenReasoning-* for stage 1, agentic SWE/Toucan for stage 2): deterministic
+task→reasoning→answer traces over the byte tokenizer so the toy SFT run has
+a learnable signal.
+"""
+from __future__ import annotations
+
+import random
+from typing import Iterator, List
+
+import numpy as np
+
+from .tokenizer import (EOS_ID, IM_END, IM_START, ROLE_ASSISTANT, THINK,
+                        TOKENIZER, render_chat, render_turn)
+
+
+def chat_to_doc(messages: List[dict]) -> tuple[np.ndarray, np.ndarray]:
+    """Render a chat to (tokens, loss_mask): loss on assistant spans only
+    (including the closing <|im_end|>), zero elsewhere."""
+    toks: List[np.ndarray] = []
+    mask: List[np.ndarray] = []
+    for m in messages:
+        t = render_turn(m["role"], m["content"])
+        toks.append(t)
+        if m["role"] == "assistant":
+            lm = np.ones(len(t), np.float32)
+            lm[:2] = 0.0        # <|im_start|><|assistant|> are prompt-side
+            mask.append(lm)
+        else:
+            mask.append(np.zeros(len(t), np.float32))
+    toks.append(np.asarray([EOS_ID], np.int32))
+    mask.append(np.ones(1, np.float32))
+    return np.concatenate(toks), np.concatenate(mask)
+
+
+def synthetic_reasoning_docs(n: int, seed: int = 0, max_val: int = 20
+                             ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Arithmetic reasoning traces: user asks a+b, assistant reasons then
+    answers — the paper's reasoning-only SFT style (always <|think|>)."""
+    rng = random.Random(seed)
+    for _ in range(n):
+        a, b = rng.randint(0, max_val), rng.randint(0, max_val)
+        ans = a + b
+        messages = [
+            {"role": "user", "content": f"{a}+{b}="},
+            {"role": "assistant",
+             "content": f"{a} plus {b}.</think>{ans}"},
+        ]
+        yield chat_to_doc(messages)
+
+
+def agentic_tool_docs(n: int, seed: int = 0
+                      ) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Stage-2-style traces: assistant emits a tool call, tool responds,
+    assistant answers. Tool turns are loss-masked out."""
+    rng = random.Random(seed)
+    for i in range(n):
+        key = f"key{rng.randint(0, 9)}"
+        val = str(rng.randint(100, 999))
+        messages = [
+            {"role": "user", "content": f"lookup {key}"},
+            {"role": "assistant",
+             "content": f"</think><tool_call>search({key})</tool_call>"},
+            {"role": "tool", "content": val},
+            {"role": "assistant", "content": f"</think>{val}"},
+        ]
+        yield chat_to_doc(messages)

@@ -1,0 +1,94 @@
+"""Byte-level tokenizer + chat-template-lite (paper §3.2 "Chat Template").
+
+A real BPE vocabulary is irrelevant to the systems contribution; a byte
+tokenizer keeps everything dependency-free while preserving the structure
+the paper's template defines: role control tokens, turn delimiters, an
+always-on ``<|think|>`` prefix for the assistant, and XML-style tool-call
+tags that the ToolEnv parser consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
+
+# special tokens (ids 0..N-1; raw bytes are offset by N)
+SPECIALS = [
+    "<pad>", "<eos>", "<bos>",
+    "<|system|>", "<|user|>", "<|assistant|>", "<|tool|>",
+    "<|im_start|>", "<|im_end|>", "<|think|>",
+]
+PAD_ID, EOS_ID, BOS_ID = 0, 1, 2
+ROLE_SYSTEM, ROLE_USER, ROLE_ASSISTANT, ROLE_TOOL = 3, 4, 5, 6
+IM_START, IM_END, THINK = 7, 8, 9
+NUM_SPECIALS = len(SPECIALS)
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteTokenizer:
+    """256 raw bytes + special tokens. vocab_size = 266."""
+
+    vocab_size: int = 256 + NUM_SPECIALS
+
+    def encode(self, text: str, *, bos: bool = False,
+               eos: bool = False) -> np.ndarray:
+        ids = [b + NUM_SPECIALS for b in text.encode("utf-8")]
+        if bos:
+            ids = [BOS_ID] + ids
+        if eos:
+            ids = ids + [EOS_ID]
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids: Sequence[int]) -> str:
+        out = bytearray()
+        for i in ids:
+            i = int(i)
+            if i >= NUM_SPECIALS:
+                out.append(i - NUM_SPECIALS)
+            elif i == EOS_ID:
+                break
+            # other specials are dropped from the text view
+        return out.decode("utf-8", errors="replace")
+
+    def special(self, tok_id: int) -> np.ndarray:
+        return np.asarray([tok_id], np.int32)
+
+
+TOKENIZER = ByteTokenizer()
+
+_ROLE_IDS = {"system": ROLE_SYSTEM, "user": ROLE_USER,
+             "assistant": ROLE_ASSISTANT, "tool": ROLE_TOOL}
+
+
+def render_turn(role: str, content: str, *, closed: bool = True) -> np.ndarray:
+    """<|im_start|><|role|>content<|im_end|> — paper's control-token layout."""
+    tk = TOKENIZER
+    parts = [tk.special(IM_START), tk.special(_ROLE_IDS[role]),
+             tk.encode(content)]
+    if closed:
+        parts.append(tk.special(IM_END))
+    return np.concatenate(parts)
+
+
+def render_chat(messages: Iterable[dict], *, add_generation_prompt: bool = True
+                ) -> np.ndarray:
+    """Messages -> token ids. The generation prompt opens an assistant turn
+    and appends <|think|>: the model "always reasons" (§3.2) — reasoning
+    effort is baked in, not user-controlled."""
+    parts = [np.concatenate([render_turn(m["role"], m["content"])])
+             for m in messages]
+    if add_generation_prompt:
+        tk = TOKENIZER
+        parts.append(np.concatenate([
+            tk.special(IM_START), tk.special(ROLE_ASSISTANT),
+            tk.special(THINK)]))
+    return np.concatenate(parts) if parts else np.zeros((0,), np.int32)
+
+
+def parse_reasoning(text: str) -> tuple[str, str]:
+    """Split deepseek_r1-style '...</think>answer' into (reasoning, answer)."""
+    if "</think>" in text:
+        reasoning, _, answer = text.partition("</think>")
+        return reasoning.strip(), answer.strip()
+    return "", text.strip()

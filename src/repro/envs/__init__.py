@@ -1,0 +1,21 @@
+"""verifiers-style environments: hierarchy, rubrics, EnvGroup, built-ins."""
+from .environment import (CodeEnv, Environment, GenOutput, InferenceClient,
+                          MultiTurnEnv, RolloutState, SandboxEnv, Segment,
+                          SingleTurnEnv, StatefulToolEnv, ToolEnv,
+                          parse_tool_call)
+from .group import EnvGroup
+from .rubric import (ComposedRubric, Rubric, contains_answer, exact_match,
+                     format_reward)
+from .builtin import (DeepDiveEnv, LogicEnv, MathEnv, code_dataset,
+                      load_code_env, load_deepdive_env, load_logic_env,
+                      load_math_env, logic_dataset, math_dataset)
+
+__all__ = [
+    "CodeEnv", "ComposedRubric", "DeepDiveEnv", "EnvGroup", "Environment",
+    "GenOutput", "InferenceClient", "LogicEnv", "MathEnv", "MultiTurnEnv",
+    "RolloutState", "Rubric", "SandboxEnv", "Segment", "SingleTurnEnv",
+    "StatefulToolEnv", "ToolEnv", "code_dataset", "contains_answer",
+    "exact_match", "format_reward", "load_code_env", "load_deepdive_env",
+    "load_logic_env", "load_math_env", "logic_dataset", "math_dataset",
+    "parse_tool_call",
+]

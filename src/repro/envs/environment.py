@@ -1,0 +1,359 @@
+"""verifiers-style environment hierarchy (paper §2.2.1, Fig. 6).
+
+    Environment            core abstraction: dataset + rubric + rollout
+      └─ MultiTurnEnv      iterative rollout loop (model ↔ environment)
+           ├─ SingleTurnEnv one model response, then scoring
+           └─ ToolEnv       XML-style tool calling parsed from completions
+                └─ StatefulToolEnv  inject rollout-state-dependent tool args
+                     └─ SandboxEnv  containerized execution lifecycle
+                          └─ CodeEnv run test cases against generated code
+
+Rollouts are asyncio coroutines: thousands can be in flight against the
+continuous-batching engine, with inference requests, tool calls and reward
+functions awaited independently (§2.2.1 "Rollout Orchestration").
+
+The token trace is segment-based: model-generated segments carry logprobs
+and per-token policy versions (for the off-policyness filter); environment
+segments (tool results, user turns) are mask-0 in the training batch.
+"""
+from __future__ import annotations
+
+import abc
+import asyncio
+import re
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
+
+import numpy as np
+
+from repro.core.rollouts import GenOutput, Rollout
+from repro.data.tokenizer import (EOS_ID, IM_END, IM_START, ROLE_ASSISTANT,
+                                  THINK, TOKENIZER, render_chat, render_turn)
+from .rubric import Rubric
+
+
+class InferenceClient(Protocol):
+    async def generate(self, prompt_tokens: np.ndarray, *,
+                       max_new_tokens: int, temperature: float) -> GenOutput:
+        ...
+
+
+@dataclass
+class Segment:
+    tokens: np.ndarray
+    is_model: bool
+    logprobs: Optional[np.ndarray] = None
+    versions: Optional[np.ndarray] = None
+
+
+class RolloutState(dict):
+    """Mutable per-rollout state threaded through env_response/tools."""
+
+
+class Environment(abc.ABC):
+    """Base: dataset management, prompt formatting, generate/score pipeline."""
+
+    env_id = "base"
+
+    def __init__(self, dataset: Sequence[dict], rubric: Rubric, *,
+                 system_prompt: str = "", max_turns: int = 1,
+                 max_new_tokens: int = 64, temperature: float = 1.0):
+        self.dataset = list(dataset)
+        self.rubric = rubric
+        self.system_prompt = system_prompt
+        self.max_turns = max_turns
+        self.max_new_tokens = max_new_tokens
+        self.temperature = temperature
+        self._by_id = {row["id"]: row for row in self.dataset}
+
+    # -- dataset --------------------------------------------------------
+
+    def row(self, problem_id: str) -> dict:
+        return self._by_id[problem_id]
+
+    def problem_ids(self) -> list[str]:
+        return [row["id"] for row in self.dataset]
+
+    def initial_messages(self, row: dict) -> list[dict]:
+        msgs = []
+        if self.system_prompt:
+            msgs.append({"role": "system", "content": self.system_prompt})
+        msgs.append({"role": "user", "content": row["prompt"]})
+        return msgs
+
+    # -- rollout --------------------------------------------------------
+
+    @abc.abstractmethod
+    async def rollout(self, client: InferenceClient, row: dict) -> Rollout:
+        ...
+
+    async def setup_state(self, state: RolloutState) -> None:
+        """Resource provisioning hook (sandboxes etc.)."""
+
+    async def teardown_state(self, state: RolloutState) -> None:
+        """Resource release hook."""
+
+    # -- assembly ---------------------------------------------------------
+
+    @staticmethod
+    def _assemble(row: dict, segments: List[Segment], reward: float,
+                  env_id: str, masked: bool, info: dict) -> Rollout:
+        prompt = segments[0].tokens
+        comp, lps, vers, mask = [], [], [], []
+        for seg in segments[1:]:
+            n = len(seg.tokens)
+            comp.append(seg.tokens)
+            if seg.is_model:
+                lps.append(seg.logprobs)
+                vers.append(seg.versions)
+                mask.append(np.ones(n, np.float32))
+            else:
+                lps.append(np.zeros(n, np.float32))
+                vers.append(np.full(n, -1, np.int32))
+                mask.append(np.zeros(n, np.float32))
+        cat = (lambda xs, d: np.concatenate(xs) if xs else
+               np.zeros((0,), d))
+        return Rollout(
+            problem_id=row["id"],
+            prompt_tokens=np.asarray(prompt, np.int32),
+            completion_tokens=cat(comp, np.int32).astype(np.int32),
+            infer_logprobs=cat(lps, np.float32).astype(np.float32),
+            policy_versions=cat(vers, np.int32).astype(np.int32),
+            completion_mask=cat(mask, np.float32).astype(np.float32),
+            reward=reward, env_id=env_id, masked=masked, info=info)
+
+
+class MultiTurnEnv(Environment):
+    """Alternates model responses and environment responses until done."""
+
+    env_id = "multi_turn"
+
+    async def env_response(self, state: RolloutState, completion: str
+                           ) -> tuple[bool, Optional[str]]:
+        """Return (done, next_env_message)."""
+        raise NotImplementedError
+
+    async def final_reward(self, state: RolloutState, row: dict,
+                           prompt_text: str, completion: str) -> float:
+        reward, breakdown = await self.rubric.score(
+            prompt_text, completion, row.get("answer"), state)
+        state["reward_breakdown"] = breakdown
+        return reward
+
+    async def rollout(self, client: InferenceClient, row: dict) -> Rollout:
+        state = RolloutState(row=row, turn=0)
+        await self.setup_state(state)
+        masked = False
+        try:
+            msgs = self.initial_messages(row)
+            context = render_chat(msgs, add_generation_prompt=True)
+            segments = [Segment(context, is_model=False)]
+            full_completion = ""
+            for turn in range(self.max_turns):
+                state["turn"] = turn
+                gen = await client.generate(
+                    np.concatenate([s.tokens for s in segments]),
+                    max_new_tokens=self.max_new_tokens,
+                    temperature=self.temperature)
+                gen.text = TOKENIZER.decode(gen.tokens)
+                segments.append(Segment(gen.tokens, True, gen.logprobs,
+                                        gen.versions))
+                full_completion += gen.text
+                done, env_msg = await self.env_response(state, gen.text)
+                if done or turn == self.max_turns - 1:
+                    break
+                # env segment: close assistant turn, add tool/user turn,
+                # re-open assistant turn (template-consistent)
+                env_tokens = np.concatenate([
+                    TOKENIZER.special(IM_END),
+                    render_turn("tool", env_msg or ""),
+                    TOKENIZER.special(IM_START),
+                    TOKENIZER.special(ROLE_ASSISTANT),
+                    TOKENIZER.special(THINK),
+                ])
+                segments.append(Segment(env_tokens, is_model=False))
+                full_completion += f"\n[tool] {env_msg}\n"
+            masked = bool(state.get("masked", False))
+            reward = 0.0
+            if not masked:
+                reward = await self.final_reward(state, row, row["prompt"],
+                                                 full_completion)
+        finally:
+            await self.teardown_state(state)
+        return self._assemble(row, segments, reward, self.env_id, masked,
+                              {"turns": state["turn"] + 1,
+                               **state.get("reward_breakdown", {})})
+
+
+class SingleTurnEnv(MultiTurnEnv):
+    """Minimal specialization: one model response, no environment turns."""
+
+    env_id = "single_turn"
+
+    def __init__(self, dataset, rubric, **kw):
+        kw.setdefault("max_turns", 1)
+        super().__init__(dataset, rubric, **kw)
+
+    async def env_response(self, state, completion):
+        return True, None
+
+
+# ---------------------------------------------------------------------------
+# Tool calling
+# ---------------------------------------------------------------------------
+
+TOOL_CALL_RE = re.compile(
+    r"<tool_call>\s*(?P<name>\w+)\((?P<args>.*?)\)\s*</tool_call>", re.S)
+
+
+def parse_tool_call(text: str) -> Optional[tuple[str, list[str]]]:
+    m = TOOL_CALL_RE.search(text)
+    if not m:
+        return None
+    args = [a.strip() for a in m.group("args").split(",") if a.strip()]
+    return m.group("name"), args
+
+
+class ToolEnv(MultiTurnEnv):
+    """XML-style tool calling: tool calls in completions are parsed and
+    executed; results are appended as tool messages (§2.2.1)."""
+
+    env_id = "tool"
+
+    def __init__(self, dataset, rubric, *, tools: Dict[str, Callable] = None,
+                 **kw):
+        kw.setdefault("max_turns", 4)
+        super().__init__(dataset, rubric, **kw)
+        self.tools = dict(tools or {})
+
+    def prepare_args(self, name: str, args: list, state: RolloutState) -> list:
+        return args  # hook for StatefulToolEnv
+
+    async def call_tool(self, name: str, args: list, state: RolloutState) -> str:
+        fn = self.tools.get(name)
+        if fn is None:
+            return f"error: unknown tool {name!r}"
+        try:
+            out = fn(*args)
+            if asyncio.iscoroutine(out):
+                out = await out
+            return str(out)
+        except Exception as e:
+            return f"error: {e}"
+
+    async def env_response(self, state, completion):
+        call = parse_tool_call(completion)
+        if call is None:
+            return True, None
+        name, args = call
+        args = self.prepare_args(name, args, state)
+        result = await self.call_tool(name, args, state)
+        state.setdefault("tool_calls", []).append((name, args, result))
+        return False, result
+
+
+class StatefulToolEnv(ToolEnv):
+    """Injects tool arguments that depend on rollout state (resource ids)."""
+
+    env_id = "stateful_tool"
+
+    def inject_args(self, name: str, args: list, state: RolloutState) -> list:
+        return args
+
+    def prepare_args(self, name, args, state):
+        return self.inject_args(name, args, state)
+
+
+class SandboxEnv(StatefulToolEnv):
+    """Manages a sandbox lifecycle per rollout; sandbox failure masks the
+    completion (the paper's §3.1.2 failure rule)."""
+
+    env_id = "sandbox"
+
+    def __init__(self, dataset, rubric, *, sandbox_pool, image="python:default",
+                 exec_timeout: float = 5.0, **kw):
+        super().__init__(dataset, rubric, **kw)
+        self.pool = sandbox_pool
+        self.image = image
+        self.exec_timeout = exec_timeout
+        self.tools.setdefault("run_python", self._run_python_tool)
+
+    async def setup_state(self, state):
+        from repro.sandbox import SandboxProvisionError
+        try:
+            state["sandbox"] = await self.pool.acquire(self.image)
+        except SandboxProvisionError:
+            state["sandbox"] = None
+            state["masked"] = True  # mask completion on sandbox failure
+
+    async def teardown_state(self, state):
+        sb = state.get("sandbox")
+        if sb is not None:
+            self.pool.release(sb)
+
+    async def sandbox_exec(self, state: RolloutState, code: str):
+        sb = state.get("sandbox")
+        if sb is None:
+            state["masked"] = True
+            return None
+        res = await sb.execute(code, timeout=self.exec_timeout)
+        if res.status in ("timeout", "sandbox_failure"):
+            state["masked"] = True
+        return res
+
+    async def _run_python_tool(self, *args):  # bound via prepare_args/state
+        return "error: run_python requires stateful dispatch"
+
+    def inject_args(self, name, args, state):
+        if name == "run_python":
+            return [state] + args
+        return args
+
+    async def call_tool(self, name, args, state):
+        if name == "run_python":
+            code = ",".join(str(a) for a in args[1:])
+            res = await self.sandbox_exec(state, code)
+            if res is None:
+                return "error: sandbox failure"
+            return res.stdout if res.ok else f"error: {res.error}"
+        return await super().call_tool(name, args, state)
+
+
+class CodeEnv(SandboxEnv):
+    """Single-turn Python programming (§3.1.2): the final answer is a code
+    block; up to N test cases run inside the sandbox; reward = all pass."""
+
+    env_id = "code"
+
+    def __init__(self, dataset, rubric=None, *, sandbox_pool,
+                 max_test_cases: int = 15, **kw):
+        kw.setdefault("max_turns", 1)
+        rubric = rubric or Rubric()
+        super().__init__(dataset, rubric, sandbox_pool=sandbox_pool, **kw)
+        self.max_test_cases = max_test_cases
+
+    @staticmethod
+    def extract_code(completion: str) -> str:
+        m = re.search(r"```(?:python)?\n(.*?)```", completion, re.S)
+        if m:
+            return m.group(1)
+        from repro.data.tokenizer import parse_reasoning
+        return parse_reasoning(completion)[1]
+
+    async def env_response(self, state, completion):
+        return True, None
+
+    async def final_reward(self, state, row, prompt_text, completion):
+        code = self.extract_code(completion)
+        tests = row.get("tests", [])[: self.max_test_cases]
+        if not code.strip() or not tests:
+            return 0.0
+        passed = 0
+        for test in tests:
+            res = await self.sandbox_exec(state, code + "\n" + test)
+            if res is None:
+                return 0.0  # sandbox failure -> masked anyway
+            passed += bool(res.ok)
+        state["reward_breakdown"] = {"tests_passed": passed,
+                                     "tests_total": len(tests)}
+        return float(passed == len(tests))

@@ -1,0 +1,48 @@
+"""EnvGroup (paper §2.2.2): combine environments into one object with
+concatenated datasets; an injected task column routes rollout and scoring to
+the right sub-environment, so the orchestrator needs no multi-environment
+awareness."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.core.rollouts import Rollout
+from .environment import Environment, InferenceClient
+
+
+class EnvGroup(Environment):
+    env_id = "group"
+
+    def __init__(self, envs: Sequence[Environment],
+                 names: Sequence[str] | None = None):
+        self.envs = list(envs)
+        names = list(names or [e.env_id for e in envs])
+        assert len(set(names)) == len(names), "env names must be unique"
+        self.names = names
+        self._route: Dict[str, Environment] = {}
+        dataset = []
+        for name, env in zip(names, self.envs):
+            for row in env.dataset:
+                gid = f"{name}/{row['id']}"
+                r = dict(row, id=gid, task=name)
+                dataset.append(r)
+                self._route[gid] = env
+        # rubric is per-sub-env; the group has no rubric of its own
+        super().__init__(dataset, rubric=None)
+
+    def env_for(self, problem_id: str) -> Environment:
+        return self._route[problem_id]
+
+    @staticmethod
+    def _sub_row(row: dict) -> dict:
+        """Strip the injected routing prefix so sub-envs see their own ids."""
+        r = dict(row)
+        r["id"] = row["id"].split("/", 1)[1]
+        return r
+
+    async def rollout(self, client: InferenceClient, row: dict) -> Rollout:
+        env = self.env_for(row["id"])
+        out = await env.rollout(client, self._sub_row(row))
+        out.problem_id = row["id"]            # restore the routed id
+        out.env_id = row["task"]
+        return out

@@ -1,0 +1,101 @@
+"""Rubrics: weighted reward-function composition (paper §2.2.1).
+
+A reward function receives ``(prompt, completion, answer, state)`` and
+returns a scalar; it may be sync or async (sandboxed execution, LLM judges).
+Scores from multiple functions combine via configurable weights. Rubrics
+compose (e.g. format-check + judge), and the group-level interface can be
+overridden for inter-group comparisons (voting / ranking).
+"""
+from __future__ import annotations
+
+import asyncio
+import inspect
+from dataclasses import dataclass, field
+from typing import Awaitable, Callable, Dict, List, Sequence
+
+RewardFn = Callable[..., "float | Awaitable[float]"]
+
+
+class Rubric:
+    """One or more weighted reward functions -> final scalar reward."""
+
+    def __init__(self, funcs: Sequence[RewardFn] | None = None,
+                 weights: Sequence[float] | None = None):
+        self.funcs: List[RewardFn] = list(funcs or [])
+        self.weights: List[float] = list(weights or [1.0] * len(self.funcs))
+        assert len(self.funcs) == len(self.weights)
+
+    def add(self, fn: RewardFn, weight: float = 1.0) -> "Rubric":
+        self.funcs.append(fn)
+        self.weights.append(weight)
+        return self
+
+    async def score(self, prompt: str, completion: str, answer,
+                    state: dict | None = None) -> tuple[float, dict]:
+        """Evaluate all reward functions (concurrently when async) and
+        return (weighted_sum, per-function breakdown)."""
+        state = state if state is not None else {}
+
+        async def run(fn):
+            out = fn(prompt=prompt, completion=completion, answer=answer,
+                     state=state)
+            if inspect.isawaitable(out):
+                out = await out
+            return float(out)
+
+        scores = await asyncio.gather(*(run(f) for f in self.funcs))
+        total = sum(w * s for w, s in zip(self.weights, scores))
+        breakdown = {}
+        for i, (f, s) in enumerate(zip(self.funcs, scores)):
+            name = getattr(f, "__name__", f"fn{i}")
+            if name in breakdown or name == "<lambda>":
+                name = f"{name}.{i}"
+            breakdown[name] = s
+        return total, breakdown
+
+    async def score_group(self, prompts, completions, answers, states=None
+                          ) -> tuple[list[float], list[dict]]:
+        """Group-level scoring; override for voting/ranking strategies."""
+        states = states or [None] * len(prompts)
+        outs = await asyncio.gather(*(
+            self.score(p, c, a, s)
+            for p, c, a, s in zip(prompts, completions, answers, states)))
+        return [o[0] for o in outs], [o[1] for o in outs]
+
+
+class ComposedRubric(Rubric):
+    """Aggregate multiple rubrics (e.g. format rubric + judge rubric)."""
+
+    def __init__(self, rubrics: Sequence[Rubric],
+                 weights: Sequence[float] | None = None):
+        super().__init__()
+        self.rubrics = list(rubrics)
+        self.rubric_weights = list(weights or [1.0] * len(self.rubrics))
+
+    async def score(self, prompt, completion, answer, state=None):
+        outs = await asyncio.gather(*(
+            r.score(prompt, completion, answer, state) for r in self.rubrics))
+        total = sum(w * o[0] for w, o in zip(self.rubric_weights, outs))
+        breakdown = {}
+        for i, (_, bd) in enumerate(outs):
+            for k, v in bd.items():
+                breakdown[f"r{i}.{k}"] = v
+        return total, breakdown
+
+
+# -- stock reward functions --------------------------------------------------
+
+
+def exact_match(*, prompt, completion, answer, state) -> float:
+    from repro.data.tokenizer import parse_reasoning
+    _, ans = parse_reasoning(completion)
+    return 1.0 if ans.strip() == str(answer).strip() else 0.0
+
+
+def contains_answer(*, prompt, completion, answer, state) -> float:
+    return 1.0 if str(answer).strip() in completion else 0.0
+
+
+def format_reward(*, prompt, completion, answer, state) -> float:
+    """Rewards closing the reasoning block (the template's </think>)."""
+    return 1.0 if "</think>" in completion else 0.0

@@ -1,0 +1,5 @@
+"""Disaggregated inference service: continuous batching + in-flight updates."""
+from .engine import EngineStats, InferenceEngine, Request
+from .client import InferencePool
+
+__all__ = ["EngineStats", "InferenceEngine", "InferencePool", "Request"]

@@ -1,0 +1,131 @@
+"""Multi-client inference pool (§2.1.4).
+
+The paper found vLLM's built-in multi-node data parallelism plateaued; the
+fix was one *entirely independent* server per node with a round-robin
+multi-client on the orchestrator. This module reproduces that topology:
+``InferencePool`` owns N independent ``InferenceEngine`` replicas and
+dispatches whole *rollout groups* round-robin (a group's rollouts share a
+prompt — keeping them on one engine maximizes prefix reuse, exactly the
+paper's engine-affinity argument). There is no inter-engine synchronization;
+weight updates are pushed to each engine independently (in-flight).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.rollouts import Rollout, RolloutGroup
+from .engine import InferenceEngine, Request
+
+
+class InferencePool:
+    """Round-robin multi-client over independent engines."""
+
+    def __init__(self, engines: Sequence[InferenceEngine]):
+        assert engines, "need at least one engine"
+        self.engines = list(engines)
+        self._rr = itertools.cycle(range(len(self.engines)))
+        self._next_request_id = 0
+        self._next_group_id = 0
+        # group_id -> (problem_id, expected, [finished Requests])
+        self._groups: Dict[int, tuple] = {}
+        self._ungrouped: List[Request] = []
+
+    # ------------------------------------------------------------------ api
+
+    def submit_group(self, problem_id: str, prompt_tokens: np.ndarray,
+                     group_size: int, *, max_new_tokens: int = 64,
+                     temperature: float = 1.0) -> int:
+        """Submit one prompt × group_size rollouts to a single engine
+        (round-robin across groups)."""
+        gid = self._next_group_id
+        self._next_group_id += 1
+        eng = self.engines[next(self._rr)]
+        for _ in range(group_size):
+            req = Request(
+                request_id=self._next_request_id, problem_id=problem_id,
+                prompt_tokens=np.asarray(prompt_tokens, np.int32),
+                max_new_tokens=max_new_tokens, temperature=temperature,
+                group_id=gid)
+            self._next_request_id += 1
+            eng.submit(req)
+        self._groups[gid] = (problem_id, group_size, [])
+        return gid
+
+    def submit_request(self, prompt_tokens: np.ndarray, *,
+                       max_new_tokens: int = 64, temperature: float = 1.0,
+                       problem_id: str = "") -> Request:
+        """Submit a single ungrouped request (round-robin). Used by the
+        asyncio rollout client; completion surfaces via drain_requests."""
+        req = Request(
+            request_id=self._next_request_id, problem_id=problem_id,
+            prompt_tokens=np.asarray(prompt_tokens, np.int32),
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            group_id=-1)
+        self._next_request_id += 1
+        self.engines[next(self._rr)].submit(req)
+        return req
+
+    def _collect(self) -> None:
+        for eng in self.engines:
+            for req in eng.drain_completed():
+                if req.group_id < 0:
+                    self._ungrouped.append(req)
+                else:
+                    self._groups[req.group_id][2].append(req)
+
+    def drain_requests(self) -> List[Request]:
+        """Finished ungrouped requests (group requests stay internal)."""
+        self._collect()
+        out, self._ungrouped = self._ungrouped, []
+        return out
+
+    def step(self) -> int:
+        """Advance every engine one decode step. Returns tokens generated."""
+        return sum(eng.step() for eng in self.engines)
+
+    def update_weights(self, params, version: int) -> None:
+        for eng in self.engines:
+            eng.update_weights(params, version)
+
+    @property
+    def idle(self) -> bool:
+        return all(e.idle for e in self.engines)
+
+    @property
+    def policy_version(self) -> int:
+        return self.engines[0].policy_version
+
+    def drain_groups(self) -> List[RolloutGroup]:
+        """Collect completed requests and return any fully-finished groups."""
+        self._collect()
+        finished = []
+        for gid in list(self._groups):
+            pid, size, done = self._groups[gid]
+            if len(done) == size:
+                finished.append(RolloutGroup(pid, [
+                    _to_rollout(r) for r in done]))
+                del self._groups[gid]
+        return finished
+
+    def stats(self) -> dict:
+        return {
+            "engines": len(self.engines),
+            "decode_steps": [e.stats.decode_steps for e in self.engines],
+            "tokens": sum(e.stats.tokens_generated for e in self.engines),
+            "weight_updates": [e.stats.weight_updates for e in self.engines],
+            "occupancy": [e.stats.occupancy_trace for e in self.engines],
+        }
+
+
+def _to_rollout(req: Request) -> Rollout:
+    return Rollout(
+        problem_id=req.problem_id,
+        prompt_tokens=np.asarray(req.prompt_tokens, np.int32),
+        completion_tokens=np.asarray(req.completion, np.int32),
+        infer_logprobs=np.asarray(req.logprobs, np.float32),
+        policy_versions=np.asarray(req.versions, np.int32),
+        info={"finish_reason": req.finish_reason},
+    )

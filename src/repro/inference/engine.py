@@ -1,0 +1,217 @@
+"""Continuous-batching inference engine with in-flight weight updates (§2.1.3).
+
+The engine is the JAX analogue of one vLLM server in the paper's pool:
+
+  * a fixed number of decode *slots* (static shapes — the TPU formulation of
+    continuous batching). Each decode step advances every occupied slot by
+    one token via a single jitted ``serve_step`` over the slot batch.
+  * whenever a slot finishes (EOS / max tokens) it is released and immediately
+    refilled from the pending queue — the pool stays saturated, no
+    synchronous batch boundary (Fig. 4).
+  * ``update_weights`` swaps the policy **between** decode steps; running
+    requests keep their KV cache and continue under the new policy, so one
+    trajectory may span multiple policies. Every generated token is stamped
+    with the policy version that produced it; the stamp flows into the
+    max_off_policy_steps filter and the Fig. 4 trace.
+
+The decode core is the same ``serve_step`` used by the serving example, so
+the engine exercises exactly the code paths the dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import init_decode_state, prefill, serve_step
+
+DEFAULT_PCFG = ParallelConfig(remat="none", loss_chunk=0)
+
+
+@dataclass
+class Request:
+    """One rollout request (a member of a group)."""
+
+    request_id: int
+    problem_id: str
+    prompt_tokens: np.ndarray
+    max_new_tokens: int
+    temperature: float = 1.0
+    group_id: int = 0
+    # filled during generation
+    completion: List[int] = field(default_factory=list)
+    logprobs: List[float] = field(default_factory=list)
+    versions: List[int] = field(default_factory=list)
+    finished: bool = False
+    finish_reason: str = ""
+
+
+@dataclass
+class EngineStats:
+    decode_steps: int = 0
+    tokens_generated: int = 0
+    weight_updates: int = 0
+    prefills: int = 0
+    # per-step occupancy trace for the Fig. 4 / utilization benchmark
+    occupancy_trace: List[int] = field(default_factory=list)
+
+
+class InferenceEngine:
+    """Slot-based continuous-batching engine over a single model replica."""
+
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
+                 max_seq: int = 512, eos_id: int = 1,
+                 pcfg: ParallelConfig = DEFAULT_PCFG, seed: int = 0,
+                 policy_version: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.pcfg = pcfg
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.policy_version = policy_version
+        self.stats = EngineStats()
+        self._rng = jax.random.PRNGKey(seed)
+
+        # cache dtype follows the served params dtype
+        cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
+        self.state = init_decode_state(cfg, num_slots, max_seq, cache_dtype)
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.last_token = np.zeros((num_slots,), np.int32)
+        self.pending: List[Request] = []
+        self.completed: List[Request] = []
+
+        self._serve = jax.jit(
+            lambda p, s, t: serve_step(p, s, t, cfg, pcfg))
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, b, cfg, max_seq=max_seq, pcfg=pcfg))
+
+    # ------------------------------------------------------------------ api
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def update_weights(self, params, version: int) -> None:
+        """In-flight policy update: takes effect at the next decode step;
+        occupied slots keep their caches and continue generating."""
+        self.params = params
+        self.policy_version = version
+        self.stats.weight_updates += 1
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return self.num_active == 0 and not self.pending
+
+    def drain_completed(self) -> List[Request]:
+        done, self.completed = self.completed, []
+        return done
+
+    # ------------------------------------------------------------ internals
+
+    def _admit(self) -> None:
+        """Fill free slots from the pending queue (prefill each prompt)."""
+        for i in range(self.num_slots):
+            if self.slots[i] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            prompt = np.asarray(req.prompt_tokens, np.int32)[None, :]
+            batch = {"tokens": jnp.asarray(prompt)}
+            if self.cfg.family == "vlm":
+                batch["patch_embeds"] = jnp.zeros(
+                    (1, self.cfg.num_image_tokens, self.cfg.d_model))
+            if self.cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.encoder_seq_len, self.cfg.d_model))
+            logits, st = self._prefill(self.params, batch)
+            self._write_slot(i, st)
+            tok, lp = self._sample(logits[0], req.temperature)
+            self._record(req, tok, lp)
+            self.last_token[i] = tok
+            self.slots[i] = req
+            self.stats.prefills += 1
+
+    def _write_slot(self, i: int, st) -> None:
+        """Scatter a 1-row prefill state into slot i of the engine state."""
+        s = self.state
+        for key, val in st.items():
+            if key == "pos":
+                s["pos"] = s["pos"].at[i].set(val[0])
+            else:
+                # cache tensors are [L, B, ...] -> batch axis 1
+                s[key] = s[key].at[:, i].set(val[:, 0])
+
+    def _sample(self, logits, temperature: float = 1.0) -> tuple[int, float]:
+        logits = jnp.asarray(logits, jnp.float32)
+        logp = jax.nn.log_softmax(logits)
+        self._rng, k = jax.random.split(self._rng)
+        tok = int(jax.random.categorical(k, logits / max(temperature, 1e-4)))
+        return tok, float(logp[tok])
+
+    def _sample_batch(self, logits, temps) -> tuple[np.ndarray, np.ndarray]:
+        """logits: [B, V]. Returns (tokens [B], logprobs [B])."""
+        self._rng, k = jax.random.split(self._rng)
+        logits = jnp.asarray(logits, jnp.float32)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+        toks = jax.random.categorical(k, scaled, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        lp = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
+        return np.asarray(toks), np.asarray(lp)
+
+    def _record(self, req: Request, tok: int, lp: float) -> None:
+        req.completion.append(int(tok))
+        req.logprobs.append(float(lp))
+        req.versions.append(self.policy_version)
+        self.stats.tokens_generated += 1
+        if tok == self.eos_id:
+            req.finished = True
+            req.finish_reason = "eos"
+        elif len(req.completion) >= req.max_new_tokens:
+            req.finished = True
+            req.finish_reason = "length"
+
+    def _release_finished(self) -> None:
+        for i, req in enumerate(self.slots):
+            if req is not None and req.finished:
+                self.completed.append(req)
+                self.slots[i] = None
+
+    # ----------------------------------------------------------------- step
+
+    def step(self) -> int:
+        """One engine iteration: release finished, admit pending, decode one
+        token for every occupied slot. Returns tokens generated."""
+        self._release_finished()
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        self.stats.occupancy_trace.append(len(active))
+        if not active:
+            return 0
+        token = jnp.asarray(self.last_token)
+        logits, self.state = self._serve(self.params, self.state, token)
+        temps = np.array([self.slots[i].temperature if self.slots[i] else 1.0
+                          for i in range(self.num_slots)], np.float32)
+        toks, lps = self._sample_batch(logits, temps)
+        for i in active:
+            req = self.slots[i]
+            # cache position advanced for every slot; only active rows count
+            self._record(req, int(toks[i]), float(lps[i]))
+            self.last_token[i] = int(toks[i])
+        self.stats.decode_steps += 1
+        self._release_finished()
+        return len(active)
+
+    def run_until_idle(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.idle:
+                return
+            self.step()
+        raise RuntimeError("engine did not drain")

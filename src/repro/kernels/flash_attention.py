@@ -1,0 +1,140 @@
+"""Pallas TPU flash attention (paper §2.1.6 — the FA3 hot-spot, TPU-native).
+
+FA3's Hopper-specific tricks (warp specialization, TMA async copies) have no
+TPU analogue; the TPU-native equivalent is online-softmax blockwise tiling
+sized for VMEM with MXU-aligned (multiples of 128) tile dims, which is what
+this kernel implements.
+
+Grid layout: ``(batch*q_heads, num_q_blocks, num_kv_blocks)`` — the KV-block
+dimension is innermost, so on TPU it executes sequentially per (bh, iq) and
+the running online-softmax state (m, l, acc) lives in VMEM scratch across
+those grid steps. GQA is handled in the index map: q head ``h`` reads kv head
+``h // (Hq // Hkv)`` — repeated KV heads are never materialized.
+
+Supports causal masking and sliding-window (SWA) banding. Fully-masked KV
+blocks are skipped with ``pl.when`` (no MXU work), which is what makes the
+banded FLOP count O(S·window) rather than O(S²).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,            # blocks
+                  m_ref, l_ref, acc_ref,                  # VMEM scratch
+                  *, scale, causal, window, block_q, block_k, seq_len,
+                  num_kv_blocks):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Block-level relevance: skip blocks that are entirely masked out.
+    relevant = k_start < seq_len
+    if causal:
+        relevant &= k_start <= q_start + block_q - 1          # below diagonal
+    if window > 0:
+        # kv block must intersect [q - window + 1, q] for some q in the block
+        relevant &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                       # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                       # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_idx < seq_len
+        mask &= q_idx < seq_len
+        if causal:
+            mask &= q_idx >= k_idx
+        if window > 0:
+            mask &= k_idx > q_idx - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        v = v_ref[0].astype(jnp.float32)                       # [bk, hd]
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=True):
+    """q: [B,S,Hq,hd]; k,v: [B,S,Hkv,hd] -> [B,S,Hq,hd]."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    scale = hd ** -0.5
+
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = -(-S // block_q)
+    nk = -(-S // block_k)
+    Sq_pad, Sk_pad = nq * block_q, nk * block_k
+
+    # [B*H, S, hd] layout so the grid's bh axis indexes rows directly
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    if Sq_pad != S:
+        qh = jnp.pad(qh, ((0, 0), (0, Sq_pad - S), (0, 0)))
+    if Sk_pad != S:
+        kh = jnp.pad(kh, ((0, 0), (0, Sk_pad - S), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, Sk_pad - S), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_len=S, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, hd),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq_pad, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out[:, :S].reshape(B, Hq, S, hd).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,91 @@
+"""Pallas TPU grouped matmul — the ``torch._grouped_mm`` analogue (§2.1.8).
+
+The MoE dispatch produces a capacity-padded ``[E, C, d]`` buffer per batch
+row (static shapes — the TPU-native formulation of the ragged grouped GEMM).
+This kernel computes ``y[e] = x[e] @ w[e]`` with group-size awareness: blocks
+whose rows lie entirely beyond ``group_sizes[e]`` (i.e. pure capacity
+padding) are *skipped* via ``pl.when``, so MXU work tracks actual token
+counts, reproducing the saturation behaviour of Fig. 5.
+
+Grid: ``(E, num_c_blocks, num_f_blocks, num_k_blocks)`` with the contraction
+(k) dimension innermost, accumulating into VMEM scratch — tiles are
+128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(sizes_ref,                       # scalar prefetch (SMEM)
+                x_ref, w_ref, o_ref, acc_ref,
+                *, block_c, block_k, num_k_blocks):
+    e = pl.program_id(0)
+    ic = pl.program_id(1)
+    kk = pl.program_id(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    size = sizes_ref[e]
+    # Skip blocks that are pure capacity padding for this expert.
+    @pl.when(ic * block_c < size)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)         # [block_c, block_k]
+        w = w_ref[0].astype(jnp.float32)         # [block_k, block_f]
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == num_k_blocks - 1)
+    def _finalize():
+        # zero out the padded rows so downstream combine sees exact zeros
+        row = ic * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, acc_ref.shape, 0)
+        o_ref[0] = jnp.where(row < size, acc_ref[...], 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k",
+                                             "interpret"))
+def grouped_matmul(x, w, group_sizes, *, block_c=128, block_f=128,
+                   block_k=512, interpret=True):
+    """x: [E, C, d]; w: [E, d, f]; group_sizes: [E] int32 -> y [E, C, f]."""
+    E, C, d = x.shape
+    f = w.shape[2]
+    block_c = min(block_c, C)
+    block_f = min(block_f, f)
+    block_k = min(block_k, d)
+    nc, nf, nk = -(-C // block_c), -(-f // block_f), -(-d // block_k)
+    Cp, fp, dp = nc * block_c, nf * block_f, nk * block_k
+    if (Cp, dp) != (C, d):
+        x = jnp.pad(x, ((0, 0), (0, Cp - C), (0, dp - d)))
+    if (dp, fp) != (d, f):
+        w = jnp.pad(w, ((0, 0), (0, dp - d), (0, fp - f)))
+
+    kernel = functools.partial(_gmm_kernel, block_c=block_c, block_k=block_k,
+                               num_k_blocks=nk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(E, nc, nf, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_k),
+                         lambda e, ic, jf, kk, sizes: (e, ic, kk)),
+            pl.BlockSpec((1, block_k, block_f),
+                         lambda e, ic, jf, kk, sizes: (e, kk, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ic, jf, kk, sizes: (e, ic, jf)),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+    )
+    y = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((E, Cp, fp), x.dtype),
+        interpret=interpret,
+    )(group_sizes.astype(jnp.int32), x, w)
+    return y[:, :C, :f]

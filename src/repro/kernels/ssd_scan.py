@@ -1,0 +1,137 @@
+"""Pallas TPU chunked SSD scan — the Mamba-2 (state-space duality) hot loop.
+
+The SSD algorithm (arXiv:2405.21060) splits the sequence into chunks: within
+a chunk the recurrence is a masked quadratic ("attention-like") contraction
+that maps onto the MXU; across chunks only a small ``[head_dim, state]``
+recurrent state is carried. On TPU the chunk axis is the innermost grid
+dimension — sequential per (batch·head), with the carried state living in
+VMEM scratch across grid steps (the same trick as the flash kernel's online
+softmax state).
+
+Grid: ``(batch*heads, num_chunks)``. Block shapes put one [chunk, ·] tile of
+x/B/C/dt in VMEM; the [chunk, chunk] decay matrix is built in-register from a
+cumulative-sum iota, and both the intra-chunk term and the state update are
+expressed as ``dot_general`` MXU contractions in fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, h0_ref,   # inputs
+                y_ref, hT_ref,                                  # outputs
+                h_ref,                                          # VMEM scratch
+                *, chunk, num_chunks, seq_len):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # [L, hd]
+    dt = dt_ref[0].astype(jnp.float32)        # [L]
+    da = da_ref[0].astype(jnp.float32)        # [L] (= dt * A, negative)
+    Bc = b_ref[0].astype(jnp.float32)         # [L, n]
+    Cc = c_ref[0].astype(jnp.float32)         # [L, n]
+
+    # mask out padded tail positions (beyond seq_len)
+    idx = ic * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk,), 0)
+    valid = idx < seq_len
+    dt = jnp.where(valid, dt, 0.0)
+    da = jnp.where(valid, da, 0.0)
+
+    a_cum = jnp.cumsum(da)                    # [L]
+
+    # intra-chunk quadratic term: scores[i,j] = (C_i·B_j)·exp(a_i-a_j)·1[i>=j]
+    scores = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [L,L]
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(a_cum[:, None] - a_cum[None, :])
+    scores = jnp.where(i_idx >= j_idx, scores * decay, 0.0)
+    xdt = x * dt[:, None]                     # [L, hd]
+    y_intra = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_i += exp(a_i) * C_i · h   (h: [hd, n])
+    h = h_ref[...]
+    Ch = jax.lax.dot_general(Cc, h, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, hd]
+    y_inter = jnp.exp(a_cum)[:, None] * Ch
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(a_end)·h + sum_j exp(a_end - a_j)·dt_j·x_j⊗B_j
+    a_end = a_cum[chunk - 1]
+    w = jnp.exp(a_end - a_cum) * dt           # [L]
+    xw = x * w[:, None]                       # [L, hd]
+    outer = jax.lax.dot_general(xw, Bc, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [hd, n]
+    h_ref[...] = jnp.exp(a_end) * h + outer
+
+    @pl.when(ic == num_chunks - 1)
+    def _emit_state():
+        hT_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xh, dt, dA_log, Bh, Ch, h0, *, chunk=128, interpret=True):
+    """Chunked SSD scan.
+
+    xh: [B,S,nh,hd]; dt, dA_log: [B,S,nh]; Bh, Ch: [B,S,nh,n];
+    h0: [B,nh,hd,n]. Returns (y [B,S,nh,hd] fp32, hT [B,nh,hd,n] fp32).
+    """
+    B, S, nh, hd = xh.shape
+    n = Bh.shape[-1]
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    Sp = nc * chunk
+
+    def to_bh(a, feat):
+        a = a.transpose(0, 2, 1, *range(3, a.ndim)) if a.ndim > 3 else \
+            a.transpose(0, 2, 1)
+        a = a.reshape((B * nh, S) + feat)
+        if Sp != S:
+            pad = [(0, 0), (0, Sp - S)] + [(0, 0)] * len(feat)
+            a = jnp.pad(a, pad)
+        return a
+
+    xf = to_bh(xh, (hd,))
+    dtf = to_bh(dt, ())
+    daf = to_bh(dA_log, ())
+    Bf = to_bh(Bh, (n,))
+    Cf = to_bh(Ch, (n,))
+    h0f = h0.reshape(B * nh, hd, n)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc,
+                               seq_len=S)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B * nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ic: (bh, ic)),
+            pl.BlockSpec((1, chunk), lambda bh, ic: (bh, ic)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, hd, n), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, hd, n), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nh, Sp, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * nh, hd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, daf, Bf, Cf, h0f)
+
+    y = y[:, :S].reshape(B, nh, S, hd).transpose(0, 2, 1, 3)
+    hT = hT.reshape(B, nh, hd, n)
+    return y, hT

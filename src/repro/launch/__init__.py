@@ -1,0 +1,8 @@
+"""Launchers: production mesh, dry-run (lower+compile proof), roofline,
+train/serve drivers. NOTE: import repro.launch.dryrun only as __main__ —
+it sets XLA_FLAGS for 512 placeholder devices at import time."""
+from .mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_mesh,
+                   make_production_mesh)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS_BF16", "make_mesh",
+           "make_production_mesh"]

@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run CLI (assignment: MULTI-POD DRY-RUN).
+
+Lowers + compiles the production step function for every requested
+(architecture × input shape) on the single-pod 16x16 mesh and the
+2x16x16 multi-pod mesh, printing memory_analysis / cost_analysis and the
+roofline terms. The two lines above MUST stay first: jax locks the device
+count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None,
+                   help="architecture id (see repro.configs.ASSIGNED)")
+    p.add_argument("--shape", default=None,
+                   help="input shape (train_4k|prefill_32k|decode_32k|long_500k)")
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--all", action="store_true",
+                   help="sweep all assigned archs x shapes")
+    p.add_argument("--mode", default="auto", choices=["auto", "rl", "sft"])
+    p.add_argument("--out", default=None, help="directory for JSON results")
+    p.add_argument("--remat", default="full",
+                   choices=["full", "selective", "none"])
+    p.add_argument("--loss-chunk", type=int, default=1024)
+    p.add_argument("--optimized", action="store_true",
+                   help="apply the §Perf levers (H4 fsdp=model, H5 "
+                        "gather-at-use, H2 NS reshard, H1 grad constraint, "
+                        "H7 EP for MoE, H8 TP serving)")
+    args = p.parse_args()
+
+    import dataclasses
+
+    from repro.configs import ASSIGNED
+    from repro.configs.base import OptimizerConfig, ParallelConfig
+    from repro.launch.analysis import DEFAULT_OPT, run_pair
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.context import mesh_context
+
+    pcfg = ParallelConfig(remat=args.remat, loss_chunk=args.loss_chunk,
+                          scan_layers=True,
+                          fsdp_gather_weights=args.optimized,
+                          expert_parallel=args.optimized)
+    perf_kw = {}
+    if args.optimized:
+        perf_kw = dict(fsdp_axes=("model",), grad_constraint=True,
+                       tp_serving=False, expert_parallel=True,
+                       opt_cfg=dataclasses.replace(DEFAULT_OPT,
+                                                   layer_reshard_ns=True))
+    archs = ASSIGNED if args.all or not args.arch else [args.arch]
+    shapes = (["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+              if args.all or not args.shape else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        mesh_name = "2x16x16" if multi else "16x16"
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}|{shape}|{mesh_name}"
+                t0 = time.time()
+                try:
+                    kw = dict(perf_kw)
+                    if args.optimized and shape in ("decode_32k",
+                                                    "long_500k",
+                                                    "prefill_32k"):
+                        kw = dict(tp_serving=True)
+                    with mesh_context(mesh):
+                        out = run_pair(arch, shape, mesh, pcfg=pcfg,
+                                       mode=args.mode, **kw)
+                    out["compile_s"] = round(time.time() - t0, 1)
+                    line = (f"OK  {tag:55s} step={out['step']:10s} "
+                            f"bottleneck={out['bottleneck']:10s} "
+                            f"tc={out['t_compute']:.3e} "
+                            f"tm={out['t_memory']:.3e} "
+                            f"tx={out['t_collective']:.3e} "
+                            f"({out['compile_s']}s)")
+                    print(line, flush=True)
+                    if args.out:
+                        os.makedirs(args.out, exist_ok=True)
+                        suffix = "_opt" if args.optimized else ""
+                        fn = os.path.join(args.out,
+                                          tag.replace("|", "_")
+                                          + suffix + ".json")
+                        with open(fn, "w") as f:
+                            json.dump(out, f, indent=1, default=str)
+                except Exception as e:
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        return 1
+    print("\nall dry-runs compiled successfully")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

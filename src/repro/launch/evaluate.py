@@ -1,0 +1,84 @@
+"""Offline evaluation CLI (paper §2.2.4 / Appendix A): run a verifiers
+environment as an evaluation — Avg@k (Pass@1 over k generations/problem) —
+against a local engine pool, the same rollout/Rubric entrypoints used in
+training.
+
+  PYTHONPATH=src python -m repro.launch.evaluate --env logic --avg-at 4 \
+      --arch minicpm-2b:reduced [--checkpoint /tmp/ckpt.npz]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minicpm-2b:reduced")
+    ap.add_argument("--env", default="logic", choices=["math", "logic"])
+    ap.add_argument("--avg-at", type=int, default=4,
+                    help="k generations per problem (Avg@k)")
+    ap.add_argument("--problems", type=int, default=16)
+    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.6,
+                    help="paper: z-AI recommended 0.6 across benchmarks")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import ParallelConfig
+    from repro.core.orchestrator import AsyncPoolClient
+    from repro.data import TOKENIZER
+    from repro.envs import load_logic_env, load_math_env
+    from repro.inference import InferenceEngine, InferencePool
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_config(args.arch),
+                              vocab_size=TOKENIZER.vocab_size)
+    pcfg = ParallelConfig(remat="none", loss_chunk=0)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg,
+                         dtype=jnp.float32)
+    if args.checkpoint:
+        from repro.train import load_checkpoint
+        params, _ = load_checkpoint(args.checkpoint, params)
+
+    pool = InferencePool([
+        InferenceEngine(params, cfg, num_slots=8, max_seq=128, pcfg=pcfg,
+                        seed=args.seed + i) for i in range(args.engines)])
+    load_env = {"math": load_math_env, "logic": load_logic_env}[args.env]
+    env = load_env(n=args.problems, seed=args.seed,
+                   max_new_tokens=args.max_new_tokens,
+                   temperature=args.temperature)
+    client = AsyncPoolClient(pool, max_new_tokens=args.max_new_tokens)
+
+    async def run():
+        tasks = [asyncio.ensure_future(env.rollout(client, row))
+                 for row in env.dataset for _ in range(args.avg_at)]
+        while not all(t.done() for t in tasks):
+            client.pump()
+            await asyncio.sleep(0)
+        return [t.result() for t in tasks]
+
+    rollouts = asyncio.get_event_loop().run_until_complete(run())
+    by_problem = {}
+    for r in rollouts:
+        by_problem.setdefault(r.problem_id, []).append(r.reward)
+    per_problem = {pid: float(np.mean(rs)) for pid, rs in by_problem.items()}
+    avg = float(np.mean(list(per_problem.values())))
+    print(f"env={args.env} problems={len(per_problem)} "
+          f"Avg@{args.avg_at} = {avg:.3f}")
+    worst = sorted(per_problem.items(), key=lambda kv: kv[1])[:3]
+    for pid, score in worst:
+        print(f"  hardest: {pid} pass@1={score:.2f}")
+    return avg
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Trip-count-aware collective accounting over post-SPMD HLO text.
+
+XLA's ``cost_analysis`` (and a naive text scan) counts a ``while`` body
+ONCE, but our lowerings deliberately use ``lax.scan`` over layers (compile
+hygiene for 94-layer configs), so collectives inside the layer loop execute
+``num_layers`` times. This parser:
+
+  1. splits the HLO module into computations,
+  2. finds collective ops per computation (start ops only; done ops are the
+     async completion and carry no new bytes),
+  3. finds ``while`` ops, reads the trip count from the loop condition
+     (``compare(iter, constant(N)), direction=LT``),
+  4. recursively multiplies nested loop bodies by their trip counts.
+
+Wire-byte convention per op (ring algorithms, per participating device),
+S = replica-group size:
+  all-gather (S-1)/S*result | reduce-scatter (S-1)*result
+  all-reduce 2(S-1)/S*result | all-to-all (S-1)/S*result
+  collective-permute result
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s+\(")
+_OP_RE = re.compile(
+    r"=\s*(?P<res>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_DONE_RE = re.compile(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)-done\(")
+_TYPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                      r"pred|f8e4m3fn|f8e5m2|c64|c128)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LEGACY_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_WHILE_RE = re.compile(
+    r"while\([^)]*\)[^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:call|fusion)\([^)]*\)[^\n]*?(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _wire_bytes(kind: str, res_bytes: int, group: int) -> int:
+    S = max(2, group)
+    if kind == "all-gather":
+        return res_bytes * (S - 1) // S
+    if kind == "reduce-scatter":
+        return res_bytes * (S - 1)
+    if kind == "all-reduce":
+        return 2 * res_bytes * (S - 1) // S
+    if kind == "all-to-all":
+        return res_bytes * (S - 1) // S
+    return res_bytes  # collective-permute
+
+
+@dataclass
+class _Comp:
+    name: str
+    lines: List[str] = field(default_factory=list)
+
+
+def _split_computations(text: str) -> Dict[str, _Comp]:
+    """Computation header lines start at column 0:
+    ``[ENTRY ]%name (params...) -> type {``."""
+    comps: Dict[str, _Comp] = {}
+    current: Optional[_Comp] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and ") ->" in line \
+                and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line)
+            if m:
+                current = _Comp(m.group(1))
+                comps[current.name] = current
+                continue
+        if current is not None:
+            if line.startswith("}"):
+                current = None
+            else:
+                current.lines.append(line)
+    return comps
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Loop conditions compare the induction var against a constant."""
+    best = 1
+    for line in cond.lines:
+        if "compare" in line:
+            # the bound constant usually appears in the same computation
+            continue
+    consts = []
+    for line in cond.lines:
+        if "constant(" in line and "compare" not in line:
+            for m in _CONST_CMP_RE.finditer(line):
+                consts.append(int(m.group(1)))
+    if consts:
+        best = max(consts)
+    return max(1, best)
+
+
+def collective_wire_bytes(text: str, *, default_group: int = 2) -> dict:
+    """Trip-aware per-device wire bytes + op-execution counts by kind."""
+    comps = _split_computations(text)
+
+    def comp_stats(name: str, seen) -> dict:
+        if name in seen:  # guard against parse-induced cycles
+            return {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+        seen = seen | {name}
+        stats = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+        comp = comps.get(name)
+        if comp is None:
+            return stats
+        for line in comp.lines:
+            m = _OP_RE.search(line)
+            if m:
+                kind = m.group("op")
+                res = sum(_shape_bytes(t, d)
+                          for t, d in _TYPE_RE.findall(m.group("res")))
+                g = _GROUPS_RE.search(line)
+                if g:
+                    group = int(g.group(2))
+                else:
+                    g2 = _GROUPS_LEGACY_RE.search(line)
+                    group = (len(g2.group(1).split(",")) if g2
+                             else default_group)
+                stats[kind]["count"] += 1
+                stats[kind]["bytes"] += _wire_bytes(kind, res, group)
+            w = _WHILE_RE.search(line)
+            if w:
+                cond_name, body_name = w.group(1), w.group(2)
+                trips = _trip_count(comps.get(cond_name, _Comp("")))
+                inner = comp_stats(body_name, seen)
+                for k in COLLECTIVES:
+                    stats[k]["count"] += trips * inner[k]["count"]
+                    stats[k]["bytes"] += trips * inner[k]["bytes"]
+            c = _CALL_RE.search(line)
+            if c and c.group(1) in comps:
+                inner = comp_stats(c.group(1), seen)
+                for k in COLLECTIVES:
+                    stats[k]["count"] += inner[k]["count"]
+                    stats[k]["bytes"] += inner[k]["bytes"]
+        return stats
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: flat count over the whole module
+        entry_stats = comp_stats_flat(text, default_group)
+    else:
+        entry_stats = comp_stats(entry, frozenset())
+    entry_stats["total_bytes"] = sum(entry_stats[k]["bytes"]
+                                     for k in COLLECTIVES)
+    entry_stats["total_count"] = sum(entry_stats[k]["count"]
+                                     for k in COLLECTIVES)
+    return entry_stats
+
+
+def comp_stats_flat(text: str, default_group: int = 2) -> dict:
+    stats = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("op")
+        res = sum(_shape_bytes(t, d)
+                  for t, d in _TYPE_RE.findall(m.group("res")))
+        g = _GROUPS_RE.search(line)
+        group = int(g.group(2)) if g else default_group
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += _wire_bytes(kind, res, group)
+    return stats

@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb sweep: re-runs the recorded hypothesis->change->measure
+iterations for the three selected pairs and writes results/perf/*.json.
+
+  PYTHONPATH=src python -m repro.launch.perf_sweep [--out results/perf]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from repro.launch.analysis import DEFAULT_OPT, DEFAULT_PCFG, run_pair
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding.context import mesh_context
+
+    mesh = make_production_mesh()
+    opt_ns = dataclasses.replace(DEFAULT_OPT, layer_reshard_ns=True)
+    pcfg_gw = dataclasses.replace(DEFAULT_PCFG, fsdp_gather_weights=True)
+
+    # iteration ladders: (tag, kwargs)
+    LADDERS = {
+        "yi-9b|train_4k": [
+            ("baseline (paper-naive GSPMD FSDP)", {}),
+            ("H1 grad reduce-scatter constraint", dict(grad_constraint=True)),
+            ("H2 Muon NS layer-reshard (Dion)", dict(opt_cfg=opt_ns)),
+            ("H3 shard last dim (REFUTED)", dict(fsdp_prefer="last")),
+            ("H4 FSDP axis = model only (paper: FSDP64xDP8)",
+             dict(fsdp_axes=("model",))),
+            ("H4+H2+H1", dict(fsdp_axes=("model",), opt_cfg=opt_ns,
+                              grad_constraint=True)),
+            ("H5 gather-at-use (+H4+H2+H1)",
+             dict(fsdp_axes=("model",), opt_cfg=opt_ns, grad_constraint=True,
+                  pcfg=pcfg_gw)),
+        ],
+        "qwen3-moe-235b-a22b|train_4k": [
+            ("baseline (paper-naive GSPMD FSDP)", {}),
+            ("H4 FSDP axis = model only", dict(fsdp_axes=("model",))),
+            ("H6 gather-at-use incl. experts (counterproductive)",
+             dict(fsdp_axes=("model",), opt_cfg=opt_ns, grad_constraint=True,
+                  pcfg=pcfg_gw)),
+            ("H7 shard_map expert parallel (+H5+H4+H2+H1)",
+             dict(fsdp_axes=("model",), opt_cfg=opt_ns, grad_constraint=True,
+                  pcfg=pcfg_gw, expert_parallel=True)),
+        ],
+        "yi-9b|decode_32k": [
+            ("baseline (FSDP-sharded serving params)", {}),
+            ("H8 tensor-parallel serving layout", dict(tp_serving=True)),
+        ],
+        "qwen3-moe-235b-a22b|decode_32k": [
+            ("baseline (FSDP-sharded serving params)", {}),
+            ("H8 TP + expert-sharded serving", dict(tp_serving=True)),
+        ],
+    }
+
+    for pair, ladder in LADDERS.items():
+        arch, shape = pair.split("|")
+        rows = []
+        for tag, kw in ladder:
+            t0 = time.time()
+            with mesh_context(mesh):
+                out = run_pair(arch, shape, mesh, **kw)
+            rows.append({
+                "tag": tag,
+                "t_compute": out["t_compute"],
+                "t_memory": out["t_memory"],
+                "t_collective": out["t_collective"],
+                "bottleneck": out["bottleneck"],
+                "collective_ops": out["collective_ops"],
+                "collectives": out["collectives"],
+                "compile_s": round(time.time() - t0, 1),
+            })
+            print(f"{pair:36s} {tag:46s} tx={out['t_collective']:.3e}s "
+                  f"bn={out['bottleneck']}", flush=True)
+        fn = os.path.join(args.out, pair.replace("|", "_") + ".json")
+        with open(fn, "w") as f:
+            json.dump(rows, f, indent=1)
+    print("perf sweep written to", args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Roofline table builder (assignment: ROOFLINE ANALYSIS §g).
+
+Reads the per-pair JSON the dry-run CLI writes and renders the
+EXPERIMENTS.md §Roofline table: three terms in seconds, dominant bottleneck,
+MODEL_FLOPS/flops ratio, and a one-line lever per row.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+LEVERS = {
+    ("collective", "train"): "move Muon NS off the sharded path (layer "
+                             "reshard / all-to-all scheme, §2.1.7)",
+    ("collective", "prefill"): "reduce param gathers: batch-shard more, "
+                               "gather in bf16",
+    ("collective", "decode"): "replicate params across data axis (weights "
+                              "fit) to kill per-step gathers",
+    ("compute", "train"): "remat policy: selective instead of full "
+                          "(drop recompute flops)",
+    ("compute", "prefill"): "larger per-chip batch or fewer chips "
+                            "(underutilized)",
+    ("compute", "decode"): "decode is bandwidth-bound in practice; "
+                           "compute term here is negligible",
+    ("memory", "train"): "activation footprint: raise loss_chunk, "
+                         "selective remat",
+    ("memory", "prefill"): "stream KV cache writes; bf16 cache",
+    ("memory", "decode"): "shard KV cache reads wider (sequence axis); "
+                          "quantize cache",
+}
+
+
+def load_results(result_dir: str, mesh: str = "16x16") -> List[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(result_dir, f"*_{mesh}.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    lever = LEVERS.get((r["bottleneck"], r["kind"]), "-")
+    return ("| {arch} | {shape} | {variant} | {tc:.3e} | {tm:.3e} | "
+            "{tx:.3e} | {bn} | {uf:.2f} | {lever} |").format(
+        arch=r["arch"], shape=r["shape"], variant=r.get("variant", "native"),
+        tc=r["t_compute"], tm=r["t_memory"], tx=r["t_collective"],
+        bn=r["bottleneck"], uf=r.get("useful_frac", 0.0), lever=lever)
+
+
+HEADER = ("| arch | shape | variant | t_compute (s) | t_memory (s) | "
+          "t_collective (s) | bottleneck | MODEL/total FLOPs | "
+          "lever on dominant term |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def render_table(result_dir: str, mesh: str = "16x16") -> str:
+    rows = load_results(result_dir, mesh)
+    return "\n".join([HEADER] + [fmt_row(r) for r in rows])
+
+
+if __name__ == "__main__":
+    import sys
+    print(render_table(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"))

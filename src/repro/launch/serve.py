@@ -1,0 +1,73 @@
+"""Serving driver: continuous-batching engine over batched requests.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b:reduced \
+      --requests 24 --slots 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="yi-9b:reduced")
+    p.add_argument("--requests", type=int, default=24)
+    p.add_argument("--slots", type=int, default=8)
+    p.add_argument("--engines", type=int, default=1)
+    p.add_argument("--max-new-tokens", type=int, default=24)
+    p.add_argument("--max-seq", type=int, default=128)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    from repro.configs import get_config
+    from repro.configs.base import ParallelConfig
+    from repro.data import TOKENIZER
+    from repro.inference import InferenceEngine, InferencePool, Request
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_config(args.arch),
+                              vocab_size=TOKENIZER.vocab_size)
+    pcfg = ParallelConfig(remat="none", loss_chunk=0)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg,
+                         dtype=jnp.float32)
+    engines = [InferenceEngine(params, cfg, num_slots=args.slots,
+                               max_seq=args.max_seq, pcfg=pcfg, seed=i)
+               for i in range(args.engines)]
+    pool = InferencePool(engines)
+
+    rng = np.random.RandomState(args.seed)
+    t0 = time.time()
+    for i in range(args.requests):
+        prompt = TOKENIZER.encode(f"request {i}: hello")
+        pool.submit_request(prompt,
+                            max_new_tokens=int(rng.randint(
+                                4, args.max_new_tokens)),
+                            temperature=1.0, problem_id=f"req-{i}")
+    done = []
+    while not pool.idle:
+        pool.step()
+        done.extend(pool.drain_requests())
+    done.extend(pool.drain_requests())
+    dt = time.time() - t0
+    stats = pool.stats()
+    tokens = stats["tokens"]
+    occ = [o for e in stats["occupancy"] for o in e]
+    print(f"served {len(done)} requests, {tokens} tokens in {dt:.1f}s "
+          f"({tokens / dt:.1f} tok/s)")
+    print(f"decode steps per engine: {stats['decode_steps']}")
+    print(f"mean slot occupancy: {np.mean(occ):.2f}/{args.slots} "
+          f"(continuous batching keeps slots saturated)")
+    for r in done[:3]:
+        print(f"  {r.problem_id}: {len(r.completion)} tokens "
+              f"({r.finish_reason}) -> {TOKENIZER.decode(r.completion)!r}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""ShapeDtypeStruct input builders for the dry-run (assignment step 2).
+
+Every model input is a weak-type-correct, shardable stand-in — no device
+allocation. Train/prefill shapes build token batches; decode shapes build
+the serve_step (one token + KV cache of seq_len).
+
+long_500k policy (assignment):
+  * SSM / SWA-native archs run natively (mamba2: O(1) state; danube/hymba:
+    ring KV cache of window size).
+  * full-attention archs run via the explicit ``:swa`` sliding-window
+    variant (window 8192, ring cache) — the allowed carve-out; flagged in
+    the returned meta and in the roofline table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.sharding.rules import (data_axes, decode_state_specs,
+                                  rl_batch_specs, token_spec,
+                                  train_batch_specs)
+
+LONG_SWA_WINDOW = 8192
+
+
+def resolve_for_shape(cfg: ModelConfig, shape: InputShape
+                      ) -> tuple[ModelConfig, dict]:
+    """Apply the long_500k sub-quadratic policy. Returns (cfg, meta)."""
+    meta = {"variant": "native"}
+    if shape.name == "long_500k" and shape.kind == "decode":
+        if cfg.family == "ssm":
+            meta["variant"] = "native-ssm"
+        elif cfg.sliding_window:
+            meta["variant"] = f"native-swa({cfg.sliding_window})"
+        else:
+            cfg = cfg.with_sliding_window(LONG_SWA_WINDOW)
+            meta["variant"] = f"swa-variant({LONG_SWA_WINDOW})"
+    return cfg, meta
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def train_batch_structs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                        *, rl: bool = True) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = (rl_batch_specs if rl else train_batch_specs)(
+        mesh, has_patches=(cfg.family == "vlm"),
+        has_frames=(cfg.family == "audio"))
+    out = {
+        "tokens": _sds((B, S), jnp.int32, mesh, specs["tokens"]),
+        "labels": _sds((B, S), jnp.int32, mesh, specs["labels"]),
+        "loss_mask": _sds((B, S), jnp.float32, mesh, specs["loss_mask"]),
+    }
+    if rl:
+        out["infer_logp"] = _sds((B, S), jnp.float32, mesh,
+                                 specs["infer_logp"])
+        out["advantages"] = _sds((B, S), jnp.float32, mesh,
+                                 specs["advantages"])
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, specs["patch_embeds"])
+    if cfg.family == "audio":
+        out["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                             jnp.bfloat16, mesh, specs["frames"])
+    return out
+
+
+def prefill_batch_structs(cfg: ModelConfig, shape: InputShape, mesh: Mesh
+                          ) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    specs = train_batch_specs(mesh, has_patches=(cfg.family == "vlm"),
+                              has_frames=(cfg.family == "audio"))
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, specs["tokens"])}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _sds((B, cfg.num_image_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, specs["patch_embeds"])
+    if cfg.family == "audio":
+        out["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                             jnp.bfloat16, mesh, specs["frames"])
+    return out
+
+
+def decode_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Ring cache (== window) when the window is smaller than the context."""
+    if cfg.sliding_window and cfg.sliding_window < shape.seq_len:
+        return cfg.sliding_window
+    return shape.seq_len
+
+
+def decode_state_structs(cfg: ModelConfig, shape: InputShape, mesh: Mesh
+                         ) -> tuple[dict, dict]:
+    """(state structs, state specs) for serve_step at this shape."""
+    B = shape.global_batch
+    S_cache = decode_cache_len(cfg, shape)
+    specs = decode_state_specs(cfg, mesh, batch=B)
+    L, hd = cfg.num_layers, cfg.resolved_head_dim
+    dt = jnp.bfloat16
+    structs = {"pos": _sds((B,), jnp.int32, mesh, specs["pos"])}
+    if cfg.uses_attention:
+        # re-evaluate seq sharding for the (possibly ring) cache length
+        s_axis = specs["k"][2]
+        if s_axis is not None and S_cache % mesh.shape[s_axis] != 0:
+            specs["k"] = P(*(specs["k"][:2] + (None,) + specs["k"][3:]))
+            specs["v"] = specs["k"]
+        kv = (L, B, S_cache, cfg.num_kv_heads, hd)
+        structs["k"] = _sds(kv, dt, mesh, specs["k"])
+        structs["v"] = _sds(kv, dt, mesh, specs["v"])
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        d_in = s.d_inner(cfg.d_model)
+        nh = s.n_heads(cfg.d_model)
+        conv_dim = d_in + 2 * s.n_groups * s.state_size
+        structs["ssm_conv"] = _sds((L, B, s.conv_kernel - 1, conv_dim), dt,
+                                   mesh, specs["ssm_conv"])
+        structs["ssm_h"] = _sds((L, B, nh, s.head_dim, s.state_size),
+                                jnp.float32, mesh, specs["ssm_h"])
+    if cfg.is_encoder_decoder:
+        T = cfg.encoder_seq_len
+        structs["cross_k"] = _sds((L, B, T, cfg.num_kv_heads, hd), dt, mesh,
+                                  specs["cross_k"])
+        structs["cross_v"] = _sds((L, B, T, cfg.num_kv_heads, hd), dt, mesh,
+                                  specs["cross_v"])
+    return structs, specs
+
+
+def decode_token_struct(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    return _sds((shape.global_batch,), jnp.int32, mesh,
+                token_spec(mesh, shape.global_batch))

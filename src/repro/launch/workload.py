@@ -1,0 +1,209 @@
+"""Analytic workload model: FLOPs and HBM bytes per (arch × shape × step).
+
+Why analytic: XLA's ``cost_analysis`` counts a ``while``-loop body ONCE, and
+our lowerings scan over layers (deliberately — compile hygiene for 94-layer
+configs at 512 devices), so compiled FLOPs/bytes are undercounted by ~L×.
+Collectives are recovered exactly from the HLO with the trip-aware parser
+(hlo_parse.py); compute and HBM terms come from this model, cross-checked
+against an unrolled small-shape compile in tests.
+
+All formulas are per GLOBAL step; the roofline divides by chip count.
+Conventions:
+  * matmul FLOPs = 2·m·n·k; backward = 2× forward; full remat adds 1× fwd.
+  * attention: QK^T + PV = 4·B·S·K_eff·Hq·hd per layer
+    (K_eff = S/2 causal, = window for SWA with S >> window).
+  * SSD per layer: intra-chunk 2c(n+hd) + inter-chunk 4·n·hd per token·head.
+  * Muon Newton–Schulz: 5 iters × (4·m²·n + 2·m³) per hidden matrix (m≤n).
+  * HBM bytes: parameter streams per pass (bf16), fp32 optimizer state r/w,
+    layer-boundary activations under full remat, KV-cache reads for decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import InputShape, ModelConfig, OptimizerConfig, \
+    ParallelConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _linear_params(cfg: ModelConfig) -> tuple[float, float]:
+    """(active matmul params excl. embedding tables, head matmul params)."""
+    pc = cfg.param_counts()
+    emb_tables = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    head = cfg.vocab_size * cfg.d_model
+    linear = pc["active"] - emb_tables
+    return float(max(linear, 0)), float(head)
+
+
+def _attn_quad_flops(cfg: ModelConfig, B: int, S: int, *,
+                     causal: bool = True) -> float:
+    if not cfg.uses_attention or cfg.num_heads == 0:
+        return 0.0
+    W = cfg.sliding_window
+    if causal:
+        K_eff = min(S / 2, W) if W else S / 2
+    else:
+        K_eff = S
+    per_layer = 4.0 * B * S * K_eff * cfg.num_heads * cfg.resolved_head_dim
+    total = cfg.num_layers * per_layer
+    if cfg.is_encoder_decoder:
+        # encoder self-attention (non-causal) over T frames
+        T = cfg.encoder_seq_len
+        total += cfg.num_encoder_layers * 4.0 * B * T * T * cfg.num_heads \
+            * cfg.resolved_head_dim
+        # decoder cross-attention: S queries x T keys
+        total += cfg.num_layers * 4.0 * B * S * T * cfg.num_heads \
+            * cfg.resolved_head_dim
+    return total
+
+
+def _ssm_flops(cfg: ModelConfig, B: int, S: int) -> float:
+    if cfg.ssm is None:
+        return 0.0
+    s = cfg.ssm
+    nh = s.n_heads(cfg.d_model)
+    c = min(s.chunk_size, S)
+    per_tok_head = 2.0 * c * (s.state_size + s.head_dim) \
+        + 4.0 * s.state_size * s.head_dim
+    return cfg.num_layers * B * S * nh * per_tok_head
+
+
+def _ns_flops(cfg: ModelConfig, ns_steps: int = 5) -> float:
+    """Muon Newton–Schulz over every hidden matrix (per optimizer step)."""
+    total = 0.0
+
+    def mat(m, n, copies=1):
+        nonlocal total
+        lo, hi = (m, n) if m <= n else (n, m)
+        total += copies * ns_steps * (4.0 * lo * lo * hi + 2.0 * lo ** 3)
+
+    d, L = cfg.d_model, cfg.num_layers
+    if cfg.uses_attention and cfg.num_heads:
+        mat(d, cfg.q_dim, L)
+        mat(d, cfg.kv_dim, 2 * L)
+        mat(cfg.q_dim, d, L)
+    if cfg.d_ff and cfg.moe is None:
+        mat(d, cfg.d_ff, 2 * L)
+        mat(cfg.d_ff, d, L)
+    if cfg.moe is not None:
+        m = cfg.moe
+        mat(d, m.expert_d_ff, 2 * L * m.num_experts)
+        mat(m.expert_d_ff, d, L * m.num_experts)
+        if m.num_shared_experts:
+            sf = m.shared_d_ff or m.expert_d_ff * m.num_shared_experts
+            mat(d, sf, 2 * L)
+            mat(sf, d, L)
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        d_in = s.d_inner(d)
+        proj = 2 * d_in + 2 * s.n_groups * s.state_size + s.n_heads(d)
+        mat(d, proj, L)
+        mat(d_in, d, L)
+    if cfg.is_encoder_decoder:
+        mat(d, cfg.q_dim, cfg.num_encoder_layers + L)   # enc attn + cross
+        mat(d, cfg.kv_dim, 2 * (cfg.num_encoder_layers + L))
+        mat(cfg.q_dim, d, cfg.num_encoder_layers + L)
+        mat(d, cfg.d_ff, 2 * cfg.num_encoder_layers)
+        mat(cfg.d_ff, d, cfg.num_encoder_layers)
+    return total
+
+
+def _moe_experts_touched(cfg: ModelConfig, tokens: int) -> float:
+    """Expected number of distinct experts hit by `tokens` top-k draws
+    (uniform routing): E·(1 − (1−k/E)^T)."""
+    m = cfg.moe
+    if m is None:
+        return 0.0
+    frac = 1.0 - (1.0 - m.top_k / m.num_experts) ** tokens
+    return m.num_experts * frac
+
+
+def flops_estimate(cfg: ModelConfig, shape: InputShape, *,
+                   kind: str, remat: str = "full",
+                   optimizer: str = "muon") -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    lin, head = _linear_params(cfg)
+    if kind == "train":
+        D = shape.tokens
+        fwd = 2.0 * D * (lin + head) + _attn_quad_flops(cfg, B, S) \
+            + _ssm_flops(cfg, B, S)
+        mult = {"full": 4.0, "selective": 3.5, "none": 3.0}[remat]
+        opt = _ns_flops(cfg) if optimizer == "muon" else 0.0
+        total = mult * fwd + opt
+        return {"fwd": fwd, "total": total, "optimizer": opt, "tokens": D}
+    if kind == "prefill":
+        D = shape.tokens
+        fwd = 2.0 * D * (lin + head) + _attn_quad_flops(cfg, B, S) \
+            + _ssm_flops(cfg, B, S)
+        return {"fwd": fwd, "total": fwd, "optimizer": 0.0, "tokens": D}
+    # decode: one token per sequence against a cache of K_len
+    D = B
+    K_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    attn = cfg.num_layers * 4.0 * B * K_len * cfg.num_heads \
+        * cfg.resolved_head_dim if cfg.uses_attention and cfg.num_heads else 0.0
+    if cfg.is_encoder_decoder:
+        attn += cfg.num_layers * 4.0 * B * cfg.encoder_seq_len \
+            * cfg.num_heads * cfg.resolved_head_dim
+    ssm = 0.0
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        ssm = cfg.num_layers * B * s.n_heads(cfg.d_model) \
+            * 4.0 * s.state_size * s.head_dim
+    fwd = 2.0 * D * (lin + head) + attn + ssm
+    return {"fwd": fwd, "total": fwd, "optimizer": 0.0, "tokens": D}
+
+
+def bytes_estimate(cfg: ModelConfig, shape: InputShape, *,
+                   kind: str, remat: str = "full",
+                   loss_chunk: int = 1024) -> dict:
+    """Global HBM traffic per step (bytes). Divide by chips for per-device."""
+    B, S = shape.global_batch, shape.seq_len
+    pc = cfg.param_counts()
+    P_tot = float(pc["total"])
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+
+    if kind in ("train", "prefill"):
+        passes = {"full": 3.0, "selective": 2.5, "none": 2.0}[remat] \
+            if kind == "train" else 1.0
+        params = passes * P_tot * BF16
+        opt = 0.0
+        if kind == "train":
+            # grads fp32 write+read, Muon momentum + Adam m/v r/w, params w
+            opt = P_tot * F32 * 2 + P_tot * F32 * 2 * 3 + P_tot * BF16
+        # layer-boundary activations (full remat): write + read
+        acts = 2.0 * L * B * S * d * BF16
+        # chunked-loss head traffic: head re-read per chunk + hidden + nll
+        nc = max(1, S // max(loss_chunk, 1)) if loss_chunk else 1
+        head = nc * d * V * BF16 + B * S * d * BF16 + B * S * F32
+        if kind == "train":
+            head *= 2.0  # backward pass through the head
+        total = params + opt + acts + head
+        return {"params": params, "opt": opt, "acts": acts, "head": head,
+                "total": total}
+
+    # decode: weight streaming + cache read/write
+    K_len = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    if cfg.moe is not None:
+        m = cfg.moe
+        expert_p = 3.0 * d * m.expert_d_ff * L
+        dense_p = P_tot - expert_p * m.num_experts
+        touched = _moe_experts_touched(cfg, B)
+        params = (dense_p + touched * expert_p) * BF16
+    else:
+        params = P_tot * BF16
+    cache = 0.0
+    if cfg.uses_attention and cfg.num_heads:
+        cache += 2.0 * L * B * K_len * cfg.num_kv_heads \
+            * cfg.resolved_head_dim * BF16          # read K and V
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        nh = s.n_heads(d)
+        cache += 2.0 * L * B * nh * s.head_dim * s.state_size * F32
+    if cfg.is_encoder_decoder:
+        cache += 2.0 * L * B * cfg.encoder_seq_len * cfg.num_kv_heads \
+            * cfg.resolved_head_dim * BF16
+    total = params + cache
+    return {"params": params, "cache": cache, "total": total}

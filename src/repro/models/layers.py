@@ -1,0 +1,79 @@
+"""Core layer primitives: RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Pure-functional: every layer is `init(key, ...) -> params` plus an apply
+function. Compute runs in the activation dtype with fp32 softmax/norms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    # dim**-0.5 keeps tied-unembedding logits at unit variance (the residual
+    # stream is RMS-normed before the head, so untied archs are unaffected).
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * dim ** -0.5).astype(dtype)
+
+
+# -- RMSNorm ---------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype):
+    return jnp.ones((dim,), dtype)
+
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- Rotary position embeddings ---------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    if theta <= 0.0:  # arch without rope (whisper)
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, dim: int):
+    """Whisper-style sinusoidal embeddings computed on the fly: [..., dim]."""
+    half = dim // 2
+    inv = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- SwiGLU MLP --------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp_apply(params, x):
+    gate = jax.nn.silu(x @ params["w_gate"])
+    up = x @ params["w_up"]
+    return (gate * up) @ params["w_down"]

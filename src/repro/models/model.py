@@ -1,0 +1,505 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+Families (from the assigned architectures):
+  dense   — pre-norm GQA transformer (llama-like), optional SWA
+  moe     — dense attention + MoE FFN (+ optional shared experts)
+  ssm     — Mamba-2 (SSD) mixer blocks, attention-free
+  hybrid  — hymba: attention ∥ SSM heads in parallel, learned meta tokens
+  vlm     — dense LM backbone consuming stubbed patch embeddings
+  audio   — whisper enc-dec backbone consuming stubbed frame embeddings
+
+Everything is pure-functional: ``init_params(key, cfg)`` builds a pytree of
+arrays; apply fns are jit/pjit-compatible with only `cfg`/`pcfg` static.
+Layer stacks are ``lax.scan`` over stacked per-layer params with configurable
+``jax.checkpoint`` (full activation checkpointing by default, as the paper
+trained with).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from .attention import (attn_apply, attn_decode_apply, attn_init,
+                        cross_attn_apply, cross_attn_kv)
+from .layers import (embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
+                     sinusoidal_positions)
+from .moe import moe_apply, moe_decode_apply, moe_init
+from .ssm import init_ssm_state, ssm_apply, ssm_decode_step, ssm_init
+
+DEFAULT_PARALLEL = ParallelConfig()
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _decoder_layer_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {"ln1": rmsnorm_init(d, dtype)}
+    if cfg.uses_attention:
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    if cfg.ssm is not None:
+        p["ssm"] = ssm_init(ks[1], cfg, dtype)
+    if cfg.parallel_ssm:
+        p["attn_out_norm"] = rmsnorm_init(d, dtype)
+        p["ssm_out_norm"] = rmsnorm_init(d, dtype)
+    if cfg.is_encoder_decoder:
+        p["ln_cross"] = rmsnorm_init(d, dtype)
+        p["cross"] = attn_init(ks[2], cfg, dtype)
+    if cfg.moe is not None:
+        p["ln2"] = rmsnorm_init(d, dtype)
+        p["moe"] = moe_init(ks[3], cfg, dtype)
+    elif cfg.d_ff:
+        p["ln2"] = rmsnorm_init(d, dtype)
+        p["mlp"] = mlp_init(ks[4], d, cfg.d_ff, dtype)
+    return p
+
+
+def _encoder_layer_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(d, dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(d, dtype),
+        "mlp": mlp_init(k2, d, cfg.d_ff, dtype),
+    }
+
+
+def _stack_init(key, n, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(key, cfg: ModelConfig, dtype=None):
+    """Build the parameter pytree. Layer params are stacked on a leading [L]."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "layers": _stack_init(ks[1], cfg.num_layers,
+                              lambda k: _decoder_layer_init(k, cfg, dtype)),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        d = cfg.d_model
+        p["lm_head"] = (jax.random.normal(ks[2], (d, cfg.vocab_size),
+                                          jnp.float32) * d ** -0.5).astype(dtype)
+    if cfg.num_meta_tokens:
+        p["meta_tokens"] = (jax.random.normal(
+            ks[3], (cfg.num_meta_tokens, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dtype)
+    if cfg.is_encoder_decoder:
+        p["encoder"] = {
+            "layers": _stack_init(ks[4], cfg.num_encoder_layers,
+                                  lambda k: _encoder_layer_init(k, cfg, dtype)),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _decoder_layer_apply(lp, x, positions, cfg, pcfg, enc_out=None):
+    """One decoder layer, full-sequence. Returns (x, aux)."""
+    aux = {}
+    h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+    if cfg.family == "ssm":
+        out, _ = ssm_apply(lp["ssm"], h, cfg)
+        x = x + out
+    else:
+        attn_out, _ = attn_apply(lp["attn"], h, positions, cfg,
+                                 use_pallas=pcfg.use_pallas,
+                                 context_parallel=pcfg.context_parallel > 1)
+        if cfg.parallel_ssm:
+            ssm_out, _ = ssm_apply(lp["ssm"], h, cfg)
+            attn_out = 0.5 * (
+                rmsnorm(attn_out, lp["attn_out_norm"], cfg.rms_eps)
+                + rmsnorm(ssm_out, lp["ssm_out_norm"], cfg.rms_eps))
+        x = x + attn_out
+    if enc_out is not None:
+        h = rmsnorm(x, lp["ln_cross"], cfg.rms_eps)
+        k, v = cross_attn_kv(lp["cross"], enc_out, cfg)
+        x = x + cross_attn_apply(lp["cross"], h, k, v, cfg)
+    if cfg.moe is not None:
+        h = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        out, aux = moe_apply(lp["moe"], h, cfg, use_pallas=pcfg.use_pallas,
+                             expert_parallel=pcfg.expert_parallel)
+        x = x + out
+    elif cfg.d_ff:
+        x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.rms_eps))
+    return x, aux
+
+
+def _maybe_remat(fn, pcfg):
+    if pcfg.remat == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if pcfg.remat == "selective":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _gather_weights(lp):
+    """FSDP gather-at-use (§Perf H5): replicate this layer's weight slices
+    for the duration of the layer — GSPMD lowers the constraint to per-layer
+    weight all-gathers (and weight-grad reduce-scatters in the transpose),
+    keeping activations collective-free.
+
+    MoE expert stacks (per-layer ndim 3: [E, d, f]) are NOT gathered — they
+    stay expert-sharded and the dispatch buffer moves to them instead
+    (expert parallelism, §2.1.8); gathering 128 experts per layer would be
+    ~50x the dense-weight traffic."""
+    from jax.sharding import PartitionSpec as P
+    return jax.tree_util.tree_map(
+        lambda w: (w if w.ndim >= 3
+                   else jax.lax.with_sharding_constraint(w, P())), lp)
+
+
+def _scan_layers(layers, x, layer_fn, pcfg):
+    if pcfg.fsdp_gather_weights:
+        inner = layer_fn
+        layer_fn = lambda lp, y: inner(_gather_weights(lp), y)
+    layer_fn = _maybe_remat(layer_fn, pcfg)
+    if pcfg.scan_layers:
+        def body(carry, lp):
+            y, aux = layer_fn(lp, carry)
+            return y, aux
+        x, auxs = jax.lax.scan(body, x, layers)
+        aux = {k: jnp.mean(v) for k, v in auxs.items()} if auxs else {}
+        # aux losses must *sum* over layers; means are for metrics
+        if "moe_aux_loss" in auxs:
+            aux["moe_aux_loss"] = jnp.sum(auxs["moe_aux_loss"])
+        return x, aux
+    # unrolled python loop (debug / small models)
+    n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    aux_acc = {}
+    for i in range(n):
+        lp = jax.tree_util.tree_map(lambda a: a[i], layers)
+        x, aux = layer_fn(lp, x)
+        for k, v in aux.items():
+            aux_acc.setdefault(k, []).append(v)
+    aux = {k: (jnp.sum(jnp.stack(v)) if k == "moe_aux_loss"
+               else jnp.mean(jnp.stack(v))) for k, v in aux_acc.items()}
+    return x, aux
+
+
+def encode(params, frames, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Whisper encoder over stubbed frame embeddings [B, T, d]."""
+    B, T, d = frames.shape
+    pos = sinusoidal_positions(jnp.arange(T), d)[None].astype(frames.dtype)
+    x = frames + pos
+
+    def layer_fn(lp, x):
+        h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        out, _ = attn_apply(lp["attn"], h, jnp.zeros((B, T), jnp.int32), cfg,
+                            causal=False)
+        x = x + out
+        x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.rms_eps))
+        return x, {}
+
+    x, _ = _scan_layers(params["encoder"]["layers"], x, layer_fn, pcfg)
+    return rmsnorm(x, params["encoder"]["final_norm"], cfg.rms_eps)
+
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    """Token embedding + family-specific input fusion.
+
+    Returns (x [B, S_eff, d], positions [B, S_eff], n_prefix) where n_prefix
+    counts prepended non-text slots (meta tokens) that are dropped from the
+    output hidden states.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # first num_image_tokens positions are image-patch slots (carve-out
+        # stub): overwrite their embeddings with the projector outputs.
+        pe = batch["patch_embeds"].astype(x.dtype)
+        n_img = pe.shape[1]
+        assert S >= n_img, (
+            f"VLM prompt ({S} tokens) must cover the {n_img} image slots")
+        x = jnp.concatenate([pe, x[:, n_img:]], axis=1)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    n_prefix = 0
+    if cfg.num_meta_tokens:
+        n_prefix = cfg.num_meta_tokens
+        meta = jnp.broadcast_to(params["meta_tokens"][None],
+                                (B, n_prefix, cfg.d_model)).astype(x.dtype)
+        x = jnp.concatenate([meta, x], axis=1)
+        meta_pos = jnp.broadcast_to(
+            jnp.arange(n_prefix, dtype=jnp.int32)[None], (B, n_prefix))
+        positions = jnp.concatenate([meta_pos, positions + n_prefix], axis=1)
+    if cfg.rope_theta == 0.0:  # whisper: sinusoidal absolute positions
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    return x, positions, n_prefix
+
+
+def forward_hidden(params, batch, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Full-sequence decoder forward. Returns (hidden [B,S,d], aux)."""
+    x, positions, n_prefix = embed_inputs(params, batch, cfg)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, batch["frames"], cfg, pcfg)
+
+    def layer_fn(lp, x):
+        return _decoder_layer_apply(lp, x, positions, cfg, pcfg, enc_out)
+
+    x, aux = _scan_layers(params["layers"], x, layer_fn, pcfg)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return rmsnorm(x, params["final_norm"], cfg.rms_eps), aux
+
+
+def head_weights(params, cfg: ModelConfig):
+    """[d, V] unembedding matrix (tied or untied)."""
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def forward(params, batch, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Full logits [B, S, V] — small-model paths (tests, toy RL)."""
+    hidden, aux = forward_hidden(params, batch, cfg, pcfg)
+    logits = (hidden @ head_weights(params, cfg)).astype(jnp.float32)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Chunked vocab loss (the [B,S,V] logits tensor is never materialized)
+# ---------------------------------------------------------------------------
+
+
+def chunked_token_nll(hidden, head_w, labels, chunk: int):
+    """Per-token negative log-likelihood [B, S], computed over S-chunks so the
+    live logits buffer is [B, chunk, V] instead of [B, S, V]."""
+    B, S, d = hidden.shape
+    if chunk <= 0 or S <= chunk:
+        logits = (hidden @ head_w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return lse - tgt
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+
+    def one(i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, axis=1)
+        lab = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = (h @ head_w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return lse - tgt  # [B, chunk]
+
+    nll = jax.lax.map(one, jnp.arange(nc))           # [nc, B, chunk]
+    nll = nll.transpose(1, 0, 2).reshape(B, nc * chunk)
+    return nll[:, :S]
+
+
+def token_logprobs(params, batch, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Per-token log p(labels) [B, S] plus aux — used by both SFT and RL."""
+    hidden, aux = forward_hidden(params, batch, cfg, pcfg)
+    nll = chunked_token_nll(hidden, head_weights(params, cfg),
+                            batch["labels"], pcfg.loss_chunk)
+    return -nll, aux
+
+
+def lm_loss(params, batch, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Masked mean cross-entropy. batch: tokens, labels, loss_mask."""
+    logp, aux = token_logprobs(params, batch, cfg, pcfg)
+    mask = batch["loss_mask"].astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = -(logp * mask).sum() / denom
+    metrics = {"lm_loss": loss, **aux}
+    if "moe_aux_loss" in aux:
+        loss = loss + aux["moe_aux_loss"]
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): one token in, one token out, static-shape caches
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    """Static-shape decode caches, stacked over layers on dim 0."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    L, hd = cfg.num_layers, cfg.resolved_head_dim
+    state = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.uses_attention:
+        kv_shape = (L, batch, max_seq, cfg.num_kv_heads, hd)
+        state["k"] = jnp.zeros(kv_shape, dtype)
+        state["v"] = jnp.zeros(kv_shape, dtype)
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        one = init_ssm_state(cfg, batch, dtype)
+        state["ssm_conv"] = jnp.broadcast_to(one["conv"][None],
+                                             (L,) + one["conv"].shape).copy()
+        state["ssm_h"] = jnp.broadcast_to(one["ssm"][None],
+                                          (L,) + one["ssm"].shape).copy()
+    if cfg.is_encoder_decoder:
+        T = cfg.encoder_seq_len
+        state["cross_k"] = jnp.zeros((L, batch, T, cfg.num_kv_heads, hd), dtype)
+        state["cross_v"] = jnp.zeros((L, batch, T, cfg.num_kv_heads, hd), dtype)
+    return state
+
+
+def _decoder_layer_decode(lp, x, pos, caches, cfg):
+    """One layer, one token. caches: per-layer slice dict. Returns (x, caches)."""
+    new = dict(caches)
+    h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+    if cfg.family == "ssm":
+        out, st = ssm_decode_step(lp["ssm"], h,
+                                  {"conv": caches["ssm_conv"],
+                                   "ssm": caches["ssm_h"]}, cfg)
+        new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
+        x = x + out
+    else:
+        attn_out, k, v = attn_decode_apply(lp["attn"], h, caches["k"],
+                                           caches["v"], pos, cfg)
+        new["k"], new["v"] = k, v
+        if cfg.parallel_ssm:
+            ssm_out, st = ssm_decode_step(lp["ssm"], h,
+                                          {"conv": caches["ssm_conv"],
+                                           "ssm": caches["ssm_h"]}, cfg)
+            new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
+            attn_out = 0.5 * (
+                rmsnorm(attn_out, lp["attn_out_norm"], cfg.rms_eps)
+                + rmsnorm(ssm_out, lp["ssm_out_norm"], cfg.rms_eps))
+        x = x + attn_out
+    if cfg.is_encoder_decoder:
+        h = rmsnorm(x, lp["ln_cross"], cfg.rms_eps)
+        x = x + cross_attn_apply(lp["cross"], h, caches["cross_k"],
+                                 caches["cross_v"], cfg)
+    if cfg.moe is not None:
+        h = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        x = x + moe_decode_apply(lp["moe"], h, cfg)
+    elif cfg.d_ff:
+        x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.rms_eps))
+    return x, new
+
+
+_CACHE_KEYS = ("k", "v", "ssm_conv", "ssm_h", "cross_k", "cross_v")
+
+
+def serve_step(params, state, token, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """One decode step. token: [B] int32. Returns (logits [B,V], new state).
+
+    `state["pos"]` is the *text* position (number of tokens already in the
+    cache, including any meta-token prefix handled by prefill)."""
+    B = token.shape[0]
+    pos = state["pos"]
+    x = params["embed"][token][:, None, :]
+    if cfg.rope_theta == 0.0:
+        x = x + sinusoidal_positions(pos[:, None], cfg.d_model).astype(x.dtype)
+
+    per_layer = {k: state[k] for k in _CACHE_KEYS if k in state}
+
+    def body(x, inp):
+        lp, caches = inp
+        x, new = _decoder_layer_decode(lp, x, pos, caches, cfg)
+        return x, new
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], per_layer))
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = (x[:, 0] @ head_weights(params, cfg)).astype(jnp.float32)
+    new_state = dict(state)
+    new_state.update(new_caches)
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+def prefill(params, batch, cfg: ModelConfig, max_seq: int,
+            pcfg=DEFAULT_PARALLEL, dtype=None):
+    """Run the prompt through the model, filling decode caches.
+
+    Returns (logits_last [B,V], state). Prompt length S must be <= max_seq.
+    For left-padded prompts pass batch["positions"] and batch["prompt_lens"].
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x, positions, n_prefix = embed_inputs(params, batch, cfg)
+    enc_out = encode(params, batch["frames"], cfg, pcfg) \
+        if cfg.is_encoder_decoder else None
+    # cache dtype follows the params dtype unless overridden (fp32 tests get
+    # fp32 caches; bf16 production params get bf16 caches)
+    state = init_decode_state(cfg, B, max_seq,
+                              dtype or params["embed"].dtype)
+
+    layers = params["layers"]
+    L = cfg.num_layers
+
+    def body(x, inp):
+        lp, caches = inp
+        new = dict(caches)
+        h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+        if cfg.family == "ssm":
+            out, st = ssm_apply(lp["ssm"], h, cfg)
+            new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
+            x = x + out
+        else:
+            attn_out, (k, v) = attn_apply(lp["attn"], h, positions, cfg,
+                                          use_pallas=pcfg.use_pallas)
+            W = caches["k"].shape[1]
+            if W < k.shape[1]:
+                # ring cache (W == sliding_window): keep the last W tokens
+                # at slots (position % W)
+                tail_pos = jnp.arange(k.shape[1] - W, k.shape[1])
+                slots = tail_pos % W
+                new["k"] = caches["k"].at[:, slots].set(
+                    k[:, -W:].astype(caches["k"].dtype))
+                new["v"] = caches["v"].at[:, slots].set(
+                    v[:, -W:].astype(caches["v"].dtype))
+            else:
+                new["k"] = jax.lax.dynamic_update_slice_in_dim(
+                    caches["k"], k.astype(caches["k"].dtype), 0, axis=1)
+                new["v"] = jax.lax.dynamic_update_slice_in_dim(
+                    caches["v"], v.astype(caches["v"].dtype), 0, axis=1)
+            if cfg.parallel_ssm:
+                ssm_out, st = ssm_apply(lp["ssm"], h, cfg)
+                new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
+                attn_out = 0.5 * (
+                    rmsnorm(attn_out, lp["attn_out_norm"], cfg.rms_eps)
+                    + rmsnorm(ssm_out, lp["ssm_out_norm"], cfg.rms_eps))
+            x = x + attn_out
+        if cfg.is_encoder_decoder:
+            hh = rmsnorm(x, lp["ln_cross"], cfg.rms_eps)
+            ck, cv = cross_attn_kv(lp["cross"], enc_out, cfg)
+            new["cross_k"] = ck.astype(caches["cross_k"].dtype)
+            new["cross_v"] = cv.astype(caches["cross_v"].dtype)
+            x = x + cross_attn_apply(lp["cross"], hh, ck, cv, cfg)
+        if cfg.moe is not None:
+            hh = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+            out, _ = moe_apply(lp["moe"], hh, cfg, use_pallas=pcfg.use_pallas,
+                               expert_parallel=pcfg.expert_parallel)
+            x = x + out
+        elif cfg.d_ff:
+            x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.rms_eps))
+        return x, new
+
+    per_layer = {k: state[k] for k in _CACHE_KEYS if k in state}
+    x, new_caches = jax.lax.scan(body, x, (layers, per_layer))
+    if n_prefix:
+        x_last = x[:, -1]
+    else:
+        x_last = x[:, -1]
+    x_last = rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
+    logits = (x_last @ head_weights(params, cfg)).astype(jnp.float32)
+    state.update(new_caches)
+    state["pos"] = jnp.full((B,), S + n_prefix, jnp.int32)
+    return logits, state

@@ -1,0 +1,199 @@
+"""Mamba-2 mixer: State-Space Duality (SSD), arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the recurrence
+is evaluated as a masked quadratic (attention-like) contraction; across chunks
+a small [heads, head_dim, state] recurrent state is carried by a lax.scan.
+Decode is the O(1)-per-token recurrence on the same state.
+
+Layout: x [B, S, d_model]. Internal: heads = d_inner/head_dim, B/C shared
+across heads per group (n_groups, configs use 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def ssm_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    g = s.n_groups
+    conv_dim = d_in + 2 * g * s.state_size
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * g * s.state_size + nh  # z, x, B, C, dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_dim), jnp.float32)
+                   * (s.conv_kernel ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),  # inv softplus
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[3], d_in, d, dtype, scale=d_in ** -0.5),
+    }
+
+
+def _split_proj(proj, cfg):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    g, n = s.n_groups, s.state_size
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + g * n, 2 * d_in + 2 * g * n], axis=-1)
+    return z, xs, Bc, Cc, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: [B,S,C]; w: [K,C]; state: [B,K-1,C] or None.
+
+    Returns (y [B,S,C], new_state [B,K-1,C]).
+    """
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, xp.shape[1] - (K - 1):]
+    return y, new_state
+
+
+def _ssd_chunk_scan(xh, dt, dA_log, Bc, Cc, h0, chunk):
+    """Chunked SSD scan.
+
+    xh: [B,S,nh,hd]; dt: [B,S,nh]; dA_log: [B,S,nh] (= dt*A, negative);
+    Bc, Cc: [B,S,nh,n]; h0: [B,nh,hd,n]. Returns (y [B,S,nh,hd], hT).
+    """
+    B, S, nh, hd = xh.shape
+    n = Bc.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dA_log = jnp.pad(dA_log, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def to_chunks(a):
+        return a.reshape((B, nc, chunk) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+
+    xc, dtc, dac, Bcc, Ccc = map(to_chunks, (xh, dt, dA_log, Bc, Cc))
+
+    def step(h, inp):
+        xk, dtk, dak, Bk, Ck = inp  # [B,L,nh,...]
+        a_cum = jnp.cumsum(dak, axis=1)            # [B,L,nh]
+        # intra-chunk quadratic term
+        Lmask = a_cum[:, :, None, :] - a_cum[:, None, :, :]   # [B,i,j,nh]
+        i_idx = jnp.arange(chunk)
+        causal = i_idx[:, None] >= i_idx[None, :]
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(Lmask), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", Ck, Bk) * decay  # [B,i,j,nh]
+        y_intra = jnp.einsum("bijh,bjh,bjhd->bihd", scores, dtk, xk)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bihn,bih,bhdn->bihd", Ck, jnp.exp(a_cum), h)
+        # state update: h' = exp(a_end) * h + sum_j exp(a_end - a_j) dt_j B_j x_j
+        a_end = a_cum[:, -1]                        # [B,nh]
+        w = jnp.exp(a_end[:, None] - a_cum) * dtk   # [B,L,nh]
+        h_new = (jnp.exp(a_end)[..., None, None] * h
+                 + jnp.einsum("bjh,bjhd,bjhn->bhdn", w, xk, Bk))
+        return h_new, y_intra + y_inter
+
+    hT, yc = jax.lax.scan(step, h0, (xc, dtc, dac, Bcc, Ccc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, nh, hd)
+    return y[:, :S], hT
+
+
+def ssm_apply(params, x, cfg, *, state=None, use_pallas=False):
+    """Full-sequence (train/prefill) Mamba-2 mixer.
+
+    Returns (y [B,S,d], new_state dict) — state carried for decode.
+    """
+    s = cfg.ssm
+    B, S, d = x.shape
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    g, n = s.n_groups, s.state_size
+
+    proj = x @ params["in_proj"]
+    z, xs, Bc, Cc, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+    conv_state = state["conv"] if state else None
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], params["conv_b"],
+                                        conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+
+    xh = xs.reshape(B, S, nh, s.head_dim).astype(jnp.float32)
+    rep = nh // g
+    Bh = jnp.repeat(Bc.reshape(B, S, g, n), rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cc.reshape(B, S, g, n), rep, axis=2).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,nh]
+    A = -jnp.exp(params["A_log"])                                     # [nh]
+    dA_log = dt * A                                                   # [B,S,nh]
+
+    h0 = state["ssm"] if state else jnp.zeros((B, nh, s.head_dim, n), jnp.float32)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y, hT = kops.ssd_scan(xh, dt, dA_log, Bh, Ch, h0, chunk=s.chunk_size)
+    else:
+        y, hT = _ssd_chunk_scan(xh, dt, dA_log, Bh, Ch, h0, s.chunk_size)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.rms_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_state, "ssm": hT}
+
+
+def ssm_decode_step(params, x, state, cfg):
+    """One-token decode. x: [B,1,d]; state: {"conv": [B,K-1,C], "ssm": [B,nh,hd,n]}."""
+    s = cfg.ssm
+    B, _, d = x.shape
+    d_in = s.d_inner(d)
+    nh = s.n_heads(d)
+    g, n = s.n_groups, s.state_size
+
+    proj = x @ params["in_proj"]
+    z, xs, Bc, Cc, dt = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)  # [B,1,C]
+    conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], params["conv_b"],
+                                        state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
+
+    xh = xs.reshape(B, nh, s.head_dim).astype(jnp.float32)
+    rep = nh // g
+    Bh = jnp.repeat(Bc.reshape(B, g, n), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc.reshape(B, g, n), rep, axis=1).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt.reshape(B, nh).astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt1 * A)                                  # [B,nh]
+
+    h = state["ssm"]
+    h = dA[..., None, None] * h + jnp.einsum(
+        "bh,bhd,bhn->bhdn", dt1, xh, Bh)
+    y = jnp.einsum("bhn,bhdn->bhd", Ch, h) + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm"], cfg.rms_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_state, "ssm": h}
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.n_groups * s.state_size
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim),
+                          jnp.dtype(dtype)),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_size), jnp.float32),
+    }

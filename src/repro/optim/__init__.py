@@ -1,0 +1,28 @@
+"""Optimizers: Muon (+ distributed schemes), AdamW, LR schedules."""
+from .adamw import AdamWState, adamw_update, init_adamw
+from .muon import MuonState, init_muon, muon_update, newton_schulz, orthogonalize
+from .distributed_muon import distributed_orthogonalize, lower_scheme
+from .schedules import lr_scale
+
+
+def init_optimizer(params, cfg):
+    if cfg.name == "muon":
+        return init_muon(params, cfg)
+    if cfg.name == "adamw":
+        return init_adamw(params, cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def optimizer_update(grads, state, params, cfg, lr_scale=1.0):
+    if cfg.name == "muon":
+        return muon_update(grads, state, params, cfg, lr_scale)
+    if cfg.name == "adamw":
+        return adamw_update(grads, state, params, cfg, lr_scale)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+__all__ = [
+    "AdamWState", "MuonState", "adamw_update", "distributed_orthogonalize",
+    "init_adamw", "init_muon", "init_optimizer", "lower_scheme", "lr_scale",
+    "muon_update", "newton_schulz", "optimizer_update", "orthogonalize",
+]

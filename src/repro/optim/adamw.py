@@ -1,0 +1,50 @@
+"""Plain AdamW (baseline optimizer; also Muon's fallback for non-matrices)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class AdamWState(NamedTuple):
+    m: any
+    v: any
+    count: jax.Array
+
+
+def init_adamw(params, cfg: OptimizerConfig) -> AdamWState:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return AdamWState(m=zeros(params), v=zeros(params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptimizerConfig,
+                 lr_scale=1.0):
+    b1, b2 = cfg.betas
+    cnt = state.count + 1
+    tc = cnt.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, p, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m_new / (1 - b1 ** tc)
+        vhat = v_new / (1 - b2 ** tc)
+        pf = p.astype(jnp.float32)
+        pf = pf * (1.0 - lr * cfg.weight_decay) \
+            - lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        return pf.astype(p.dtype), m_new, v_new
+
+    out = jax.tree_util.tree_map(upd, grads, params, state.m, state.v)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(m=new_m, v=new_v, count=cnt)

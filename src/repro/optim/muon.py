@@ -1,0 +1,152 @@
+"""Muon optimizer (Jordan et al. 2024) — the paper's post-training optimizer.
+
+Muon operates at the *matrix* level: the momentum-accumulated gradient of
+every hidden 2-D weight is orthogonalized with a quintic Newton–Schulz
+iteration before being applied. Non-matrix leaves (embeddings, unembedding,
+norms, biases, 1-D SSM params) fall back to AdamW, following standard Muon
+practice (and [25]).
+
+Layer-stacked parameters ([L, a, b] from the scanned layer stacks) are
+treated as L independent matrices via vmap — exactly the shape the
+distributed schemes in ``distributed_muon.py`` reshuffle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+# quintic Newton–Schulz coefficients (Jordan et al.)
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+
+
+def newton_schulz(G, steps: int = 5, eps: float = 1e-7):
+    """Orthogonalize a single matrix [m, n] via quintic Newton–Schulz."""
+    a, b, c = NS_COEFFS
+    X = G.astype(jnp.float32)
+    transposed = X.shape[0] > X.shape[1]
+    if transposed:
+        X = X.T
+    X = X / (jnp.linalg.norm(X) + eps)
+
+    def body(X, _):
+        A = X @ X.T
+        B = b * A + c * (A @ A)
+        return a * X + B @ X, None
+
+    X, _ = jax.lax.scan(body, X, None, length=steps)
+    return (X.T if transposed else X).astype(G.dtype)
+
+
+def orthogonalize(G, steps: int = 5):
+    """Newton–Schulz over the trailing two dims; leading dims are batched
+    (covers the stacked-layer [L, a, b] layout)."""
+    if G.ndim == 2:
+        return newton_schulz(G, steps)
+    flat = G.reshape((-1,) + G.shape[-2:])
+    out = jax.vmap(lambda g: newton_schulz(g, steps))(flat)
+    return out.reshape(G.shape)
+
+
+def _is_matrix(path: tuple, leaf) -> bool:
+    """Muon applies to hidden matrices only — not embeddings/unembedding/1-D."""
+    if leaf.ndim < 2:
+        return False
+    names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    if any(n in ("embed", "lm_head", "meta_tokens") for n in names):
+        return False
+    return True
+
+
+def _rms_scale(shape) -> float:
+    """Muon's shape-aware step scale: sqrt(max(1, m/n)) over the matrix dims."""
+    m, n = shape[-2], shape[-1]
+    return max(1.0, m / n) ** 0.5
+
+
+class MuonState(NamedTuple):
+    momentum: any          # Muon momentum buffers (matrix leaves)
+    adam_m: any            # AdamW first moment (fallback leaves)
+    adam_v: any            # AdamW second moment
+    count: jax.Array
+
+
+def init_muon(params, cfg: OptimizerConfig) -> MuonState:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return MuonState(momentum=zeros(params), adam_m=zeros(params),
+                     adam_v=zeros(params), count=jnp.zeros((), jnp.int32))
+
+
+def muon_update(grads, state: MuonState, params, cfg: OptimizerConfig,
+                lr_scale=1.0, orthogonalize_fn=None):
+    """One optimizer step. Returns (new_params, new_state).
+
+    ``orthogonalize_fn(path, momentum_leaf) -> ortho update`` is the hook the
+    distributed schemes override; default is local Newton–Schulz.
+    """
+    if orthogonalize_fn is not None:
+        orth = orthogonalize_fn
+    elif cfg.layer_reshard_ns:
+        from jax.sharding import PartitionSpec as P
+
+        def orth(path, m):
+            # §2.1.7 (Dion scheme via GSPMD): reshuffle FSDP-row-sharded
+            # stacked momentum [L, m, n] to layer-sharded, run NS on whole
+            # local matrices, restore FSDP layout. GSPMD lowers the two
+            # constraints to all-to-alls instead of per-NS-iteration
+            # all-reduces.
+            if m.ndim >= 3:
+                m = jax.lax.with_sharding_constraint(
+                    m, P(*(("model",) + (None,) * (m.ndim - 1))))
+            # output sharding left to GSPMD: the consumer (param update)
+            # pins the FSDP layout, producing the reverse reshuffle.
+            return orthogonalize(m, cfg.ns_steps)
+    else:
+        orth = lambda path, m: orthogonalize(m, cfg.ns_steps)
+    lr = cfg.lr * lr_scale
+    b1, b2 = cfg.betas
+    cnt = state.count + 1
+    tc = cnt.astype(jnp.float32)
+
+    paths_grads = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree_util.tree_structure(grads)
+    p_leaves = jax.tree_util.tree_leaves(params)
+    mom_leaves = jax.tree_util.tree_leaves(state.momentum)
+    am_leaves = jax.tree_util.tree_leaves(state.adam_m)
+    av_leaves = jax.tree_util.tree_leaves(state.adam_v)
+
+    new_p, new_mom, new_am, new_av = [], [], [], []
+    for (path, g), p, mom, am, av in zip(paths_grads, p_leaves, mom_leaves,
+                                         am_leaves, av_leaves):
+        g = g.astype(jnp.float32)
+        pf = p.astype(jnp.float32)
+        if _is_matrix(path, g):
+            m_new = cfg.momentum * mom + g
+            o = orth(path, m_new).astype(jnp.float32)
+            upd = o * _rms_scale(g.shape)
+            pf = pf * (1.0 - lr * cfg.weight_decay) - lr * upd
+            new_mom.append(m_new)
+            new_am.append(am)
+            new_av.append(av)
+        else:
+            am_new = b1 * am + (1 - b1) * g
+            av_new = b2 * av + (1 - b2) * jnp.square(g)
+            mhat = am_new / (1 - b1 ** tc)
+            vhat = av_new / (1 - b2 ** tc)
+            upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            pf = pf * (1.0 - lr * cfg.weight_decay) - lr * upd
+            new_mom.append(mom)
+            new_am.append(am_new)
+            new_av.append(av_new)
+        new_p.append(pf.astype(p.dtype))
+
+    unflatten = partial(jax.tree_util.tree_unflatten, treedef)
+    return unflatten(new_p), MuonState(
+        momentum=unflatten(new_mom), adam_m=unflatten(new_am),
+        adam_v=unflatten(new_av), count=cnt)

@@ -1,0 +1,35 @@
+"""LR schedules: linear warmup (SFT stage 1), linear decay (agentic SFT),
+WSD (warmup–stable–decay, MiniCPM-style — minicpm-2b's signature schedule),
+constant (RL)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def lr_scale(cfg: OptimizerConfig, step):
+    """Multiplier on cfg.lr at `step` (jax-traceable)."""
+    step = jnp.asarray(step, jnp.float32)
+    total = float(max(cfg.total_steps, 1))
+    warm = float(max(cfg.warmup_steps, 0))
+    if cfg.schedule == "constant":
+        return jnp.ones(())
+    if cfg.schedule == "linear_warmup":
+        # paper SFT stage 1: warm from ~0 over warmup_steps, then constant
+        if warm == 0:
+            return jnp.ones(())
+        return jnp.minimum(1.0, (step + 1.0) / warm)
+    if cfg.schedule == "linear_decay":
+        # paper SFT stage 2: linear decay over the full run
+        return jnp.maximum(0.0, 1.0 - step / total)
+    if cfg.schedule == "wsd":
+        # warmup -> stable -> linear decay over the last decay_frac of steps
+        decay_start = total * (1.0 - cfg.decay_frac)
+        warm_s = jnp.minimum(1.0, (step + 1.0) / jnp.maximum(warm, 1.0)) \
+            if warm else jnp.ones(())
+        decay_s = jnp.clip((total - step) / jnp.maximum(total - decay_start, 1.0),
+                           0.0, 1.0)
+        return jnp.where(step < warm, warm_s,
+                         jnp.where(step < decay_start, 1.0, decay_s))
+    raise ValueError(f"unknown schedule {cfg.schedule!r}")

@@ -1,0 +1,6 @@
+"""Prime Sandboxes simulation: warm pools, push readiness, failure masking."""
+from .executor import (ExecResult, Sandbox, SandboxPool,
+                       SandboxProvisionError, shutdown_executor)
+
+__all__ = ["ExecResult", "Sandbox", "SandboxPool", "SandboxProvisionError",
+           "shutdown_executor"]

@@ -1,0 +1,25 @@
+"""Process-level mesh context: model code that needs a shard_map (EP MoE)
+reads the mesh from here; launchers/tests set it around tracing."""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: list = [None]
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT[0]
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = _CURRENT[0]
+    _CURRENT[0] = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CURRENT[0] = prev

@@ -1,0 +1,98 @@
+"""Context parallelism: Ring Attention over a mesh axis (paper §2.1.6).
+
+The paper scaled sequence length with PyTorch context parallelism (Ring
+Attention [24]): Q, K, V are chunked over N_cp GPUs and K/V rotate around the
+ring while each device accumulates its queries' attention online. The
+TPU-native expression is a ``shard_map`` program: sequence-sharded inputs,
+``lax.ppermute`` rotations, and the same online-softmax merge the flash
+kernel uses — XLA overlaps the permute with the local block compute.
+
+The paper found CP workable to 256k at N_cp=2 but costly (halves DP) and
+chose activation offloading instead; we implement CP faithfully so the
+§Perf pass can weigh both (our memory lever is remat + chunked loss — the
+TPU analogue of offloading, see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+NEG_INF = -1e30
+
+
+def _local_attn(q, k, v, q_off, k_off, *, causal, scale):
+    """Blockwise attention of local q [B,Sq,H,hd] against one rotating KV
+    chunk, returning unnormalized (acc, m, l) online-softmax stats."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        q_idx = q_off + jnp.arange(Sq)
+        k_idx = k_off + jnp.arange(k.shape[1])
+        mask = q_idx[:, None] >= k_idx[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # [B,h,g,Sq]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return acc, m, l
+
+
+def _merge(acc1, m1, l1, acc2, m2, l2):
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return acc1 * c1[..., None] + acc2 * c2[..., None], m, l1 * c1 + l2 * c2
+
+
+def ring_attention_body(q, k, v, *, axis: str, causal: bool = True):
+    """shard_map body: q,k,v are the *local* sequence chunks [B,S/N,H,hd]."""
+    B, Sl, Hq, hd = q.shape
+    scale = hd ** -0.5
+    n_dev = jax.lax.axis_size(axis)
+    idx = jax.lax.axis_index(axis)
+    q_off = idx * Sl
+
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    m = jnp.full((B, Hkv, G, Sl), NEG_INF, jnp.float32)
+    l = jnp.zeros((B, Hkv, G, Sl), jnp.float32)
+    acc = jnp.zeros((B, Hkv, G, Sl, hd), jnp.float32)
+    # mark the zero-init stats device-varying (they merge with varying data)
+    pvary = getattr(jax.lax, "pvary", None)
+    if pvary is not None:
+        m, l, acc = (pvary(x, (axis,)) for x in (m, l, acc))
+    perm = [(i, (i + 1) % n_dev) for i in range(n_dev)]
+
+    def step(carry, r):
+        k_c, v_c, acc, m, l = carry
+        # KV chunk currently held came from device (idx - r) mod n_dev
+        src = (idx - r) % n_dev
+        a2, m2, l2 = _local_attn(q, k_c, v_c, q_off, src * Sl,
+                                 causal=causal, scale=scale)
+        acc, m, l = _merge(acc, m, l, a2, m2, l2)
+        # rotate KV around the ring (overlappable with next block's compute)
+        k_c = jax.lax.ppermute(k_c, axis, perm)
+        v_c = jax.lax.ppermute(v_c, axis, perm)
+        return (k_c, v_c, acc, m, l), None
+
+    (k, v, acc, m, l), _ = jax.lax.scan(
+        step, (k, v, acc, m, l), jnp.arange(n_dev))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sl, Hq, hd).astype(q.dtype)
+
+
+def ring_attention(q, k, v, mesh: Mesh, *, axis: str = "model",
+                   causal: bool = True):
+    """q,k,v: [B,S,H,hd] with S divisible by mesh.shape[axis]."""
+    body = functools.partial(ring_attention_body, axis=axis, causal=causal)
+    spec = P(None, axis, None, None)
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                   out_specs=spec)
+    return fn(q, k, v)

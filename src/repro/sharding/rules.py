@@ -1,0 +1,223 @@
+"""Parameter / batch partition rules (FSDP-over-GSPMD, paper §2.1.1).
+
+The paper trains with FSDP2 (ZeRO-3): every parameter, gradient and
+optimizer-state tensor is sharded; full parameters materialize only at use.
+The JAX-native mapping is a sharding *layout*: each parameter is sharded on
+its largest evenly-divisible dimension across the FSDP axis group, and GSPMD
+inserts the all-gather-at-use / reduce-scatter-on-grad collectives that FSDP2
+performs explicitly.
+
+Assigned archs have non-power-of-two dims (25 heads, vocab 122753, d_ff
+5760...), so the rule must degrade gracefully:
+    try axes ("data","model") jointly -> ("model",) -> ("data",) -> replicate
+on each dim from largest to smallest until one divides evenly.
+
+Batch specs: train/prefill shard batch over ("pod","data"); decode shards the
+KV-cache *sequence* over "model" (sharded-softmax attention) and batch over
+("pod","data"); long_500k (batch=1) shards only the sequence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def spec_for_param(shape: tuple, mesh: Mesh, *, fsdp_axes=("data", "model"),
+                   skip_leading: int = 0, prefer: str = "largest") -> P:
+    """FSDP spec: shard one evenly-divisible dim.
+
+    ``skip_leading`` protects stacked-layer leading dims ([L, ...]) from
+    sharding — L stays replicated so lax.scan slices locally.
+
+    ``prefer``:
+      "largest"  shard the largest divisible dim (naive ZeRO-3; baseline).
+      "last"     shard the trailing (output) dim first. For matmul weights
+                 this is the non-contraction dim, so GSPMD resolves uses by
+                 all-gathering WEIGHT shards (MBs/layer) instead of partial-
+                 sum all-reducing ACTIVATIONS (GBs/layer) — the §Perf H3
+                 lever that removes the dominant collective term.
+    """
+    fsdp_axes = tuple(a for a in fsdp_axes if a in mesh.shape)
+    candidates = [fsdp_axes] if len(fsdp_axes) <= 1 else \
+        [fsdp_axes, (fsdp_axes[-1],), (fsdp_axes[0],)]
+    dims = list(range(skip_leading, len(shape)))
+    if prefer == "last":
+        dims.sort(key=lambda d: (-d, -shape[d]))
+    else:
+        dims.sort(key=lambda d: -shape[d])
+    for axes in candidates:
+        size = _axis_size(mesh, axes)
+        for d in dims:
+            if shape[d] % size == 0 and shape[d] >= size:
+                spec = [None] * len(shape)
+                spec[d] = axes if len(axes) > 1 else axes[0]
+                return P(*spec)
+    return P()  # replicate (small tensors: norms, biases, scalars)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp_axes=("data", "model"),
+                prefer: str = "largest", expert_sharding: bool = False):
+    """Pytree of PartitionSpecs. Stacked layer params ([L, ...] under
+    'layers'/'encoder') keep dim 0 replicated.
+
+    ``expert_sharding``: MoE expert stacks ([L, E, d, f]) shard the EXPERT
+    dim over "model" (expert-parallel storage+compute, §2.1.8) instead of a
+    feature dim."""
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        stacked = any(n == "layers" for n in names)
+        off = 1 if stacked else 0
+        if expert_sharding and leaf.ndim - off == 3 \
+                and names[-1] in ("w_gate", "w_up", "w_down") \
+                and "model" in mesh.shape \
+                and leaf.shape[off] % mesh.shape["model"] == 0:
+            spec = [None] * leaf.ndim
+            spec[off] = "model"
+            # storage: also shard a feature dim over "data" so expert
+            # optimizer state is fully ZeRO-3 sharded; the EP compute path
+            # gathers the data axis at use (ep_moe_dispatch).
+            if "data" in mesh.shape:
+                for d_i in (off + 1, off + 2):
+                    if leaf.shape[d_i] % mesh.shape["data"] == 0:
+                        spec[d_i] = "data"
+                        break
+            return P(*spec)
+        return spec_for_param(leaf.shape, mesh, fsdp_axes=fsdp_axes,
+                              skip_leading=off, prefer=prefer)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def param_shardings(params, mesh: Mesh, **kw):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_specs(params, mesh, **kw))
+
+
+TP_ROW_PARAMS = ("wo", "w_down", "out_proj")       # shard input (row) dim
+TP_COL_PARAMS = ("wq", "wk", "wv", "w_gate", "w_up", "in_proj", "lm_head")
+
+
+def tp_param_specs(params, mesh: Mesh, *, axis: str = "model"):
+    """Megatron-style tensor-parallel layout for SERVING (§Perf decode
+    lever, beyond-paper): matmul weights are sharded on their contraction-
+    adjacent dim so decode needs only one small activation all-reduce per
+    layer instead of gathering FSDP-sharded parameters every step.
+
+    Column-parallel (output dim sharded): wq/wk/wv, w_gate/w_up, in_proj,
+    lm_head. Row-parallel (input dim sharded): wo, w_down, out_proj. MoE
+    expert stacks shard the EXPERT dim (expert-parallel serving). Anything
+    that doesn't divide falls back to replication (weights are small).
+    """
+    n = mesh.shape[axis]
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        stacked = any(nm == "layers" for nm in names)
+        off = 1 if stacked else 0
+        name = names[-1]
+        shape = leaf.shape
+        if name in ("w_gate", "w_up", "w_down") and leaf.ndim - off == 3:
+            # MoE expert stack [L?, E, d, f]: shard experts
+            if shape[off] % n == 0:
+                spec = [None] * leaf.ndim
+                spec[off] = axis
+                return P(*spec)
+            return P()
+        if name in TP_COL_PARAMS and leaf.ndim - off == 2:
+            dim = off + 1
+        elif name in TP_ROW_PARAMS and leaf.ndim - off == 2:
+            dim = off
+        else:
+            return P()           # norms, embeddings, biases: replicate
+        if shape[dim] % n == 0:
+            spec = [None] * leaf.ndim
+            spec[dim] = axis
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation specs
+# ---------------------------------------------------------------------------
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """Axes that carry the batch: ("pod","data") when present."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_axis_size(mesh: Mesh) -> int:
+    return _axis_size(mesh, data_axes(mesh))
+
+
+def train_batch_specs(mesh: Mesh, *, has_patches=False, has_frames=False,
+                      has_positions=False) -> dict:
+    da = data_axes(mesh)
+    b = da if len(da) > 1 else (da[0] if da else None)
+    spec = {
+        "tokens": P(b, None),
+        "labels": P(b, None),
+        "loss_mask": P(b, None),
+    }
+    if has_positions:
+        spec["positions"] = P(b, None)
+    if has_patches:
+        spec["patch_embeds"] = P(b, None, None)
+    if has_frames:
+        spec["frames"] = P(b, None, None)
+    return spec
+
+
+def rl_batch_specs(mesh: Mesh, **kw) -> dict:
+    spec = train_batch_specs(mesh, **kw)
+    b = spec["tokens"][0]
+    spec.update({"infer_logp": P(b, None), "advantages": P(b, None)})
+    return spec
+
+
+def decode_state_specs(cfg, mesh: Mesh, *, batch: int,
+                       shard_seq: bool = True) -> dict:
+    """Specs for the serve_step decode state.
+
+    KV caches are [L, B, S, Hkv, hd]: batch over ("pod","data") when it
+    divides, cache sequence over "model" (sharded-softmax attention).
+    long_500k's batch=1 falls back to sequence-only sharding.
+    """
+    da = data_axes(mesh)
+    bsz = _axis_size(mesh, da)
+    b_axis = (da if len(da) > 1 else da[0]) if (da and batch % bsz == 0) else None
+    s_axis = "model" if (shard_seq and "model" in mesh.shape) else None
+    specs = {"pos": P(b_axis)}
+    if cfg.uses_attention:
+        specs["k"] = P(None, b_axis, s_axis, None, None)
+        specs["v"] = P(None, b_axis, s_axis, None, None)
+    if cfg.ssm is not None:
+        # recurrent state [L, B, nh, hd, n]: shard heads over model
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        h_axis = "model" if ("model" in mesh.shape
+                             and nh % mesh.shape["model"] == 0) else None
+        specs["ssm_conv"] = P(None, b_axis, None, None)
+        specs["ssm_h"] = P(None, b_axis, h_axis, None, None)
+    if cfg.is_encoder_decoder:
+        specs["cross_k"] = P(None, b_axis, None, None, None)
+        specs["cross_v"] = P(None, b_axis, None, None, None)
+    return specs
+
+
+def token_spec(mesh: Mesh, batch: int) -> P:
+    da = data_axes(mesh)
+    bsz = _axis_size(mesh, da)
+    if da and batch % bsz == 0:
+        return P(da if len(da) > 1 else da[0])
+    return P(None)

@@ -1,0 +1,46 @@
+"""Checkpointing: flat-path npz save/restore for TrainState pytrees.
+
+(The paper's multi-terabyte Lustre checkpoints map to a dependency-free
+flattened-npz format here; the tree structure round-trips through joined
+key paths.)
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, target):
+    """Restore into the structure of `target` (same treedef)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+        leaves = []
+        for path_elems, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path_elems)
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, leaf.dtype))
+        step = int(data["__step__"]) if "__step__" in data else None
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,81 @@
+"""Tokenizer, chat template, packing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (EOS_ID, PAD_ID, TOKENIZER, chat_to_doc,
+                        pack_documents, parse_reasoning, render_chat,
+                        synthetic_reasoning_docs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.text(max_size=100))
+def test_tokenizer_roundtrip(s):
+    assert TOKENIZER.decode(TOKENIZER.encode(s)) == s
+
+
+def test_tokenizer_eos_stops_decode():
+    ids = np.concatenate([TOKENIZER.encode("ab"), [EOS_ID],
+                          TOKENIZER.encode("cd")])
+    assert TOKENIZER.decode(ids) == "ab"
+
+
+def test_render_chat_always_thinks():
+    """§3.2: the generation prompt bakes in <|think|>."""
+    from repro.data.tokenizer import THINK
+    toks = render_chat([{"role": "user", "content": "hi"}])
+    assert toks[-1] == THINK
+
+
+def test_parse_reasoning():
+    r, a = parse_reasoning("step1 step2</think>42")
+    assert r == "step1 step2" and a == "42"
+    r, a = parse_reasoning("just answer")
+    assert r == "" and a == "just answer"
+
+
+def test_chat_to_doc_masks_only_assistant():
+    toks, mask = chat_to_doc([
+        {"role": "user", "content": "q"},
+        {"role": "assistant", "content": "a"},
+        {"role": "tool", "content": "t"},
+        {"role": "assistant", "content": "b"},
+    ])
+    assert len(toks) == len(mask)
+    assert 0 < mask.sum() < len(mask)
+    # user turn fully unmasked
+    user_len = len(TOKENIZER.encode("q")) + 3
+    assert mask[:user_len].sum() == 0
+
+
+def test_pack_documents_shapes_and_shift():
+    docs = list(synthetic_reasoning_docs(8, seed=0))
+    b = pack_documents(docs, seq_len=64, num_rows=4)
+    assert b.tokens.shape == (4, 64)
+    # labels are next tokens wherever a segment continues
+    i, j = 0, 3
+    if b.segment_ids[i, j] and b.segment_ids[i, j] == b.segment_ids[i, j + 1]:
+        assert b.labels[i, j] == b.tokens[i, j + 1]
+
+
+def test_pack_documents_positions_restart():
+    docs = [(np.arange(10, dtype=np.int32), np.ones(10, np.float32)),
+            (np.arange(10, dtype=np.int32), np.ones(10, np.float32))]
+    b = pack_documents(docs, seq_len=32, num_rows=1)
+    pos = b.positions[0]
+    seg = b.segment_ids[0]
+    # position resets to 0 at the second document start
+    starts = np.where((seg[1:] != seg[:-1]) & (seg[1:] > 0))[0] + 1
+    for s in starts:
+        assert pos[s] == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 12), seq=st.sampled_from([32, 64]),
+       seed=st.integers(0, 20))
+def test_pack_documents_loss_only_on_segments(n, seq, seed):
+    docs = list(synthetic_reasoning_docs(n, seed=seed))
+    b = pack_documents(docs, seq_len=seq)
+    # no loss outside segments; padding is PAD_ID
+    assert (b.loss_mask[b.segment_ids == 0] == 0).all()
+    assert (b.tokens[b.segment_ids == 0] == PAD_ID).all()

@@ -1,0 +1,138 @@
+"""Environments: rubric composition, tool parsing, hierarchy, EnvGroup,
+sandbox lifecycle + failure masking."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.rollouts import GenOutput
+from repro.data import TOKENIZER
+from repro.envs import (EnvGroup, Rubric, SingleTurnEnv, ToolEnv,
+                        load_deepdive_env, load_logic_env, load_math_env,
+                        parse_tool_call)
+from repro.envs.rubric import ComposedRubric, format_reward
+
+
+def run(coro):
+    return asyncio.get_event_loop().run_until_complete(coro)
+
+
+class ScriptedClient:
+    """Returns scripted completions (tokens via byte tokenizer)."""
+
+    def __init__(self, texts):
+        self.texts = list(texts)
+        self.calls = 0
+
+    async def generate(self, prompt_tokens, *, max_new_tokens, temperature):
+        text = self.texts[min(self.calls, len(self.texts) - 1)]
+        self.calls += 1
+        toks = TOKENIZER.encode(text, eos=True)
+        return GenOutput(tokens=toks,
+                         logprobs=-0.5 * np.ones(len(toks), np.float32),
+                         versions=np.zeros(len(toks), np.int32))
+
+
+# -- rubric -----------------------------------------------------------------
+
+
+def test_rubric_weighted_sum():
+    r = Rubric([lambda **kw: 1.0, lambda **kw: 0.5], weights=[2.0, 4.0])
+    score, breakdown = run(r.score("p", "c", "a"))
+    assert score == 2.0 + 2.0
+    assert len(breakdown) == 2
+
+
+def test_rubric_async_reward_fn():
+    async def slow(**kw):
+        await asyncio.sleep(0)
+        return 0.25
+
+    r = Rubric([slow])
+    score, _ = run(r.score("p", "c", "a"))
+    assert score == 0.25
+
+
+def test_composed_rubric():
+    r = ComposedRubric([Rubric([format_reward]),
+                        Rubric([lambda **kw: 1.0])], weights=[0.2, 0.8])
+    score, bd = run(r.score("p", "no think close", "a"))
+    assert abs(score - 0.8) < 1e-9
+
+
+# -- tool parsing -----------------------------------------------------------
+
+
+def test_parse_tool_call():
+    assert parse_tool_call("x <tool_call>search(key1)</tool_call> y") == \
+        ("search", ["key1"])
+    assert parse_tool_call("<tool_call>f(a, b)</tool_call>") == ("f", ["a", "b"])
+    assert parse_tool_call("no call here") is None
+
+
+# -- single turn ------------------------------------------------------------
+
+
+def test_math_env_rollout_reward():
+    env = load_math_env(n=4, seed=0)
+    row = env.dataset[0]
+    ans = row["answer"]
+    client = ScriptedClient([f"thinking</think>{ans}"])
+    rollout = run(env.rollout(client, row))
+    assert rollout.reward == 1.0
+    assert rollout.problem_id == row["id"]
+    assert len(rollout.completion_tokens) > 0
+    assert rollout.completion_mask.sum() == len(rollout.completion_tokens)
+
+    bad = run(env.rollout(ScriptedClient(["</think>99999"]), row))
+    assert bad.reward == 0.0
+
+
+def test_logic_env_scoring():
+    env = load_logic_env(n=4, seed=1)
+    row = env.dataset[0]
+    good = run(env.rollout(ScriptedClient([f"</think>{row['answer']}"]), row))
+    assert good.reward == 1.0
+
+
+# -- multi-turn tool env ----------------------------------------------------
+
+
+def test_deepdive_tool_loop():
+    env = load_deepdive_env(n=2, seed=0)
+    row = env.dataset[0]
+    key = row["id"].replace("dd-", "key")
+    client = ScriptedClient([
+        f"</think><tool_call>search({key})</tool_call>",
+        f"</think>the answer is {row['answer']}",
+    ])
+    rollout = run(env.rollout(client, row))
+    assert rollout.reward == 1.0
+    assert client.calls == 2
+    # env tool-result tokens must be mask-0
+    assert rollout.completion_mask.min() == 0.0
+    assert rollout.info["turns"] == 2
+
+
+def test_tool_env_unknown_tool():
+    env = ToolEnv([{"id": "t0", "prompt": "x", "answer": "y"}],
+                  Rubric([lambda **kw: 0.0]), tools={}, max_turns=2)
+    client = ScriptedClient(["<tool_call>nope(1)</tool_call>", "done"])
+    rollout = run(env.rollout(client, env.dataset[0]))
+    assert client.calls == 2      # error string returned, loop continued
+
+
+# -- env group ----------------------------------------------------------
+
+
+def test_env_group_routes_by_task():
+    math = load_math_env(n=2, seed=0)
+    logic = load_logic_env(n=2, seed=0)
+    group = EnvGroup([math, logic], names=["math", "logic"])
+    assert len(group.dataset) == 4
+    row = next(r for r in group.dataset if r["task"] == "logic")
+    out = run(group.rollout(
+        ScriptedClient([f"</think>{row['answer']}"]), row))
+    assert out.reward == 1.0
+    assert out.env_id == "logic"
+    assert out.problem_id.startswith("logic/")

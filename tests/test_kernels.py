@@ -1,0 +1,196 @@
+"""Pallas kernel tests: shape/dtype sweeps + hypothesis properties vs the
+pure-jnp oracles in repro.kernels.ref (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 3e-5, jnp.bfloat16: 5e-2}
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,hd", [
+    (1, 32, 2, 2, 16),       # MHA
+    (2, 96, 4, 2, 32),       # GQA, non-divisible block tail
+    (1, 128, 8, 1, 64),      # MQA
+    (2, 64, 25, 5, 16),      # hymba's 25/5 heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, S, Hq, Hkv, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _rand(ks[0], (B, S, Hq, hd), dtype)
+    k = _rand(ks[1], (B, S, Hkv, hd), dtype)
+    v = _rand(ks[2], (B, S, Hkv, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=ATOL[dtype], rtol=ATOL[dtype])
+
+
+@pytest.mark.parametrize("window", [8, 24, 64])
+def test_flash_attention_sliding_window(window):
+    B, S, Hq, Hkv, hd = 2, 72, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, S, Hq, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, Hkv, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=16, block_k=16)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(8, 80), Hkv=st.sampled_from([1, 2]),
+       group=st.sampled_from([1, 3]), hd=st.sampled_from([8, 16]))
+def test_flash_attention_property(S, Hkv, group, hd):
+    """Kernel == oracle for arbitrary (S, GQA grouping, head_dim)."""
+    B, Hq = 1, Hkv * group
+    ks = jax.random.split(jax.random.PRNGKey(S * 131 + hd), 3)
+    q = _rand(ks[0], (B, S, Hq, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, Hkv, hd), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, exp, atol=5e-5, rtol=5e-5)
+
+
+def test_flash_attention_rows_are_convex_combinations():
+    """Attention output rows lie in the convex hull of V rows: max |out|
+    <= max |v| (softmax weights sum to 1)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (1, 40, 2, 16), jnp.float32)
+    k = _rand(ks[1], (1, 40, 2, 16), jnp.float32)
+    v = _rand(ks[2], (1, 40, 2, 16), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    assert float(jnp.abs(out).max()) <= float(jnp.abs(v).max()) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("E,C,d,f", [(2, 16, 8, 8), (4, 40, 24, 16),
+                                     (8, 64, 128, 32), (3, 17, 9, 5)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_shapes(E, C, d, f, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    x = _rand(ks[0], (E, C, d), dtype)
+    w = _rand(ks[1], (E, d, f), dtype)
+    sizes = jax.random.randint(ks[2], (E,), 0, C + 1).astype(jnp.int32)
+    y = ops.grouped_matmul(x, w, sizes, block_c=16, block_f=8, block_k=8)
+    exp = ref.grouped_matmul_ref(x, w, sizes)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=ATOL[dtype] * d, rtol=ATOL[dtype])
+
+
+@settings(max_examples=10, deadline=None)
+@given(E=st.integers(1, 6), C=st.integers(1, 48), d=st.sampled_from([8, 24]),
+       f=st.sampled_from([8, 24]), seed=st.integers(0, 99))
+def test_grouped_matmul_property(E, C, d, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(ks[0], (E, C, d), jnp.float32)
+    w = _rand(ks[1], (E, d, f), jnp.float32)
+    sizes = jax.random.randint(ks[2], (E,), 0, C + 1).astype(jnp.int32)
+    y = ops.grouped_matmul(x, w, sizes, block_c=16, block_f=8, block_k=8)
+    exp = ref.grouped_matmul_ref(x, w, sizes)
+    np.testing.assert_allclose(y, exp, atol=1e-4 * d, rtol=1e-4)
+
+
+def test_grouped_matmul_zeroes_padding():
+    """Rows beyond group_sizes[e] must be exactly zero."""
+    E, C, d, f = 3, 32, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = _rand(ks[0], (E, C, d), jnp.float32)
+    w = _rand(ks[1], (E, d, f), jnp.float32)
+    sizes = jnp.array([10, 0, 32], jnp.int32)
+    y = ops.grouped_matmul(x, w, sizes, block_c=8, block_f=8, block_k=8)
+    assert float(jnp.abs(y[0, 10:]).max()) == 0.0
+    assert float(jnp.abs(y[1]).max()) == 0.0
+
+
+def test_grouped_mlp_matches_dense():
+    """grouped_mlp == per-expert dense SwiGLU on full groups."""
+    E, C, d, f = 2, 16, 12, 20
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    x = _rand(ks[0], (E, C, d), jnp.float32)
+    wg = _rand(ks[1], (E, d, f), jnp.float32)
+    wu = _rand(ks[2], (E, d, f), jnp.float32)
+    wd = _rand(ks[3], (E, f, d), jnp.float32)
+    sizes = jnp.full((E,), C, jnp.int32)
+    y = ops.grouped_mlp(x, wg, wu, wd, sizes)
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg))
+    up = jnp.einsum("ecd,edf->ecf", x, wu)
+    exp = jnp.einsum("ecf,efd->ecd", gate * up, wd)
+    np.testing.assert_allclose(y, exp, atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(key, B, S, nh, hd, n):
+    ks = jax.random.split(key, 5)
+    xh = _rand(ks[0], (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (B, S, nh), jnp.float32))
+    dA = -jnp.abs(_rand(ks[2], (B, S, nh), jnp.float32)) * 0.2
+    Bh = _rand(ks[3], (B, S, nh, n), jnp.float32)
+    Ch = _rand(ks[4], (B, S, nh, n), jnp.float32)
+    h0 = jnp.zeros((B, nh, hd, n), jnp.float32)
+    return xh, dt, dA, Bh, Ch, h0
+
+
+@pytest.mark.parametrize("B,S,nh,hd,n,chunk", [
+    (1, 32, 2, 16, 8, 8), (2, 64, 3, 16, 8, 16),
+    (1, 100, 2, 32, 16, 32),     # padded tail
+    (2, 24, 4, 8, 4, 24),        # single chunk
+])
+def test_ssd_scan_shapes(B, S, nh, hd, n, chunk):
+    args = _ssd_inputs(jax.random.PRNGKey(B * 100 + S), B, S, nh, hd, n)
+    y, hT = ops.ssd_scan(*args, chunk=chunk)
+    ye, hTe = ref.ssd_scan_ref(*args)
+    np.testing.assert_allclose(y, ye, atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(hT, hTe, atol=2e-4, rtol=2e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.integers(4, 70), chunk=st.sampled_from([4, 16, 32]),
+       seed=st.integers(0, 50))
+def test_ssd_scan_chunk_invariance(S, chunk, seed):
+    """Result must not depend on the chunk size (the SSD identity)."""
+    args = _ssd_inputs(jax.random.PRNGKey(seed), 1, S, 2, 8, 4)
+    y1, h1 = ops.ssd_scan(*args, chunk=chunk)
+    y2, h2 = ref.ssd_scan_ref(*args)
+    np.testing.assert_allclose(y1, y2, atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(h1, h2, atol=2e-4, rtol=2e-3)
+
+
+def test_ssd_scan_initial_state_carries():
+    """Scanning [a;b] == scan(b) seeded with state from scan(a)."""
+    B, S, nh, hd, n = 1, 48, 2, 8, 4
+    args = _ssd_inputs(jax.random.PRNGKey(9), B, S, nh, hd, n)
+    xh, dt, dA, Bh, Ch, h0 = args
+    y_full, hT_full = ops.ssd_scan(*args, chunk=16)
+    half = S // 2
+    y1, h_mid = ops.ssd_scan(xh[:, :half], dt[:, :half], dA[:, :half],
+                             Bh[:, :half], Ch[:, :half], h0, chunk=16)
+    y2, hT = ops.ssd_scan(xh[:, half:], dt[:, half:], dA[:, half:],
+                          Bh[:, half:], Ch[:, half:], h_mid, chunk=16)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=2e-4, rtol=2e-3)
+    np.testing.assert_allclose(hT, hT_full, atol=2e-4, rtol=2e-3)

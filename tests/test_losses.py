@@ -1,0 +1,117 @@
+"""IcePop (Eq. 1-2) / CISPO / GSPO objective tests + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import RLConfig
+from repro.core.losses import (cispo_loss, group_advantages, gspo_loss,
+                               icepop_loss, rollout_kill_mask)
+
+CFG = RLConfig(alpha=0.5, beta=5.0, rollout_kill_threshold=1e-5)
+
+
+def _batch(B=4, S=8, seed=0, adv=None):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    infer = -jnp.abs(jax.random.normal(ks[0], (B, S))) - 0.5
+    return {
+        "infer_logp": infer,
+        "advantages": (adv if adv is not None
+                       else jax.random.normal(ks[1], (B, S))),
+        "loss_mask": jnp.ones((B, S)),
+    }
+
+
+def test_icepop_onpolicy_equals_pg():
+    """On-policy (train == infer) IcePop loss = -mean(advantages):
+    k == 1 everywhere, inside the band, M(k)=k=1."""
+    b = _batch()
+    loss, m = icepop_loss(b["infer_logp"], b, CFG)
+    np.testing.assert_allclose(loss, -jnp.mean(b["advantages"]), rtol=1e-6)
+    assert float(m["masked_frac"]) == 0.0
+    assert float(m["killed_frac"]) == 0.0
+
+
+def test_icepop_band_masks_tokens():
+    """Tokens with ratio outside [alpha, beta] contribute nothing."""
+    b = _batch(B=1, S=4, adv=jnp.ones((1, 4)))
+    # ratios: 1.0 (in), 10 (out high), 0.1 (out low), 2.0 (in)
+    delta = jnp.log(jnp.array([[1.0, 10.0, 0.1, 2.0]]))
+    train = b["infer_logp"] + delta
+    loss, m = icepop_loss(train, b, CFG)
+    # objective = (1*1 + 0 + 0 + 2*1) / 4
+    np.testing.assert_allclose(loss, -(1.0 + 2.0) / 4.0, rtol=1e-5)
+    np.testing.assert_allclose(m["masked_frac"], 0.5, rtol=1e-5)
+
+
+def test_rollout_kill_on_tiny_ratio():
+    """Any token under the kill threshold kills the WHOLE rollout."""
+    b = _batch(B=2, S=4, adv=jnp.ones((2, 4)))
+    delta = jnp.zeros((2, 4)).at[0, 2].set(jnp.log(1e-7))  # row 0 poisoned
+    train = b["infer_logp"] + delta
+    mask = rollout_kill_mask(train, b["infer_logp"], b["loss_mask"],
+                             CFG.rollout_kill_threshold)
+    assert float(mask[0].sum()) == 0.0       # entire rollout 0 masked
+    assert float(mask[1].sum()) == 4.0
+    loss, m = icepop_loss(train, b, CFG)
+    np.testing.assert_allclose(m["killed_frac"], 0.5, rtol=1e-5)
+
+
+def test_icepop_gradient_direction():
+    """Positive advantage => gradient ascent on logp (loss grad < 0)."""
+    b = _batch(B=1, S=2, adv=jnp.ones((1, 2)))
+    g = jax.grad(lambda lp: icepop_loss(lp, b, CFG)[0])(b["infer_logp"])
+    assert bool(jnp.all(g < 0))      # increasing logp decreases loss
+    b2 = dict(b, advantages=-jnp.ones((1, 2)))
+    g2 = jax.grad(lambda lp: icepop_loss(lp, b2, CFG)[0])(b["infer_logp"])
+    assert bool(jnp.all(g2 > 0))
+
+
+def test_icepop_masked_tokens_have_zero_grad():
+    b = _batch(B=1, S=3, adv=jnp.ones((1, 3)))
+    delta = jnp.log(jnp.array([[1.0, 100.0, 1.0]]))  # middle out of band
+    train = b["infer_logp"] + delta
+    g = jax.grad(lambda lp: icepop_loss(lp, b, CFG)[0])(train)
+    assert float(g[0, 1]) == 0.0     # IcePop: zeroed, not clipped
+    # CISPO keeps a clipped gradient on the same token
+    gc = jax.grad(lambda lp: cispo_loss(lp, b, CFG)[0])(train)
+    assert float(gc[0, 1]) != 0.0
+
+
+def test_gspo_sequence_level_ratio():
+    """GSPO uses ONE ratio per sequence: uniform token shift of log(2)
+    with eps clip ~0 clips the whole sequence to ~adv."""
+    B, S = 2, 4
+    b = _batch(B, S, adv=jnp.ones((B, S)))
+    train = b["infer_logp"] + jnp.log(2.0)
+    loss, m = gspo_loss(train, b, CFG, eps=0.1)
+    # s = 2 > 1+eps -> clipped at 1.1; obj = min(2*1, 1.1*1) = 1.1
+    np.testing.assert_allclose(loss, -1.1, rtol=1e-5)
+    np.testing.assert_allclose(m["clipped_frac"], 1.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(G=st.sampled_from([2, 4, 8]), n=st.integers(1, 5),
+       seed=st.integers(0, 99))
+def test_group_advantages_zero_mean(G, n, seed):
+    rewards = jax.random.normal(jax.random.PRNGKey(seed), (n * G,))
+    adv = group_advantages(rewards, G)
+    per_group = adv.reshape(n, G).sum(axis=1)
+    np.testing.assert_allclose(per_group, 0.0, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 99), algo=st.sampled_from(["icepop", "cispo"]))
+def test_losses_invariant_to_masked_tokens(seed, algo):
+    """Changing train_logp on loss_mask==0 tokens never changes the loss."""
+    from repro.core.losses import LOSSES
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    b = _batch(B=2, S=6, seed=seed)
+    mask = (jax.random.uniform(ks[0], (2, 6)) > 0.4).astype(jnp.float32)
+    b["loss_mask"] = mask
+    train = b["infer_logp"] + 0.1
+    l1, _ = LOSSES[algo](train, b, CFG)
+    noise = jax.random.normal(ks[1], (2, 6)) * (1 - mask) * 3.0
+    l2, _ = LOSSES[algo](train + noise, b, CFG)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)

@@ -1,0 +1,140 @@
+"""Rollout packing, staleness filtering, difficulty pools."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import RLConfig
+from repro.core.filtering import DifficultyPools, filter_zero_signal
+from repro.core.rollouts import (Rollout, RolloutGroup, filter_stale,
+                                 pack_batch)
+
+
+def _rollout(pid="p", prompt=(5, 6, 7), comp=(8, 9), reward=0.0, version=0,
+             masked=False, cmask=None):
+    c = np.asarray(comp, np.int32)
+    return Rollout(
+        problem_id=pid, prompt_tokens=np.asarray(prompt, np.int32),
+        completion_tokens=c,
+        infer_logprobs=-0.5 * np.ones(len(c), np.float32),
+        policy_versions=np.full(len(c), version, np.int32),
+        reward=reward, masked=masked,
+        completion_mask=None if cmask is None else np.asarray(cmask,
+                                                              np.float32))
+
+
+def test_pack_batch_labels_are_next_tokens():
+    g = RolloutGroup("p", [_rollout(comp=(8, 9, 1), reward=1.0),
+                           _rollout(comp=(8, 2), reward=0.0)])
+    batch = pack_batch([g], seq_len=8)
+    row = batch["tokens"][0]
+    # sequence = [5,6,7,8,9,1]; inputs = first 5, labels shifted
+    np.testing.assert_array_equal(row[:5], [5, 6, 7, 8, 9])
+    np.testing.assert_array_equal(batch["labels"][0][:5], [6, 7, 8, 9, 1])
+    # completion starts at position P-1=2 (predicting token 8)
+    np.testing.assert_array_equal(batch["loss_mask"][0][:6],
+                                  [0, 0, 1, 1, 1, 0])
+    # group-mean baseline: rewards (1,0) -> advantages (+0.5,-0.5)
+    assert batch["advantages"][0][2] == 0.5
+    assert batch["advantages"][1][2] == -0.5
+
+
+def test_pack_batch_masked_rollout_contributes_nothing():
+    g = RolloutGroup("p", [_rollout(reward=1.0),
+                           _rollout(reward=0.0, masked=True)])
+    batch = pack_batch([g], seq_len=8)
+    assert batch["loss_mask"][1].sum() == 0.0
+
+
+def test_pack_batch_completion_mask_zeroes_env_tokens():
+    """Multi-turn: environment-injected tokens are excluded from the loss."""
+    g = RolloutGroup("p", [
+        _rollout(comp=(8, 9, 3, 4, 10), reward=1.0, cmask=(1, 1, 0, 0, 1)),
+        _rollout(comp=(8, 9), reward=0.0)])
+    batch = pack_batch([g], seq_len=10)
+    np.testing.assert_array_equal(batch["loss_mask"][0][2:7],
+                                  [1, 1, 0, 0, 1])
+
+
+def test_pack_batch_truncates_to_seq_len():
+    g = RolloutGroup("p", [_rollout(comp=tuple(range(20)), reward=1.0),
+                           _rollout(comp=(1,), reward=0.0)])
+    batch = pack_batch([g], seq_len=6)
+    assert batch["tokens"].shape == (2, 6)
+
+
+def test_filter_stale_drops_old_rollouts():
+    cfg = RLConfig(max_off_policy_steps=8)
+    g = RolloutGroup("p", [_rollout(version=v, reward=float(v % 2))
+                           for v in (0, 5, 10, 12)])
+    kept, dropped = filter_stale([g], current_step=12, cfg=cfg)
+    # versions 0 and... 12-0=12>8 drop, 12-5=7 keep, 2 keep, 0 keep
+    assert dropped == 1
+    assert len(kept[0].rollouts) == 3
+
+
+def test_filter_stale_drops_group_below_two():
+    cfg = RLConfig(max_off_policy_steps=2)
+    g = RolloutGroup("p", [_rollout(version=0), _rollout(version=1)])
+    kept, dropped = filter_stale([g], current_step=10, cfg=cfg)
+    assert kept == [] and dropped == 2
+
+
+def test_env_token_versions_do_not_trigger_staleness():
+    """Env-injected tokens carry version -1 but must not count."""
+    r = _rollout(comp=(8, 9, 3), version=7, cmask=(1, 1, 0))
+    r.policy_versions = np.array([7, 7, -1], np.int32)
+    assert r.min_policy_version == 7
+
+
+def test_zero_signal_filter():
+    all_fail = RolloutGroup("a", [_rollout(reward=0.0), _rollout(reward=0.0)])
+    all_pass = RolloutGroup("b", [_rollout(reward=1.0), _rollout(reward=1.0)])
+    mixed = RolloutGroup("c", [_rollout(reward=1.0), _rollout(reward=0.0)])
+    kept, dropped = filter_zero_signal([all_fail, all_pass, mixed])
+    assert [g.problem_id for g in kept] == ["c"] and dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# difficulty pools (§2.1.5)
+# ---------------------------------------------------------------------------
+
+
+def _group_with_rate(pid, rate, G=4):
+    n_pass = int(round(rate * G))
+    return RolloutGroup(pid, [_rollout(pid, reward=1.0)] * n_pass +
+                        [_rollout(pid, reward=0.0)] * (G - n_pass))
+
+
+def test_pools_classify_by_solve_rate():
+    pools = DifficultyPools(["e", "n", "h"])
+    pools.update(_group_with_rate("e", 0.75))   # easy-ish (0.75 < retire)
+    pools.update(_group_with_rate("n", 0.5))
+    pools.update(_group_with_rate("h", 0.0))
+    p = pools.pools()
+    assert "h" in p["hard"] and "n" in p["normal"]
+
+
+def test_pools_retire_fully_solved():
+    """Pass rate 1.0 -> never sampled again (paper §3.3)."""
+    pools = DifficultyPools(["a", "b"])
+    pools.update(_group_with_rate("a", 1.0))
+    assert pools.stats["a"].retired
+    for _ in range(20):
+        assert "a" not in pools.sample(1)
+
+
+def test_pools_sample_respects_mix():
+    ids = [f"p{i}" for i in range(30)]
+    pools = DifficultyPools(ids, mix={"easy": 0.0, "normal": 1.0, "hard": 0.0},
+                            seed=1)
+    out = pools.sample(10)
+    assert len(out) == 10 and len(set(out)) == 10
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 20), k=st.integers(1, 10))
+def test_pools_sample_size_property(n, k):
+    pools = DifficultyPools([f"p{i}" for i in range(n)], seed=k)
+    out = pools.sample(min(k, n))
+    assert len(out) == min(k, n)
+    assert len(set(out)) == len(out)          # no duplicates

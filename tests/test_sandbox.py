@@ -1,0 +1,157 @@
+"""Prime Sandboxes simulation: execution, timeouts, warm pools, density."""
+import asyncio
+
+import pytest
+
+from repro.sandbox import SandboxPool, SandboxProvisionError
+
+
+def run(coro):
+    return asyncio.get_event_loop().run_until_complete(coro)
+
+
+@pytest.fixture(scope="module")
+def pool():
+    return SandboxPool(warm_size=4, packing_factor=8)
+
+
+def test_execute_ok(pool):
+    async def go():
+        sb = await pool.acquire()
+        res = await sb.execute("print(6*7)")
+        pool.release(sb)
+        return res
+
+    res = run(go())
+    assert res.ok and res.stdout.strip() == "42"
+
+
+def test_execute_error(pool):
+    async def go():
+        sb = await pool.acquire()
+        res = await sb.execute("raise ValueError('boom')")
+        pool.release(sb)
+        return res
+
+    res = run(go())
+    assert res.status == "error" and "boom" in res.error
+
+
+def test_execute_timeout(pool):
+    async def go():
+        sb = await pool.acquire()
+        res = await sb.execute("while True: pass", timeout=0.5)
+        pool.release(sb)
+        return res
+
+    res = run(go())
+    assert res.status == "timeout"
+
+
+def test_warm_pool_hit_is_instant():
+    p = SandboxPool(warm_size=2, cold_boot_s=0.2)
+
+    async def go():
+        import time
+        t0 = time.monotonic()
+        sb = await p.acquire()
+        warm_t = time.monotonic() - t0
+        p.release(sb)
+        return warm_t
+
+    assert run(go()) < 0.1
+    assert p.stats()["warm_hits"] == 1
+
+
+def test_cold_boot_for_custom_image():
+    p = SandboxPool(warm_size=1, cold_boot_s=0.05)
+
+    async def go():
+        sb = await p.acquire("custom:image")
+        p.release(sb)
+
+    run(go())
+    assert p.stats()["cold_boots"] == 1
+
+
+def test_packing_factor_queues_not_fails():
+    """Beyond the density limit, acquisition queues (Burstable QoS) and
+    proceeds when a sandbox is released."""
+    p = SandboxPool(warm_size=8, packing_factor=2)
+
+    async def go():
+        a = await p.acquire()
+        b = await p.acquire()
+        acquired = []
+
+        async def third():
+            c = await p.acquire()
+            acquired.append(c)
+            p.release(c)
+
+        t = asyncio.ensure_future(third())
+        await asyncio.sleep(0.02)
+        assert not acquired            # still queued
+        p.release(a)
+        await t
+        assert acquired
+        p.release(b)
+
+    run(go())
+    assert p.stats()["peak_live"] == 2
+
+
+def test_provision_failure_raises():
+    p = SandboxPool(failure_rate=1.0)
+
+    async def go():
+        await p.acquire()
+
+    with pytest.raises(SandboxProvisionError):
+        run(go())
+
+
+def test_code_env_masks_on_sandbox_failure():
+    """§3.1.2: on any sandbox failure, the completion is masked out."""
+    import numpy as np
+    from repro.core.rollouts import GenOutput
+    from repro.data import TOKENIZER
+    from repro.envs import load_code_env
+
+    failing = SandboxPool(failure_rate=1.0)
+    env = load_code_env(failing, n=1)
+
+    class C:
+        async def generate(self, prompt_tokens, *, max_new_tokens,
+                           temperature):
+            toks = TOKENIZER.encode("```python\ndef f(x): return x\n```",
+                                    eos=True)
+            return GenOutput(toks, -0.5 * np.ones(len(toks), np.float32),
+                             np.zeros(len(toks), np.int32))
+
+    rollout = run(env.rollout(C(), env.dataset[0]))
+    assert rollout.masked
+
+
+def test_code_env_rewards_passing_solution():
+    import numpy as np
+    from repro.core.rollouts import GenOutput
+    from repro.data import TOKENIZER
+    from repro.envs import load_code_env
+
+    pool = SandboxPool(warm_size=2)
+    env = load_code_env(pool, n=1, seed=0)
+    row = env.dataset[0]
+    sol = row["answer"]
+
+    class C:
+        async def generate(self, prompt_tokens, *, max_new_tokens,
+                           temperature):
+            toks = TOKENIZER.encode(f"```python\n{sol}\n```", eos=True)
+            return GenOutput(toks, -0.5 * np.ones(len(toks), np.float32),
+                             np.zeros(len(toks), np.int32))
+
+    rollout = run(env.rollout(C(), row))
+    assert not rollout.masked
+    assert rollout.reward == 1.0
+    assert rollout.info.get("tests_passed") == rollout.info.get("tests_total")

@@ -1,0 +1,154 @@
+"""Partition rules (hypothesis properties) + ring attention + dry-run
+pipeline on small meshes (subprocess, multi-device)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from tests.utils import check, run_with_devices
+
+
+# -- partition rules (pure logic; no devices needed) -------------------------
+
+
+def _mesh_stub(shape_dict):
+    class M:
+        shape = shape_dict
+    return M()
+
+
+from repro.sharding.rules import spec_for_param  # noqa: E402
+
+
+@settings(max_examples=50, deadline=None)
+@given(dims=st.lists(st.integers(1, 6000), min_size=1, max_size=4),
+       data=st.sampled_from([4, 16]), model=st.sampled_from([4, 16]))
+def test_spec_divisibility_property(dims, data, model):
+    """Whatever the tensor shape, the chosen spec must divide evenly."""
+    mesh = _mesh_stub({"data": data, "model": model})
+    spec = spec_for_param(tuple(dims), mesh)
+    for d, s in zip(dims, spec):
+        if s is None:
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        size = math.prod(mesh.shape[a] for a in axes)
+        assert d % size == 0
+
+
+def test_spec_prefers_joint_axes():
+    mesh = _mesh_stub({"data": 16, "model": 16})
+    spec = spec_for_param((4096, 11008), mesh)
+    assert ("data", "model") in spec or spec == (("data", "model"), None) \
+        or tuple(spec)[1] == ("data", "model")
+
+
+def test_spec_replicates_small():
+    mesh = _mesh_stub({"data": 16, "model": 16})
+    assert tuple(spec_for_param((7,), mesh)) == ()
+
+
+def test_spec_skips_stacked_layer_dim():
+    mesh = _mesh_stub({"data": 16, "model": 16})
+    spec = spec_for_param((48, 4096, 4096), mesh, skip_leading=1)
+    assert spec[0] is None
+
+
+def test_assigned_arch_odd_dims_all_get_specs():
+    """The awkward dims from the assignment (25 heads, vocab 122753,
+    d_ff 5760) must resolve without error on the production mesh."""
+    mesh = _mesh_stub({"data": 16, "model": 16})
+    for shape in [(1600, 1600), (122753, 2304), (2304, 5760), (25, 64),
+                  (32001, 1600), (3, 98)]:
+        spec_for_param(shape, mesh)   # must not raise
+
+
+# -- ring attention (context parallelism, §2.1.6) ----------------------------
+
+
+def test_ring_attention_matches_reference():
+    res = run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.sharding import ring_attention
+from repro.kernels.ref import flash_attention_ref
+mesh = jax.make_mesh((8,), ('model',),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+for (S, Hq, Hkv, hd) in [(64, 4, 2, 16), (128, 8, 8, 32)]:
+    q = jax.random.normal(ks[0], (2, S, Hq, hd))
+    k = jax.random.normal(ks[1], (2, S, Hkv, hd))
+    v = jax.random.normal(ks[2], (2, S, Hkv, hd))
+    for causal in (True, False):
+        out = ring_attention(q, k, v, mesh, causal=causal)
+        exp = flash_attention_ref(q, k, v, causal=causal)
+        err = float(jnp.abs(out - exp).max())
+        assert err < 1e-5, (S, causal, err)
+print('ok')
+""")
+    check(res)
+
+
+def test_ring_attention_collectives_are_permutes():
+    """Ring attention must lower to collective-permute rotations (the
+    Ring Attention communication pattern), not all-gathers of KV."""
+    res = run_with_devices("""
+import jax, jax.numpy as jnp, functools
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.sharding import ring_attention
+mesh = jax.make_mesh((8,), ('model',),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+spec = NamedSharding(mesh, P(None, 'model', None, None))
+x = jax.ShapeDtypeStruct((2, 128, 4, 16), jnp.float32, sharding=spec)
+f = jax.jit(functools.partial(ring_attention, mesh=mesh, causal=True))
+txt = f.lower(x, x, x).as_text()
+n_permute = txt.count('collective_permute')
+assert n_permute >= 2, n_permute
+assert 'all_gather' not in txt
+print('ok')
+""")
+    check(res)
+
+
+# -- dry-run pipeline on a small mesh ----------------------------------------
+
+
+def test_dryrun_pipeline_small_mesh():
+    """run_pair lowers + compiles + produces roofline terms on a 2x2 mesh
+    with shrunken shapes for a dense, an moe and an ssm arch."""
+    res = run_with_devices("""
+import repro.configs.shapes as shp
+from repro.configs.base import InputShape
+shp.SHAPES['train_4k'] = InputShape('train_4k', 64, 4, 'train')
+shp.SHAPES['decode_32k'] = InputShape('decode_32k', 128, 4, 'decode')
+shp.SHAPES['long_500k'] = InputShape('long_500k', 4096, 1, 'decode')
+from repro.launch.mesh import make_mesh
+from repro.launch.analysis import run_pair
+mesh = make_mesh((2, 2), ('data', 'model'))
+for arch, shape in [('yi-9b', 'train_4k'), ('qwen2-moe-a2.7b', 'train_4k'),
+                    ('mamba2-370m', 'decode_32k'),
+                    ('h2o-danube-3-4b', 'long_500k')]:
+    out = run_pair(arch, shape, mesh)
+    assert out['t_compute'] > 0 and out['t_memory'] > 0
+    assert out['bottleneck'] in ('compute', 'memory', 'collective')
+    assert out['collective_ops'] > 0
+print('ok')
+""", n_devices=4, timeout=900)
+    check(res)
+
+
+def test_multi_pod_mesh_lowering():
+    """The pod axis must shard: lowering on (2,2,2) with batch over
+    (pod,data) compiles."""
+    res = run_with_devices("""
+import repro.configs.shapes as shp
+from repro.configs.base import InputShape
+shp.SHAPES['train_4k'] = InputShape('train_4k', 64, 8, 'train')
+from repro.launch.mesh import make_mesh
+from repro.launch.analysis import run_pair
+mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
+out = run_pair('minicpm-2b', 'train_4k', mesh)
+assert out['n_chips'] == 8
+print('ok')
+""", n_devices=8, timeout=900)
+    check(res)

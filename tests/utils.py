@@ -1,0 +1,25 @@
+"""Helpers for multi-device tests: run a snippet in a subprocess with
+xla_force_host_platform_device_count set (the main pytest process must keep
+seeing one device)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600
+                     ) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    prog = textwrap.dedent(code)
+    return subprocess.run([sys.executable, "-c", prog], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def check(res: subprocess.CompletedProcess) -> None:
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
