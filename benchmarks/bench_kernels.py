@@ -3,6 +3,8 @@ timing, TPU numbers come from the roofline). Reports us/call vs the jnp
 reference path so regressions in kernel structure are visible."""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -40,6 +42,38 @@ def main():
     us = time_us(lambda: ops.ssd_scan(xh, dt, dA, Bh, Ch, h0, chunk=64))
     us_ref = time_us(lambda: ref.ssd_scan_ref(xh, dt, dA, Bh, Ch, h0))
     rows.append(("kernel_ssd_scan_interp", us, f"ref={us_ref:.0f}us"))
+
+    # fused decode tick (serve_step + sampling in ONE dispatch) vs the
+    # host path (jitted serve_step, then eager sampling ops) — the §2.1.3
+    # engine hot path the continuous-batching figure runs on
+    from repro.configs import get_config
+    from repro.models import (init_decode_state, init_params, sample_step,
+                              serve_step)
+    cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
+                              vocab_size=512, num_layers=2)
+    from repro.configs.base import ParallelConfig
+    pcfg = ParallelConfig(remat="none", loss_chunk=0)
+    params = init_params(ks[0], cfg, dtype=jnp.float32)
+    slots = 8
+    state = init_decode_state(cfg, slots, 128, jnp.float32)
+    token = jnp.zeros((slots,), jnp.int32)
+    temps = jnp.ones((slots,), jnp.float32)
+    rng = jax.random.PRNGKey(0)
+    fused = jax.jit(lambda p, s, t, tm, r: sample_step(p, s, t, tm, r, cfg,
+                                                       pcfg))
+    serve = jax.jit(lambda p, s, t: serve_step(p, s, t, cfg, pcfg))
+
+    def host_tick():
+        r, k = jax.random.split(rng)
+        logits, _ = serve(params, state, token)
+        scaled = logits / jnp.maximum(temps[:, None], 1e-4)
+        toks = jax.random.categorical(k, scaled, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return [int(toks[i]) for i in range(slots)], logp
+
+    us = time_us(lambda: fused(params, state, token, temps, rng))
+    us_ref = time_us(host_tick)
+    rows.append(("kernel_fused_decode_tick", us, f"host={us_ref:.0f}us"))
     return rows
 
 

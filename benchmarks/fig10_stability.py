@@ -55,7 +55,7 @@ def run_algo(algorithm: str, steps: int = 5, push_every: int = 2,
                                       m.get("clipped_frac", 0.0))))
         return rewards, masked
 
-    return asyncio.get_event_loop().run_until_complete(loop())
+    return asyncio.run(loop())
 
 
 def main():

@@ -1,17 +1,26 @@
 """Fig. 4 / §2.1.3: continuous batching keeps the inference pool saturated.
 
-Runs the REAL engine (reduced model) twice over the same long-tailed
-request workload:
+Runs the REAL engine (reduced model) over the same long-tailed request
+workload in three configurations:
 
   batch-boundary   submit `slots` requests, drain completely, repeat —
                    the traditional scheduler the paper criticizes;
-  continuous       keep the queue full, slots refill the moment one frees.
+  continuous       keep the queue full, slots refill the moment one frees
+                   (fused device-resident decode path);
+  host-path        the same continuous schedule on the pre-fusion baseline
+                   (eager host sampling, per-token scalar syncs, per-row
+                   slot writes) — the decode-throughput denominator.
 
-Reports mean slot occupancy and decode-step savings, plus in-flight weight
-updates mid-run (trajectories spanning multiple policies)."""
+Reports mean slot occupancy, decode-step savings, fused-vs-host decode
+throughput, and in-flight weight updates mid-run (trajectories spanning
+multiple policies). The fused and host-path engines share scheduling and
+RNG discipline, so their token streams are identical — the speedup is pure
+dispatch/sync overhead removal.
+"""
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -20,21 +29,25 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig
 from repro.data import TOKENIZER
-from repro.inference import InferenceEngine, Request
+from repro.inference import HostReferenceEngine, InferenceEngine, Request
 from repro.models import init_params
 
 PCFG = ParallelConfig(remat="none", loss_chunk=0)
+SLOTS = 8
 
 
 def _workload(n, seed=0):
     rng = np.random.default_rng(seed)
     lengths = np.clip(rng.lognormal(np.log(6), np.log(2.2), n), 2, 40)
-    return [Request(i, f"p{i}", np.arange(4, dtype=np.int32) + 10,
+    prompt_lens = rng.integers(2, 24, n)
+    return [Request(i, f"p{i}",
+                    (np.arange(prompt_lens[i], dtype=np.int32) % 40) + 10,
                     int(lengths[i])) for i in range(n)]
 
 
-def run_mode(params, cfg, reqs, *, continuous: bool, slots: int = 8):
-    eng = InferenceEngine(params, cfg, num_slots=slots, max_seq=96, seed=0)
+def run_mode(params, cfg, reqs, *, continuous: bool, slots: int = SLOTS,
+             engine_cls=InferenceEngine):
+    eng = engine_cls(params, cfg, num_slots=slots, max_seq=96, seed=0)
     queue = list(reqs)
     if continuous:
         for r in queue:
@@ -51,21 +64,118 @@ def run_mode(params, cfg, reqs, *, continuous: bool, slots: int = 8):
     return eng.stats.decode_steps, float(occ.mean()) / slots
 
 
+def _decode_workload(n, seed=3):
+    """Decode-dominated request mix (the regime of reasoning-model RL:
+    §3 rollouts run hundreds of tokens per prompt)."""
+    rng = np.random.default_rng(seed)
+    lengths = np.clip(rng.lognormal(np.log(28), np.log(1.6), n), 12, 72)
+    prompt_lens = rng.integers(2, 24, n)
+    return [Request(i, f"p{i}",
+                    (np.arange(prompt_lens[i], dtype=np.int32) % 40) + 10,
+                    int(lengths[i])) for i in range(n)]
+
+
+class _TimedDecode:
+    """Mixin: accumulate wall time spent in the decode dispatch — for the
+    fused engine that is one jitted call + one small bundle readback; for
+    the host engine it is the jitted serve plus the eager sampling ops and
+    per-token scalar syncs. Everything either engine does per decoded
+    token is inside this window, so decode tokens/s compares the two hot
+    paths 1:1. Only fully-occupied ticks count ("tokens/s at 8 slots"):
+    the saturated regime is what continuous batching exists to sustain,
+    and it excludes the queue-drain tail whose occupancy is scheduling-,
+    not engine-, determined."""
+    decode_time = 0.0
+    decode_tokens = 0
+
+    def _decode_exec(self):
+        occ = self.num_active
+        # drain in-flight admission dispatches (async on both engines, but
+        # the host path forces them early via its scalar syncs) so the
+        # timed window holds decode work only
+        jax.block_until_ready(self.state)
+        t0 = time.perf_counter()
+        out = super()._decode_exec()
+        if occ == self.num_slots:
+            self.decode_time += time.perf_counter() - t0
+            self.decode_tokens += occ
+        return out
+
+
+class _TimedFused(_TimedDecode, InferenceEngine):
+    pass
+
+
+class _TimedHost(_TimedDecode, HostReferenceEngine):
+    pass
+
+
+def timed_throughput(engine_cls, params, cfg, n=24, slots: int = SLOTS,
+                     repeats: int = 3):
+    """(decode tokens/s, end-to-end tokens/s, token streams) over the
+    continuous workload. Compile is excluded by a warmup run that touches
+    every bucket shape the workload uses; best-of-`repeats` rejects
+    scheduler noise (the streams are identical across repeats, so the
+    fastest run measures the same work)."""
+    warm = engine_cls(params, cfg, num_slots=slots, max_seq=96, seed=0)
+    for r in _decode_workload(n):
+        warm.submit(r)
+    warm.run_until_idle(max_steps=50_000)
+
+    best = None
+    for _ in range(repeats):
+        eng = engine_cls(params, cfg, num_slots=slots, max_seq=96, seed=0)
+        # reuse the warm engine's compiled callables (same shapes/closures)
+        for attr in ("_tick_fn", "_prefill_fn", "_scatter_fn",
+                     "_serve_logits", "_prefill_logits"):
+            if hasattr(warm, attr):
+                setattr(eng, attr, getattr(warm, attr))
+        for r in _decode_workload(n):
+            eng.submit(r)
+        t0 = time.perf_counter()
+        eng.run_until_idle(max_steps=50_000)
+        dt = time.perf_counter() - t0
+        done = eng.drain_completed()
+        streams = {r.request_id: (tuple(r.completion), tuple(r.versions))
+                   for r in done}
+        run = (eng.decode_tokens / eng.decode_time,
+               eng.stats.tokens_generated / dt, streams)
+        if best is None:
+            best = run
+        else:
+            assert run[2] == best[2], "token streams diverged across repeats"
+            best = (max(run[0], best[0]), max(run[1], best[1]), best[2])
+    return best
+
+
 def main():
     cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
                               vocab_size=TOKENIZER.vocab_size, num_layers=2)
     params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
-    reqs = _workload(48)
-    steps_bb, occ_bb = run_mode(params, cfg, _workload(48),
-                                continuous=False)
+    steps_bb, occ_bb = run_mode(params, cfg, _workload(48), continuous=False)
     steps_cb, occ_cb = run_mode(params, cfg, _workload(48), continuous=True)
+
+    tps_fused, e2e_fused, s_fused = timed_throughput(_TimedFused,
+                                                     params, cfg)
+    tps_host, e2e_host, s_host = timed_throughput(_TimedHost, params, cfg)
+    speedup = tps_fused / tps_host
+    assert s_fused == s_host, "fused/host token streams diverged"
+
     rows = [
         ("fig4_batch_boundary_occupancy", 0.0, f"{occ_bb:.2f}"),
         ("fig4_continuous_occupancy", 0.0, f"{occ_cb:.2f}"),
         ("fig4_decode_steps_saved", 0.0,
          f"{steps_bb}->{steps_cb} ({steps_bb / steps_cb:.2f}x)"),
+        ("fig4_fused_decode_toks_per_s", 0.0,
+         f"{tps_fused:.0f} tok/s @ {SLOTS} slots (e2e {e2e_fused:.0f})"),
+        ("fig4_hostpath_decode_toks_per_s", 0.0,
+         f"{tps_host:.0f} tok/s @ {SLOTS} slots (e2e {e2e_host:.0f})"),
+        ("fig4_fused_vs_host_speedup", 0.0,
+         f"{speedup:.2f}x decode ({e2e_fused / e2e_host:.2f}x e2e)"),
     ]
     assert occ_cb > occ_bb, "continuous batching must raise occupancy"
+    assert speedup >= 2.0, (
+        f"fused decode path must be >=2x the host path, got {speedup:.2f}x")
     return rows
 
 

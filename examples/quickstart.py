@@ -56,7 +56,7 @@ async def generate(prompt: str) -> str:
     return TOKENIZER.decode(task.result().tokens)
 
 
-text = asyncio.get_event_loop().run_until_complete(generate("2+2="))
+text = asyncio.run(generate("2+2="))
 print(f"generated (random init, expect noise): {text!r}")
 
 # -- 4. environment scoring ---------------------------------------------------
@@ -77,7 +77,7 @@ async def run_and_pump():
     return task.result()
 
 
-rollout = asyncio.get_event_loop().run_until_complete(run_and_pump())
+rollout = asyncio.run(run_and_pump())
 print(f"env rollout: problem={rollout.problem_id!r} "
       f"reward={rollout.reward} tokens={len(rollout.completion_tokens)}")
 print("\nquickstart OK")

@@ -49,6 +49,14 @@ print(f"\nserved {len(done)} requests "
       f"({sum(len(r.completion) for r in done)} tokens)")
 print(f"mean slot occupancy {np.mean(occ):.2f}/6 per engine")
 print(f"{spanning} trajectories span multiple policies (Fig. 4 behaviour)")
+# fused hot path: each decode tick is ONE device dispatch + one small
+# readback; admission is bucketed batched prefill, so the engines compile
+# a handful of (rows, bucket) shapes instead of one trace per prompt length
+for i, e in enumerate(pool.engines):
+    print(f"engine[{i}]: {e.stats.prefills} prefill batches for "
+          f"{e.stats.prefill_requests} requests, "
+          f"{e.stats.prefill_traces} prefill traces, "
+          f"{e.stats.decode_traces} decode trace(s)")
 for r in done[:4]:
     v = np.asarray(r.versions)
     print(f"  {r.problem_id}: {len(r.completion):2d} tokens "

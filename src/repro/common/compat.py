@@ -1,0 +1,13 @@
+"""Small compatibility shims across supported jax versions."""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis: str) -> int:
+    """`jax.lax.axis_size` appeared after jax 0.4.37; on older versions a
+    psum of a Python literal resolves to the static mesh-axis size at trace
+    time, which is what every shard_map body here needs."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)

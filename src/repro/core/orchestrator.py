@@ -78,6 +78,8 @@ class OrchestratorStats:
     groups_completed: int = 0
     rollouts_dropped_stale: int = 0
     groups_dropped_zero_signal: int = 0
+    groups_carried: int = 0      # surplus groups deferred to the next batch
+    groups_discarded: int = 0    # carried groups dropped (went stale)
     decode_ticks: int = 0
     weight_pushes: int = 0
     rewards: List[float] = field(default_factory=list)
@@ -96,6 +98,7 @@ class Orchestrator:
         self.pools = pools or DifficultyPools(env.problem_ids(), seed=seed)
         self.stats = OrchestratorStats()
         self._ready_groups: List[RolloutGroup] = []
+        self._carry: List[RolloutGroup] = []
         self._tasks: set = set()
         self._trainer_step = 0
 
@@ -117,7 +120,7 @@ class Orchestrator:
             self.stats.rewards.extend([r.reward for r in outs])
             self._ready_groups.append(group)
 
-        task = asyncio.get_event_loop().create_task(run_group())
+        task = asyncio.get_running_loop().create_task(run_group())
         self._tasks.add(task)
         task.add_done_callback(self._tasks.discard)
         return True
@@ -140,9 +143,17 @@ class Orchestrator:
     async def gather_batch(self, num_groups: int, *,
                            concurrent_groups: Optional[int] = None) -> dict:
         """Run continuous batching until `num_groups` usable groups are
-        ready, then pack them into a training batch."""
+        ready, then pack them into a training batch. Surplus completed
+        groups are carried over to the next batch (re-checked for staleness
+        when consumed) rather than discarded."""
         concurrent = concurrent_groups or max(2 * num_groups, 2)
         usable: List[RolloutGroup] = []
+        if self._carry:
+            carried, self._carry = self._carry, []
+            kept, ndrop = filter_stale(carried, self._trainer_step, self.cfg)
+            self.stats.rollouts_dropped_stale += ndrop
+            self.stats.groups_discarded += len(carried) - len(kept)
+            usable.extend(kept)
         guard = 0
         while len(usable) < num_groups:
             self._saturate(concurrent)
@@ -162,8 +173,11 @@ class Orchestrator:
             if not self._tasks and not usable and self.pools.num_active == 0:
                 raise RuntimeError("dataset exhausted with no usable groups")
         self.stats.batches_emitted += 1
-        seq_len = self._batch_seq_len(usable[:num_groups])
-        return pack_batch(usable[:num_groups], seq_len)
+        batch_groups, surplus = usable[:num_groups], usable[num_groups:]
+        self._carry = surplus
+        self.stats.groups_carried += len(surplus)
+        seq_len = self._batch_seq_len(batch_groups)
+        return pack_batch(batch_groups, seq_len)
 
     @staticmethod
     def _batch_seq_len(groups: List[RolloutGroup]) -> int:
@@ -185,7 +199,7 @@ class Orchestrator:
         rollouts on the same engines (the same pump drives both), so eval
         overhead hides behind generation capacity."""
         rows = eval_env.dataset[: problems or len(eval_env.dataset)]
-        tasks = [asyncio.get_event_loop().create_task(
+        tasks = [asyncio.get_running_loop().create_task(
             eval_env.rollout(self.client, row))
             for row in rows for _ in range(avg_at)]
         while not all(t.done() for t in tasks):

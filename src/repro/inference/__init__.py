@@ -1,5 +1,7 @@
 """Disaggregated inference service: continuous batching + in-flight updates."""
 from .engine import EngineStats, InferenceEngine, Request
 from .client import InferencePool
+from .reference import HostReferenceEngine
 
-__all__ = ["EngineStats", "InferenceEngine", "InferencePool", "Request"]
+__all__ = ["EngineStats", "HostReferenceEngine", "InferenceEngine",
+           "InferencePool", "Request"]

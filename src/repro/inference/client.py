@@ -1,17 +1,18 @@
 """Multi-client inference pool (§2.1.4).
 
 The paper found vLLM's built-in multi-node data parallelism plateaued; the
-fix was one *entirely independent* server per node with a round-robin
-multi-client on the orchestrator. This module reproduces that topology:
-``InferencePool`` owns N independent ``InferenceEngine`` replicas and
-dispatches whole *rollout groups* round-robin (a group's rollouts share a
-prompt — keeping them on one engine maximizes prefix reuse, exactly the
-paper's engine-affinity argument). There is no inter-engine synchronization;
-weight updates are pushed to each engine independently (in-flight).
+fix was one *entirely independent* server per node with a multi-client on
+the orchestrator. This module reproduces that topology: ``InferencePool``
+owns N independent ``InferenceEngine`` replicas and dispatches whole
+*rollout groups* to the least-loaded engine (pending + active requests) —
+long-tailed rollout lengths make blind round-robin pile work onto whichever
+engine drew the stragglers. A group's rollouts share a prompt, so keeping
+them on one engine maximizes prefix reuse, exactly the paper's
+engine-affinity argument. There is no inter-engine synchronization; weight
+updates are pushed to each engine independently (in-flight).
 """
 from __future__ import annotations
 
-import itertools
 from typing import Dict, List, Sequence
 
 import numpy as np
@@ -21,17 +22,20 @@ from .engine import InferenceEngine, Request
 
 
 class InferencePool:
-    """Round-robin multi-client over independent engines."""
+    """Least-loaded multi-client over independent engines."""
 
     def __init__(self, engines: Sequence[InferenceEngine]):
         assert engines, "need at least one engine"
         self.engines = list(engines)
-        self._rr = itertools.cycle(range(len(self.engines)))
         self._next_request_id = 0
         self._next_group_id = 0
         # group_id -> (problem_id, expected, [finished Requests])
         self._groups: Dict[int, tuple] = {}
         self._ungrouped: List[Request] = []
+
+    def _pick_engine(self) -> InferenceEngine:
+        """Least-loaded dispatch; ties break to the earliest engine."""
+        return min(self.engines, key=lambda e: e.load)
 
     # ------------------------------------------------------------------ api
 
@@ -39,10 +43,11 @@ class InferencePool:
                      group_size: int, *, max_new_tokens: int = 64,
                      temperature: float = 1.0) -> int:
         """Submit one prompt × group_size rollouts to a single engine
-        (round-robin across groups)."""
+        (least-loaded across groups; the group stays together for prefix
+        affinity)."""
         gid = self._next_group_id
         self._next_group_id += 1
-        eng = self.engines[next(self._rr)]
+        eng = self._pick_engine()
         for _ in range(group_size):
             req = Request(
                 request_id=self._next_request_id, problem_id=problem_id,
@@ -57,7 +62,7 @@ class InferencePool:
     def submit_request(self, prompt_tokens: np.ndarray, *,
                        max_new_tokens: int = 64, temperature: float = 1.0,
                        problem_id: str = "") -> Request:
-        """Submit a single ungrouped request (round-robin). Used by the
+        """Submit a single ungrouped request (least-loaded). Used by the
         asyncio rollout client; completion surfaces via drain_requests."""
         req = Request(
             request_id=self._next_request_id, problem_id=problem_id,
@@ -65,7 +70,7 @@ class InferencePool:
             max_new_tokens=max_new_tokens, temperature=temperature,
             group_id=-1)
         self._next_request_id += 1
-        self.engines[next(self._rr)].submit(req)
+        self._pick_engine().submit(req)
         return req
 
     def _collect(self) -> None:
@@ -117,6 +122,10 @@ class InferencePool:
             "tokens": sum(e.stats.tokens_generated for e in self.engines),
             "weight_updates": [e.stats.weight_updates for e in self.engines],
             "occupancy": [e.stats.occupancy_trace for e in self.engines],
+            "prefill_batches": [e.stats.prefills for e in self.engines],
+            "prefill_requests": [e.stats.prefill_requests
+                                 for e in self.engines],
+            "prefill_traces": [e.stats.prefill_traces for e in self.engines],
         }
 
 

@@ -3,32 +3,53 @@
 The engine is the JAX analogue of one vLLM server in the paper's pool:
 
   * a fixed number of decode *slots* (static shapes — the TPU formulation of
-    continuous batching). Each decode step advances every occupied slot by
-    one token via a single jitted ``serve_step`` over the slot batch.
+    continuous batching). Each decode tick advances every occupied slot by
+    one token via a single jitted dispatch.
   * whenever a slot finishes (EOS / max tokens) it is released and immediately
     refilled from the pending queue — the pool stays saturated, no
     synchronous batch boundary (Fig. 4).
-  * ``update_weights`` swaps the policy **between** decode steps; running
+  * ``update_weights`` swaps the policy **between** decode ticks; running
     requests keep their KV cache and continue under the new policy, so one
     trajectory may span multiple policies. Every generated token is stamped
     with the policy version that produced it; the stamp flows into the
     max_off_policy_steps filter and the Fig. 4 trace.
 
-The decode core is the same ``serve_step`` used by the serving example, so
-the engine exercises exactly the code paths the dry-run lowers.
+Device-resident hot path
+------------------------
+One decode tick is a *single* fused device dispatch (``sample_step``):
+temperature-scaled categorical sampling, logprob gather, and EOS/max-token
+finished-flag tracking all run inside the jit. Per-slot temperature, active
+mask, generated-token counts and the RNG key live on device; the host reads
+back one small ``(tokens, logprobs, finished)`` bundle per tick instead of
+N Python scalars.
+
+Admission is *bucketed batched prefill*: pending prompts are right-padded to
+power-of-two length buckets and prefilled up to ``num_slots`` at a time in
+one jitted call (``prefill_sample``), then scattered into the slot state in
+one more jitted call — so admission compiles O(num_length_buckets ×
+num_row_buckets) traces total instead of one trace per unique prompt
+length. Families with recurrent state (SSM/hybrid) fall back to
+exact-length row batches, because an SSM scan would fold pad tokens into
+its state.
+
+``HostReferenceEngine`` (repro.inference.reference) keeps the pre-fusion
+host path alive as the parity oracle and Fig. 4 baseline: same scheduling
+and RNG discipline, but eager host-side sampling with per-token scalar
+syncs. Under a fixed seed the two engines must produce identical
+token/logprob/version streams.
 """
 from __future__ import annotations
 
-import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
-from repro.models import init_decode_state, prefill, serve_step
+from repro.models import init_decode_state, prefill_sample, sample_step
 
 DEFAULT_PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -56,9 +77,20 @@ class EngineStats:
     decode_steps: int = 0
     tokens_generated: int = 0
     weight_updates: int = 0
-    prefills: int = 0
+    prefills: int = 0            # bucketed prefill calls (batches)
+    prefill_requests: int = 0    # requests admitted across all batches
+    prefill_traces: int = 0      # compiled (rows, bucket_len) shapes
+    decode_traces: int = 0       # compiled decode-tick shapes (expect 1)
     # per-step occupancy trace for the Fig. 4 / utilization benchmark
     occupancy_trace: List[int] = field(default_factory=list)
+
+
+def _pow2_bucket(n: int, floor: int = 1) -> int:
+    """Smallest power-of-two >= n (and >= floor)."""
+    b = max(int(floor), 1)
+    while b < n:
+        b <<= 1
+    return b
 
 
 class InferenceEngine:
@@ -67,7 +99,7 @@ class InferenceEngine:
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
                  max_seq: int = 512, eos_id: int = 1,
                  pcfg: ParallelConfig = DEFAULT_PCFG, seed: int = 0,
-                 policy_version: int = 0):
+                 policy_version: int = 0, min_prefill_bucket: int = 8):
         self.params = params
         self.cfg = cfg
         self.pcfg = pcfg
@@ -76,20 +108,31 @@ class InferenceEngine:
         self.eos_id = eos_id
         self.policy_version = policy_version
         self.stats = EngineStats()
-        self._rng = jax.random.PRNGKey(seed)
+        self._min_bucket = min(min_prefill_bucket, max_seq)
+        # right-padding is unsound for recurrent-state families: the SSM
+        # scan would fold pad tokens into its state
+        self._pad_prompts = cfg.ssm is None
 
         # cache dtype follows the served params dtype
         cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
         self.state = init_decode_state(cfg, num_slots, max_seq, cache_dtype)
         self.slots: List[Optional[Request]] = [None] * num_slots
-        self.last_token = np.zeros((num_slots,), np.int32)
-        self.pending: List[Request] = []
+        self.pending: Deque[Request] = deque()
         self.completed: List[Request] = []
 
-        self._serve = jax.jit(
-            lambda p, s, t: serve_step(p, s, t, cfg, pcfg))
-        self._prefill = jax.jit(
-            lambda p, b: prefill(p, b, cfg, max_seq=max_seq, pcfg=pcfg))
+        # device-resident slot bookkeeping (read back once per tick)
+        self._last_token = jnp.zeros((num_slots,), jnp.int32)
+        self._active = jnp.zeros((num_slots,), jnp.bool_)
+        self._temps = jnp.ones((num_slots,), jnp.float32)
+        self._gen = jnp.zeros((num_slots,), jnp.int32)
+        self._max_new = jnp.ones((num_slots,), jnp.int32)
+        self._rng = jax.random.PRNGKey(seed)
+
+        # the slot state is donated through the tick/scatter so XLA updates
+        # the decode caches in place instead of copying them every dispatch
+        self._tick_fn = jax.jit(self._tick_impl, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(self._prefill_impl)
+        self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------------ api
 
@@ -97,7 +140,7 @@ class InferenceEngine:
         self.pending.append(req)
 
     def update_weights(self, params, version: int) -> None:
-        """In-flight policy update: takes effect at the next decode step;
+        """In-flight policy update: takes effect at the next decode tick;
         occupied slots keep their caches and continue generating."""
         self.params = params
         self.policy_version = version
@@ -108,6 +151,11 @@ class InferenceEngine:
         return sum(s is not None for s in self.slots)
 
     @property
+    def load(self) -> int:
+        """Work queued on this engine (pool dispatch key)."""
+        return self.num_active + len(self.pending)
+
+    @property
     def idle(self) -> bool:
         return self.num_active == 0 and not self.pending
 
@@ -115,98 +163,181 @@ class InferenceEngine:
         done, self.completed = self.completed, []
         return done
 
+    # --------------------------------------------------- jitted device path
+
+    def _build_prefill_batch(self, tokens, prompt_lens) -> dict:
+        """Model input batch for a prompt row bucket, including the
+        family-specific stub modalities (shared with the reference
+        engine so both prefill paths see identical inputs)."""
+        R = tokens.shape[0]
+        batch = {"tokens": tokens, "prompt_lens": prompt_lens}
+        if self.cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (R, self.cfg.num_image_tokens, self.cfg.d_model))
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (R, self.cfg.encoder_seq_len, self.cfg.d_model))
+        return batch
+
+    def _prefill_impl(self, params, tokens, prompt_lens, temps, rng):
+        """Fused bucketed prefill + first-token sampling (one dispatch)."""
+        self.stats.prefill_traces += 1   # python side effect: trace-time only
+        batch = self._build_prefill_batch(tokens, prompt_lens)
+        return prefill_sample(params, batch, temps, rng, self.cfg,
+                              self.max_seq, self.pcfg)
+
+    def _tick_impl(self, params, state, token, active, temps, gen, max_new,
+                   rng):
+        """Fused decode tick: serve + sample + finished-flag tracking."""
+        self.stats.decode_traces += 1    # python side effect: trace-time only
+        toks, lps, new_state, rng = sample_step(
+            params, state, token, temps, rng, self.cfg, self.pcfg)
+        count = gen + active.astype(jnp.int32)
+        finished = active & ((toks == self.eos_id) | (count >= max_new))
+        new_token = jnp.where(active, toks, token)
+        return (toks, lps, finished, new_token, active & ~finished, count,
+                new_state, rng)
+
+    def _scatter_impl(self, state, last_token, active, temps, gen, max_new,
+                      st, slot_idx, toks, row_temps, row_max_new, row_active):
+        """Scatter a prefilled row bucket into the slot state in one
+        dispatch. Padded rows carry slot_idx == num_slots (out of bounds)
+        and are dropped by the scatter."""
+        new_state = dict(state)
+        for key, val in st.items():
+            if key == "pos":
+                new_state["pos"] = state["pos"].at[slot_idx].set(
+                    val.astype(state["pos"].dtype), mode="drop")
+            else:
+                # cache tensors are [L, B, ...] -> batch axis 1
+                new_state[key] = state[key].at[:, slot_idx].set(
+                    val.astype(state[key].dtype), mode="drop")
+        last_token = last_token.at[slot_idx].set(toks, mode="drop")
+        active = active.at[slot_idx].set(row_active, mode="drop")
+        temps = temps.at[slot_idx].set(row_temps, mode="drop")
+        gen = gen.at[slot_idx].set(jnp.ones_like(slot_idx), mode="drop")
+        max_new = max_new.at[slot_idx].set(row_max_new, mode="drop")
+        return new_state, last_token, active, temps, gen, max_new
+
+    # -------------------------------------------- overridable execution ops
+    # (HostReferenceEngine swaps these for the pre-fusion host path while
+    # inheriting identical scheduling and RNG discipline)
+
+    def _prefill_exec(self, tokens, prompt_lens, temps):
+        """Run one bucketed prefill. Returns (tokens, logprobs, row state);
+        consumes exactly one split of the engine RNG."""
+        toks, lps, st, self._rng = self._prefill_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(prompt_lens),
+            jnp.asarray(temps), self._rng)
+        return toks, lps, st
+
+    def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
+                      row_active) -> None:
+        (self.state, self._last_token, self._active, self._temps, self._gen,
+         self._max_new) = self._scatter_fn(
+            self.state, self._last_token, self._active, self._temps,
+            self._gen, self._max_new, st, jnp.asarray(slot_idx),
+            jnp.asarray(toks), jnp.asarray(row_temps),
+            jnp.asarray(row_max_new), jnp.asarray(row_active))
+
+    def _decode_exec(self):
+        """One fused decode tick; a single small host readback."""
+        (toks, lps, fin, self._last_token, self._active, self._gen,
+         self.state, self._rng) = self._tick_fn(
+            self.params, self.state, self._last_token, self._active,
+            self._temps, self._gen, self._max_new, self._rng)
+        return jax.device_get((toks, lps, fin))
+
     # ------------------------------------------------------------ internals
 
     def _admit(self) -> None:
-        """Fill free slots from the pending queue (prefill each prompt)."""
-        for i in range(self.num_slots):
-            if self.slots[i] is not None or not self.pending:
-                continue
-            req = self.pending.pop(0)
-            prompt = np.asarray(req.prompt_tokens, np.int32)[None, :]
-            batch = {"tokens": jnp.asarray(prompt)}
-            if self.cfg.family == "vlm":
-                batch["patch_embeds"] = jnp.zeros(
-                    (1, self.cfg.num_image_tokens, self.cfg.d_model))
-            if self.cfg.family == "audio":
-                batch["frames"] = jnp.zeros(
-                    (1, self.cfg.encoder_seq_len, self.cfg.d_model))
-            logits, st = self._prefill(self.params, batch)
-            self._write_slot(i, st)
-            tok, lp = self._sample(logits[0], req.temperature)
-            self._record(req, tok, lp)
-            self.last_token[i] = tok
-            self.slots[i] = req
-            self.stats.prefills += 1
-
-    def _write_slot(self, i: int, st) -> None:
-        """Scatter a 1-row prefill state into slot i of the engine state."""
-        s = self.state
-        for key, val in st.items():
-            if key == "pos":
-                s["pos"] = s["pos"].at[i].set(val[0])
+        """Fill free slots from the pending queue with bucketed batched
+        prefills (requests that finish at their first token free their slot
+        immediately, so keep admitting until slots or queue run out)."""
+        while self.pending and any(s is None for s in self.slots):
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            n = min(len(free), len(self.pending))
+            if self._pad_prompts:
+                reqs = [self.pending.popleft() for _ in range(n)]
             else:
-                # cache tensors are [L, B, ...] -> batch axis 1
-                s[key] = s[key].at[:, i].set(val[:, 0])
+                # exact-length rows: take the run of equal-length prompts
+                # at the queue head
+                L0 = len(self.pending[0].prompt_tokens)
+                reqs = []
+                while (self.pending and len(reqs) < n
+                       and len(self.pending[0].prompt_tokens) == L0):
+                    reqs.append(self.pending.popleft())
+            self._admit_batch(reqs, free[:len(reqs)])
 
-    def _sample(self, logits, temperature: float = 1.0) -> tuple[int, float]:
-        logits = jnp.asarray(logits, jnp.float32)
-        logp = jax.nn.log_softmax(logits)
-        self._rng, k = jax.random.split(self._rng)
-        tok = int(jax.random.categorical(k, logits / max(temperature, 1e-4)))
-        return tok, float(logp[tok])
+    def _admit_batch(self, reqs: List[Request], slot_ids: List[int]) -> None:
+        n = len(reqs)
+        lens = [len(r.prompt_tokens) for r in reqs]
+        maxlen = max(lens)
+        assert maxlen <= self.max_seq, \
+            f"prompt ({maxlen} tokens) exceeds max_seq={self.max_seq}"
+        if self._pad_prompts:
+            S_b = min(_pow2_bucket(maxlen, self._min_bucket), self.max_seq)
+        else:
+            S_b = maxlen
+        R = _pow2_bucket(n)
+        tokens = np.zeros((R, S_b), np.int32)
+        plens = np.ones((R,), np.int32)
+        temps = np.ones((R,), np.float32)
+        maxnew = np.ones((R,), np.int32)
+        for r, req in enumerate(reqs):
+            p = np.asarray(req.prompt_tokens, np.int32)
+            tokens[r, :len(p)] = p
+            plens[r] = len(p)
+            temps[r] = req.temperature
+            maxnew[r] = max(1, req.max_new_tokens)
+        toks, lps, st = self._prefill_exec(tokens, plens, temps)
+        toks_h, lps_h = jax.device_get((toks, lps))
 
-    def _sample_batch(self, logits, temps) -> tuple[np.ndarray, np.ndarray]:
-        """logits: [B, V]. Returns (tokens [B], logprobs [B])."""
-        self._rng, k = jax.random.split(self._rng)
-        logits = jnp.asarray(logits, jnp.float32)
-        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
-        toks = jax.random.categorical(k, scaled, axis=-1)
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        lp = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
-        return np.asarray(toks), np.asarray(lp)
+        slot_idx = np.full((R,), self.num_slots, np.int32)  # OOB rows drop
+        slot_idx[:n] = slot_ids
+        row_active = np.zeros((R,), bool)
+        for r, req in enumerate(reqs):
+            tok, lp = int(toks_h[r]), float(lps_h[r])
+            finished = (tok == self.eos_id) or (req.max_new_tokens <= 1)
+            self._record(req, tok, lp, finished)
+            if finished:
+                self.completed.append(req)
+            else:
+                self.slots[slot_ids[r]] = req
+                row_active[r] = True
+        self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
+        self.stats.prefills += 1
+        self.stats.prefill_requests += n
 
-    def _record(self, req: Request, tok: int, lp: float) -> None:
-        req.completion.append(int(tok))
-        req.logprobs.append(float(lp))
+    def _record(self, req: Request, tok: int, lp: float,
+                finished: bool) -> None:
+        req.completion.append(tok)
+        req.logprobs.append(lp)
         req.versions.append(self.policy_version)
         self.stats.tokens_generated += 1
-        if tok == self.eos_id:
+        if finished:
             req.finished = True
-            req.finish_reason = "eos"
-        elif len(req.completion) >= req.max_new_tokens:
-            req.finished = True
-            req.finish_reason = "length"
-
-    def _release_finished(self) -> None:
-        for i, req in enumerate(self.slots):
-            if req is not None and req.finished:
-                self.completed.append(req)
-                self.slots[i] = None
+            req.finish_reason = "eos" if tok == self.eos_id else "length"
 
     # ----------------------------------------------------------------- step
 
     def step(self) -> int:
-        """One engine iteration: release finished, admit pending, decode one
-        token for every occupied slot. Returns tokens generated."""
-        self._release_finished()
+        """One engine iteration: admit pending, decode one token for every
+        occupied slot in a single fused dispatch. Returns tokens generated
+        by the decode tick."""
         self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         self.stats.occupancy_trace.append(len(active))
         if not active:
             return 0
-        token = jnp.asarray(self.last_token)
-        logits, self.state = self._serve(self.params, self.state, token)
-        temps = np.array([self.slots[i].temperature if self.slots[i] else 1.0
-                          for i in range(self.num_slots)], np.float32)
-        toks, lps = self._sample_batch(logits, temps)
+        toks_h, lps_h, fin_h = self._decode_exec()
         for i in active:
             req = self.slots[i]
-            # cache position advanced for every slot; only active rows count
-            self._record(req, int(toks[i]), float(lps[i]))
-            self.last_token[i] = int(toks[i])
+            self._record(req, int(toks_h[i]), float(lps_h[i]), bool(fin_h[i]))
+            if req.finished:
+                self.completed.append(req)
+                self.slots[i] = None
         self.stats.decode_steps += 1
-        self._release_finished()
         return len(active)
 
     def run_until_idle(self, max_steps: int = 10_000) -> None:

@@ -1,0 +1,112 @@
+"""Host-path reference engine: the pre-fusion decode hot path, kept alive.
+
+``HostReferenceEngine`` is the parity oracle and the Fig. 4 throughput
+baseline for the fused engine. It inherits *all* scheduling from
+``InferenceEngine`` — slot assignment, bucketed admission order, RNG split
+discipline — but swaps the execution primitives for the old host path:
+
+  * the jitted model calls produce logits only; temperature scaling,
+    categorical sampling and logprob gather run as eager host-dispatched
+    ops every tick;
+  * per-slot bookkeeping (EOS / max-token flags, last-token updates) is a
+    Python loop with one scalar ``int()`` / ``float()`` device→host sync
+    per slot per tick — the N-small-transfers pattern the fused engine
+    replaces with a single bundle readback;
+  * prefilled rows are scattered into the slot state one eager ``.at[].set``
+    dispatch per cache tensor per row.
+
+Because the RNG key consumption and the sampling math are identical, a
+fused engine and a reference engine constructed with the same seed must
+emit identical token / logprob / policy-version streams — including across
+in-flight ``update_weights`` — which is exactly what
+``tests/test_engine.py::test_fused_engine_matches_host_reference`` asserts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import prefill, serve_step
+
+from .engine import InferenceEngine
+
+
+class HostReferenceEngine(InferenceEngine):
+    """Pre-fusion host-side sampling engine (parity oracle / baseline)."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        cfg, pcfg, max_seq = self.cfg, self.pcfg, self.max_seq
+        self._serve_logits = jax.jit(
+            lambda p, s, t: serve_step(p, s, t, cfg, pcfg),
+            donate_argnums=(1,))
+        self._prefill_logits = jax.jit(
+            lambda p, b: prefill(p, b, cfg, max_seq=max_seq, pcfg=pcfg))
+        # host mirror of the last sampled token per slot
+        self._last_np = np.zeros((self.num_slots,), np.int32)
+
+    # ------------------------------------------------------------- prefill
+
+    def _prefill_exec(self, tokens, prompt_lens, temps):
+        self._rng, k = jax.random.split(self._rng)
+        R = tokens.shape[0]
+        batch = self._build_prefill_batch(jnp.asarray(tokens),
+                                          jnp.asarray(prompt_lens))
+        logits, st = self._prefill_logits(self.params, batch)
+        # host-path sampling: eager dispatches + per-row scalar syncs
+        logits = jnp.asarray(logits, jnp.float32)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+        toks = jax.random.categorical(k, scaled, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        toks_h = np.zeros((R,), np.int32)
+        lps_h = np.zeros((R,), np.float32)
+        for r in range(R):
+            toks_h[r] = int(toks[r])                 # scalar sync per row
+            lps_h[r] = float(logp[r, toks_h[r]])     # and per logprob
+        return toks_h, lps_h, st
+
+    def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
+                      row_active) -> None:
+        """Old-style slot writes: one eager dispatch per tensor per row."""
+        for r, i in enumerate(np.asarray(slot_idx)):
+            i = int(i)
+            if i >= self.num_slots:
+                continue                             # padded bucket row
+            for key, val in st.items():
+                if key == "pos":
+                    self.state["pos"] = self.state["pos"].at[i].set(val[r])
+                else:
+                    # cache tensors are [L, B, ...] -> batch axis 1
+                    self.state[key] = self.state[key].at[:, i].set(
+                        val[:, r].astype(self.state[key].dtype))
+            self._last_np[i] = int(np.asarray(toks)[r])
+
+    # -------------------------------------------------------------- decode
+
+    def _decode_exec(self):
+        self._rng, k = jax.random.split(self._rng)
+        token = jnp.asarray(self._last_np)
+        logits, self.state = self._serve_logits(self.params, self.state,
+                                                token)
+        temps = np.array([s.temperature if s is not None else 1.0
+                          for s in self.slots], np.float32)
+        logits = jnp.asarray(logits, jnp.float32)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+        toks = jax.random.categorical(k, scaled, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        S = self.num_slots
+        toks_h = np.zeros((S,), np.int32)
+        lps_h = np.zeros((S,), np.float32)
+        fin_h = np.zeros((S,), bool)
+        for i in range(S):
+            req = self.slots[i]
+            if req is None:
+                continue
+            toks_h[i] = int(toks[i])                 # per-token scalar sync
+            lps_h[i] = float(logp[i, toks_h[i]])     # per-logprob sync
+            fin_h[i] = (toks_h[i] == self.eos_id
+                        or len(req.completion) + 1 >= max(
+                            1, req.max_new_tokens))
+            self._last_np[i] = toks_h[i]
+        return toks_h, lps_h, fin_h

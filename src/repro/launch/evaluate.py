@@ -66,7 +66,7 @@ def main():
             await asyncio.sleep(0)
         return [t.result() for t in tasks]
 
-    rollouts = asyncio.get_event_loop().run_until_complete(run())
+    rollouts = asyncio.run(run())
     by_problem = {}
     for r in rollouts:
         by_problem.setdefault(r.problem_id, []).append(r.reward)

@@ -62,6 +62,9 @@ def main():
     print(f"served {len(done)} requests, {tokens} tokens in {dt:.1f}s "
           f"({tokens / dt:.1f} tok/s)")
     print(f"decode steps per engine: {stats['decode_steps']}")
+    print(f"prefill batches per engine: {stats['prefill_batches']} "
+          f"({stats['prefill_requests']} requests, "
+          f"{stats['prefill_traces']} compiled bucket shapes)")
     print(f"mean slot occupancy: {np.mean(occ):.2f}/{args.slots} "
           f"(continuous batching keeps slots saturated)")
     for r in done[:3]:

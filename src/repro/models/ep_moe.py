@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.common.compat import axis_size
+
 
 def _pack_by_key(keys, values_list, num_buckets: int, cap: int, fill=0.0):
     """Sort-based static packing: rows with key k land in bucket k at the
@@ -66,7 +68,7 @@ def _ep_body(x, weights, experts, router_unused, wg, wu, wd, *,
     """
     T, d = x.shape
     K = experts.shape[1]
-    n_ranks = jax.lax.axis_size(axis)
+    n_ranks = axis_size(axis)
     rank = jax.lax.axis_index(axis)
     E_loc = E // n_ranks
 

@@ -429,10 +429,18 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: int,
     """Run the prompt through the model, filling decode caches.
 
     Returns (logits_last [B,V], state). Prompt length S must be <= max_seq.
-    For left-padded prompts pass batch["positions"] and batch["prompt_lens"].
+
+    For *right-padded* prompt batches (the engine's bucketed prefill) pass
+    ``batch["prompt_lens"]`` [B]: the last-token logits are gathered per row
+    at ``prompt_lens - 1`` and ``state["pos"]`` is set per row, so decode
+    overwrites the padded cache tail and the decode attention mask
+    (``k_idx <= pos``) never reads it. Right padding is only sound for
+    families without recurrent state — an SSM scan would fold pad tokens
+    into its state — callers gate on ``cfg.ssm is None``.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
+    prompt_lens = batch.get("prompt_lens")
     x, positions, n_prefix = embed_inputs(params, batch, cfg)
     enc_out = encode(params, batch["frames"], cfg, pcfg) \
         if cfg.is_encoder_decoder else None
@@ -494,12 +502,63 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: int,
 
     per_layer = {k: state[k] for k in _CACHE_KEYS if k in state}
     x, new_caches = jax.lax.scan(body, x, (layers, per_layer))
-    if n_prefix:
+    if prompt_lens is None:
         x_last = x[:, -1]
+        pos = jnp.full((B,), S + n_prefix, jnp.int32)
     else:
-        x_last = x[:, -1]
+        last_idx = jnp.clip(prompt_lens - 1, 0, S - 1) + n_prefix
+        x_last = x[jnp.arange(B), last_idx]
+        pos = prompt_lens.astype(jnp.int32) + n_prefix
     x_last = rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
     logits = (x_last @ head_weights(params, cfg)).astype(jnp.float32)
     state.update(new_caches)
-    state["pos"] = jnp.full((B,), S + n_prefix, jnp.int32)
+    state["pos"] = pos
     return logits, state
+
+
+# ---------------------------------------------------------------------------
+# Fused sampling (device-resident decode hot path)
+# ---------------------------------------------------------------------------
+
+
+def sample_logits(key, logits, temps):
+    """Temperature-scaled categorical sampling + logprob gather, batched.
+
+    logits: [B, V] f32; temps: [B]. Returns (tokens [B] i32, logprobs [B]
+    f32) where logprobs are log-softmax of the *unscaled* logits at the
+    sampled token (the trainer-consistency convention the engine records).
+    """
+    scaled = logits / jnp.maximum(temps[:, None], 1e-4)
+    toks = jax.random.categorical(key, scaled, axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    lps = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
+    return toks.astype(jnp.int32), lps
+
+
+def sample_step(params, state, token, temps, rng, cfg: ModelConfig,
+                pcfg=DEFAULT_PARALLEL):
+    """One fused decode tick: serve_step + on-device sampling.
+
+    Consumes one split of `rng` per call (the engine's RNG discipline —
+    the host-path reference engine performs the identical split sequence,
+    which is what makes per-token parity checkable). Returns
+    (tokens [B], logprobs [B], new_state, new_rng).
+    """
+    rng, k = jax.random.split(rng)
+    logits, new_state = serve_step(params, state, token, cfg, pcfg)
+    toks, lps = sample_logits(k, logits, temps)
+    return toks, lps, new_state, rng
+
+
+def prefill_sample(params, batch, temps, rng, cfg: ModelConfig, max_seq: int,
+                   pcfg=DEFAULT_PARALLEL):
+    """Bucketed batched prefill + fused first-token sampling.
+
+    batch["tokens"] is a right-padded [R, S_bucket] row batch with
+    batch["prompt_lens"]; one RNG split covers the whole bucket. Returns
+    (tokens [R], logprobs [R], state, new_rng).
+    """
+    rng, k = jax.random.split(rng)
+    logits, state = prefill(params, batch, cfg, max_seq=max_seq, pcfg=pcfg)
+    toks, lps = sample_logits(k, logits, temps)
+    return toks, lps, state, rng

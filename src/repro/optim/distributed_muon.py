@@ -35,6 +35,8 @@ from jax.experimental.shard_map import shard_map
 
 from .muon import newton_schulz
 
+from repro.common.compat import axis_size
+
 
 # --------------------------------------------------------------------------
 # shard_map bodies (run per-device; `g` is the local row shard [L, m/N, n])
@@ -46,7 +48,7 @@ def _rr_body(g, *, axis: str, ns_steps: int):
     NS, keep own row shard."""
     L = g.shape[0]
     idx = jax.lax.axis_index(axis)
-    n_dev = jax.lax.axis_size(axis)
+    n_dev = axis_size(axis)
     rows = g.shape[1]
     outs = []
     for i in range(L):  # one collective per matrix — the congestion pattern
@@ -58,7 +60,7 @@ def _rr_body(g, *, axis: str, ns_steps: int):
 
 def _a2a_body(g, *, axis: str, ns_steps: int):
     """Dion-style: all_to_all L→L/N & rows→m, local NS, reverse."""
-    n_dev = jax.lax.axis_size(axis)
+    n_dev = axis_size(axis)
     L, rows, n = g.shape
     pad = (-L) % n_dev
     if pad:  # paper: "may require padding tensors before communication"

@@ -28,8 +28,9 @@ import multiprocessing as mp
 import queue
 import time
 import traceback
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 _EXEC_POOL: Optional[mp.pool.Pool] = None
 
@@ -120,7 +121,7 @@ class SandboxPool:
         self.failure_rate = failure_rate
         self._next_id = 0
         self._live = 0
-        self._waiters: List[asyncio.Future] = []
+        self._waiters: Deque[asyncio.Future] = deque()
         self._warm: Dict[str, List[Sandbox]] = {
             img: [self._make(img, warm=True) for _ in range(warm_size)]
             for img in self.warm_images}
@@ -169,7 +170,7 @@ class SandboxPool:
 
     def _wake(self) -> None:
         while self._waiters and self._live < self.packing_factor:
-            fut = self._waiters.pop(0)
+            fut = self._waiters.popleft()
             if not fut.done():
                 fut.set_result(None)
 

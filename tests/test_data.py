@@ -1,7 +1,7 @@
 """Tokenizer, chat template, packing."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.utils import given, settings, st
 
 from repro.data import (EOS_ID, PAD_ID, TOKENIZER, chat_to_doc,
                         pack_documents, parse_reasoning, render_chat,

@@ -1,5 +1,6 @@
 """Continuous-batching engine + multi-client pool (§2.1.3-2.1.4)."""
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +10,8 @@ import pytest
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig
 from repro.data import TOKENIZER
-from repro.inference import InferenceEngine, InferencePool, Request
+from repro.inference import (HostReferenceEngine, InferenceEngine,
+                             InferencePool, Request)
 from repro.models import forward, init_params
 
 PCFG = ParallelConfig(remat="none", loss_chunk=0)
@@ -94,7 +96,101 @@ def test_in_flight_weight_update_spans_policies(setup):
     assert eng.stats.weight_updates == 1
 
 
-def test_pool_round_robin_and_groups(setup):
+def test_fused_engine_matches_host_reference(setup):
+    """Per-token parity: the fused on-device sampler must reproduce the
+    host-path reference engine exactly — tokens, logprobs, policy-version
+    stamps — under a fixed seed, INCLUDING across an in-flight
+    update_weights (both engines share scheduling and RNG discipline; the
+    only difference is where sampling/bookkeeping executes)."""
+    cfg, params = setup
+
+    def run(engine_cls):
+        eng = engine_cls(params, cfg, num_slots=4, max_seq=64, seed=11)
+        rng = np.random.default_rng(2)
+        for i in range(10):
+            L = int(rng.integers(2, 14))
+            eng.submit(Request(
+                request_id=i, problem_id=f"p{i}",
+                prompt_tokens=rng.integers(5, 50, L).astype(np.int32),
+                max_new_tokens=int(rng.integers(3, 9)),
+                temperature=0.7 + 0.15 * (i % 3)))
+        pushed = False
+        while not eng.idle:
+            eng.step()
+            if eng.stats.decode_steps == 3 and not pushed:
+                p2 = jax.tree_util.tree_map(lambda x: x * 1.01, params)
+                eng.update_weights(p2, version=1)   # in-flight
+                pushed = True
+        return {r.request_id: r for r in eng.drain_completed()}
+
+    fused = run(InferenceEngine)
+    host = run(HostReferenceEngine)
+    assert fused.keys() == host.keys()
+    spanning = 0
+    for rid in fused:
+        a, b = fused[rid], host[rid]
+        assert a.completion == b.completion, rid
+        assert a.versions == b.versions, rid
+        assert a.finish_reason == b.finish_reason, rid
+        np.testing.assert_allclose(a.logprobs, b.logprobs, atol=1e-5)
+        spanning += len(set(a.versions)) > 1
+    assert spanning > 0, "parity must be exercised across the update"
+
+
+def test_bucketed_prefill_bounds_traces(setup):
+    """Admission pads prompts to power-of-two buckets: many distinct prompt
+    lengths must compile at most O(num_buckets) prefill traces (not one per
+    unique length), and decode must stay a single compiled shape."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=64, seed=0)
+    lengths = [2, 3, 5, 7, 9, 11, 13, 17, 19, 23, 26, 29, 31, 33]
+    for i, L in enumerate(lengths):
+        eng.submit(_req(i, prompt_len=L, max_new=3 + i % 4))
+    eng.run_until_idle()
+    assert len(eng.drain_completed()) == len(lengths)
+    num_len_buckets = 4                              # {8, 16, 32, 64}
+    num_row_buckets = int(math.log2(4)) + 1          # rows in {1, 2, 4}
+    assert eng.stats.prefill_traces <= num_len_buckets * num_row_buckets
+    assert eng.stats.prefill_traces < len(set(lengths))
+    assert eng.stats.decode_traces == 1
+    # batched admission: far fewer prefill dispatches than requests
+    assert eng.stats.prefills < len(lengths)
+    assert eng.stats.prefill_requests == len(lengths)
+
+
+def test_request_finishing_at_first_token(setup):
+    """max_new_tokens=1 finishes at the prefill-sampled token and must
+    release its slot without a stray decode token."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=64, seed=4)
+    for i in range(3):
+        eng.submit(_req(i, max_new=1))
+    eng.submit(_req(3, max_new=4))
+    eng.run_until_idle()
+    done = {r.request_id: r for r in eng.drain_completed()}
+    assert len(done) == 4
+    for i in range(3):
+        assert len(done[i].completion) == 1 and done[i].finished
+    assert done[3].finished and 1 <= len(done[3].completion) <= 4
+
+
+def test_pool_least_loaded_dispatch(setup):
+    """Groups go to the engine with the least pending+active work, not
+    blind round-robin."""
+    cfg, params = setup
+    engines = [InferenceEngine(params, cfg, num_slots=4, max_seq=64, seed=i)
+               for i in range(2)]
+    pool = InferencePool(engines)
+    for i in range(3):   # preload engine 0
+        engines[0].submit(_req(100 + i, max_new=20))
+    for i in range(2):
+        pool.submit_group(f"p{i}", np.arange(4, dtype=np.int32) + 10,
+                          group_size=2, max_new_tokens=3)
+    assert engines[0].load == 3      # untouched by the new groups
+    assert engines[1].load == 4      # both groups landed on the idle engine
+
+
+def test_pool_dispatch_and_groups(setup):
     cfg, params = setup
     engines = [InferenceEngine(params, cfg, num_slots=4, max_seq=64, seed=i)
                for i in range(3)]
@@ -111,7 +207,7 @@ def test_pool_round_robin_and_groups(setup):
     assert len(groups) == 6
     for g in groups:
         assert len(g.rollouts) == 2
-    # round-robin: every engine got work
+    # least-loaded dispatch: every engine got work
     assert all(e.stats.tokens_generated > 0 for e in engines)
 
 

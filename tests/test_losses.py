@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.utils import given, settings, st
 
 from repro.configs.base import RLConfig
 from repro.core.losses import (cispo_loss, group_advantages, gspo_loss,

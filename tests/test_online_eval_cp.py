@@ -54,7 +54,7 @@ def test_online_eval_interleaves_with_training():
 def test_context_parallel_forward_matches():
     res = run_with_devices("""
 import dataclasses, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.launch.mesh import make_mesh
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig
 from repro.models import forward, init_params, lm_loss
@@ -66,8 +66,7 @@ batch = {"tokens": toks, "labels": toks,
          "loss_mask": jnp.ones((2, 32))}
 pc0 = ParallelConfig(remat="none", loss_chunk=0)
 base, _ = forward(params, batch, cfg, pc0)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 pc = ParallelConfig(remat="none", loss_chunk=0, context_parallel=4)
 with mesh_context(mesh):
     cp, _ = forward(params, batch, cfg, pc)

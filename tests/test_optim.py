@@ -96,8 +96,8 @@ def test_distributed_muon_schemes_match_local():
     res = run_with_devices("""
 import jax, jax.numpy as jnp
 from repro.optim import orthogonalize, distributed_orthogonalize, lower_scheme
-mesh = jax.make_mesh((8,), ('model',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ('model',))
 gs = jax.random.normal(jax.random.PRNGKey(1), (6, 64, 32))
 local = orthogonalize(gs, 5)
 for scheme in ('round_robin', 'all_to_all'):

@@ -7,7 +7,7 @@ from tests.utils import check, run_with_devices
 def test_ep_moe_matches_reference():
     res = run_with_devices("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.launch.mesh import make_mesh
 from repro.configs import get_config
 from repro.models.moe import moe_apply, moe_init
 from repro.sharding.context import mesh_context
@@ -16,8 +16,7 @@ for arch in ("qwen2-moe-a2.7b", "qwen3-moe-235b-a22b"):
     params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.3
     y_ref, _ = moe_apply(params, x, cfg, capacity_factor=8.0)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     with mesh_context(mesh):
         y_ep, aux = moe_apply(params, x, cfg, expert_parallel=True)
     err = float(jnp.abs(y_ep - y_ref).max())
@@ -33,7 +32,8 @@ def test_optimized_train_step_matches_baseline():
     losses and updated params must agree."""
     res = run_with_devices("""
 import dataclasses, jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_mesh
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig, ParallelConfig, RLConfig
 from repro.sharding.context import mesh_context
@@ -51,8 +51,7 @@ batch = {
     "infer_logp": -6.0 * jnp.ones((B, S)),
     "advantages": jnp.ones((B, S)),
 }
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 
 def run(optimized):
     opt = OptimizerConfig(name="muon", lr=1e-2,
@@ -87,14 +86,13 @@ print('ok')
 def test_tp_serving_specs_shard_every_matmul_weight():
     res = run_with_devices("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.launch.mesh import make_mesh
 from repro.configs import get_config
 from repro.models import init_params
 from repro.sharding.rules import tp_param_specs
 cfg = get_config("yi-9b:reduced")
 params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 specs = tp_param_specs(params, mesh)
 flat = jax.tree_util.tree_flatten_with_path(specs)[0]
 sharded = [p for p, s in flat if tuple(s)]

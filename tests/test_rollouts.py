@@ -1,7 +1,7 @@
 """Rollout packing, staleness filtering, difficulty pools."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.utils import given, settings, st
 
 from repro.configs.base import RLConfig
 from repro.core.filtering import DifficultyPools, filter_zero_signal

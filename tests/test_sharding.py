@@ -5,7 +5,7 @@ import math
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests.utils import given, settings, st
 
 from tests.utils import check, run_with_devices
 
@@ -72,8 +72,8 @@ def test_ring_attention_matches_reference():
 import jax, jax.numpy as jnp
 from repro.sharding import ring_attention
 from repro.kernels.ref import flash_attention_ref
-mesh = jax.make_mesh((8,), ('model',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ('model',))
 ks = jax.random.split(jax.random.PRNGKey(0), 3)
 for (S, Hq, Hkv, hd) in [(64, 4, 2, 16), (128, 8, 8, 32)]:
     q = jax.random.normal(ks[0], (2, S, Hq, hd))
@@ -96,8 +96,8 @@ def test_ring_attention_collectives_are_permutes():
 import jax, jax.numpy as jnp, functools
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.sharding import ring_attention
-mesh = jax.make_mesh((8,), ('model',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ('model',))
 spec = NamedSharding(mesh, P(None, 'model', None, None))
 x = jax.ShapeDtypeStruct((2, 128, 4, 16), jnp.float32, sharding=spec)
 f = jax.jit(functools.partial(ring_attention, mesh=mesh, causal=True))

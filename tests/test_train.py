@@ -156,3 +156,35 @@ def test_staleness_filter_engages_under_async():
 
     asyncio.get_event_loop().run_until_complete(loop())
     assert orch.stats.rollouts_dropped_stale > 0
+
+
+def test_gather_batch_carries_surplus_groups():
+    """Completed groups beyond num_groups must be carried to the next
+    batch, not silently discarded (and counted in OrchestratorStats)."""
+    cfg = _cfg("minicpm-2b:reduced")
+    from repro.core import Orchestrator
+    from repro.envs import load_logic_env
+    from repro.inference import InferenceEngine, InferencePool
+    from repro.models import init_params
+
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    rl = RLConfig(batch_prompts=2, group_size=2, max_off_policy_steps=8,
+                  drop_zero_signal_groups=False)
+    pool = InferencePool([InferenceEngine(params, cfg, num_slots=8,
+                                          max_seq=96, pcfg=PCFG, seed=0)])
+    env = load_logic_env(n=16, seed=0, max_new_tokens=4)
+    orch = Orchestrator(env, pool, rl, max_new_tokens=4)
+
+    async def run():
+        await orch.gather_batch(2, concurrent_groups=8)
+        carried = orch.stats.groups_carried
+        ticks = orch.stats.decode_ticks
+        assert carried > 0, "deep concurrency must produce surplus groups"
+        await orch.gather_batch(2, concurrent_groups=8)
+        if carried >= 2:
+            # the whole second batch came from the carry: zero new ticks
+            assert orch.stats.decode_ticks == ticks
+
+    asyncio.run(run())
+    assert orch.stats.batches_emitted == 2
+    assert orch.stats.groups_discarded == 0   # nothing went stale here

@@ -1,9 +1,20 @@
-"""Helpers for multi-device tests: run a snippet in a subprocess with
-xla_force_host_platform_device_count set (the main pytest process must keep
-seeing one device)."""
+"""Test helpers.
+
+1. Multi-device tests: run a snippet in a subprocess with
+   xla_force_host_platform_device_count set (the main pytest process must
+   keep seeing one device).
+2. Optional-hypothesis shim: property tests import ``given``, ``settings``
+   and ``st`` from here. With `hypothesis` installed they are the real
+   thing; without it they degrade to a fixed-seed random example sweep
+   (same decorator API, deterministic draws), so `pytest -q` collects and
+   runs everywhere instead of failing at import.
+"""
 from __future__ import annotations
 
+import functools
+import inspect
 import os
+import random
 import subprocess
 import sys
 import textwrap
@@ -23,3 +34,106 @@ def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600
 
 def check(res: subprocess.CompletedProcess) -> None:
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+
+
+# ---------------------------------------------------------------------------
+# Optional-hypothesis shim
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw rule; mirrors just enough of hypothesis' strategy API."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def text(max_size=20, **_ignored) -> _Strategy:
+            # printable ASCII + a couple of non-ASCII codepoints so
+            # tokenizer round-trips see multi-byte input
+            alphabet = ([chr(c) for c in range(32, 127)]
+                        + ["\n", "\t", "é", "λ", "中"])
+            return _Strategy(lambda rng: "".join(
+                rng.choice(alphabet)
+                for _ in range(rng.randint(0, max_size))))
+
+        @staticmethod
+        def lists(elem: _Strategy, min_size=0, max_size=8) -> _Strategy:
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_ignored) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def given(*arg_strats, **kw_strats):
+        """Fixed-seed example sweep with hypothesis' decorator shape.
+
+        Positional strategies bind to the test function's rightmost
+        parameters (hypothesis semantics); remaining parameters stay
+        visible to pytest as fixtures.
+        """
+        def deco(fn):
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            filled = set(kw_strats)
+            free = [p for p in names if p not in filled]
+            pos_names = free[len(free) - len(arg_strats):] if arg_strats \
+                else []
+            fixture_names = [p for p in names
+                             if p not in filled and p not in pos_names]
+
+            @functools.wraps(fn)
+            def wrapper(**fixture_kwargs):
+                n = getattr(wrapper, "_shim_max_examples", 10)
+                rng = random.Random(f"shim:{fn.__name__}")
+                for _ in range(max(1, n)):
+                    kw = dict(fixture_kwargs)
+                    for name, strat in zip(pos_names, arg_strats):
+                        kw[name] = strat.draw(rng)
+                    for name, strat in kw_strats.items():
+                        kw[name] = strat.draw(rng)
+                    fn(**kw)
+
+            # hide strategy-filled params from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature(
+                [sig.parameters[p] for p in fixture_names])
+            del wrapper.__wrapped__   # signature must not be re-unwrapped
+            wrapper._shim_max_examples = 10
+            return wrapper
+        return deco
+
+    def settings(max_examples=10, **_ignored):
+        """Applied above @given: caps the shim's example count. The real
+        hypothesis knobs we don't model (deadline, ...) are ignored."""
+        def deco(fn):
+            if hasattr(fn, "_shim_max_examples"):
+                # shim sweeps re-run the full jit pipeline per example;
+                # keep CI latency sane while still sweeping shapes
+                fn._shim_max_examples = min(max_examples, 10)
+            return fn
+        return deco
