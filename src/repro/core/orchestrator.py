@@ -38,22 +38,46 @@ if TYPE_CHECKING:  # avoid circular imports: envs/inference import core
 
 class AsyncPoolClient:
     """asyncio bridge: env rollout coroutines await `generate`; the
-    orchestrator's pump loop steps the engines and resolves futures."""
+    orchestrator's pump loop steps the engines and resolves futures.
+
+    Multi-turn environments call ``open_session`` once per rollout and pass
+    the handle to every ``generate`` turn: the engine then keeps the
+    conversation's KV cache resident between turns (session extend) instead
+    of re-prefilling the concatenated context."""
 
     def __init__(self, pool: "InferencePool", *, max_new_tokens: int = 64):
         self.pool = pool
         self.default_max_new_tokens = max_new_tokens
         self._futures: Dict[int, asyncio.Future] = {}
 
+    def open_session(self) -> Optional[int]:
+        """Engine-pinned multi-turn session handle (None when the engine
+        config cannot host sessions — callers fall back to full context)."""
+        return self.pool.open_session()
+
+    def close_session(self, session_id: Optional[int]) -> None:
+        if session_id is not None:
+            self.pool.close_session(session_id)
+
     async def generate(self, prompt_tokens, *, max_new_tokens=None,
-                       temperature=1.0) -> GenOutput:
+                       temperature=1.0, session=None) -> GenOutput:
+        # NOT `or`: an explicit 0 must not silently become the default.
+        # (The engine still samples one prefill token — its own floor —
+        # but never the 64-token default this falsy check used to inject.)
+        if max_new_tokens is None:
+            max_new_tokens = self.default_max_new_tokens
         req = self.pool.submit_request(
             np.asarray(prompt_tokens, np.int32),
-            max_new_tokens=max_new_tokens or self.default_max_new_tokens,
-            temperature=temperature)
+            max_new_tokens=max_new_tokens,
+            temperature=temperature, session=session)
         fut = asyncio.get_running_loop().create_future()
         self._futures[req.request_id] = fut
-        return await fut
+        try:
+            return await fut
+        finally:
+            # cancelled rollouts (aborted evals) must not leak their entry;
+            # normal completion already popped it in pump()
+            self._futures.pop(req.request_id, None)
 
     def pump(self) -> int:
         """One decode tick: advance engines, resolve finished requests."""
@@ -64,7 +88,8 @@ class AsyncPoolClient:
                 fut.set_result(GenOutput(
                     tokens=np.asarray(req.completion, np.int32),
                     logprobs=np.asarray(req.logprobs, np.float32),
-                    versions=np.asarray(req.versions, np.int32)))
+                    versions=np.asarray(req.versions, np.int32),
+                    finish_reason=req.finish_reason))
         return n
 
     @property

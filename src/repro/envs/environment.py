@@ -144,17 +144,37 @@ class MultiTurnEnv(Environment):
         state = RolloutState(row=row, turn=0)
         await self.setup_state(state)
         masked = False
+        # session-resident decoding: the engine keeps this conversation's
+        # KV cache alive across turns, so each turn submits only the *new*
+        # tokens instead of re-prefilling the concatenated context.
+        # Single-turn envs skip the session (nothing to reuse); scripted
+        # test clients without the session API fall back to full context.
+        session = (client.open_session()
+                   if self.max_turns > 1 and hasattr(client, "open_session")
+                   else None)
         try:
             msgs = self.initial_messages(row)
             context = render_chat(msgs, add_generation_prompt=True)
             segments = [Segment(context, is_model=False)]
             full_completion = ""
+            delta = context     # tokens the engine has not seen yet
             for turn in range(self.max_turns):
                 state["turn"] = turn
-                gen = await client.generate(
-                    np.concatenate([s.tokens for s in segments]),
-                    max_new_tokens=self.max_new_tokens,
-                    temperature=self.temperature)
+                if session is not None:
+                    gen = await client.generate(
+                        delta, max_new_tokens=self.max_new_tokens,
+                        temperature=self.temperature, session=session)
+                else:
+                    gen = await client.generate(
+                        np.concatenate([s.tokens for s in segments]),
+                        max_new_tokens=self.max_new_tokens,
+                        temperature=self.temperature)
+                if getattr(gen, "finish_reason", "") == "overflow":
+                    # conversation outgrew the engine cache: mask the
+                    # rollout instead of crashing the pump loop (§3.1.2
+                    # failure rule applied to context overflow)
+                    state["masked"] = True
+                    break
                 gen.text = TOKENIZER.decode(gen.tokens)
                 segments.append(Segment(gen.tokens, True, gen.logprobs,
                                         gen.versions))
@@ -173,12 +193,15 @@ class MultiTurnEnv(Environment):
                 ])
                 segments.append(Segment(env_tokens, is_model=False))
                 full_completion += f"\n[tool] {env_msg}\n"
+                delta = env_tokens
             masked = bool(state.get("masked", False))
             reward = 0.0
             if not masked:
                 reward = await self.final_reward(state, row, row["prompt"],
                                                  full_completion)
         finally:
+            if session is not None:
+                client.close_session(session)
             await self.teardown_state(state)
         return self._assemble(row, segments, reward, self.env_id, masked,
                               {"turns": state["turn"] + 1,
@@ -206,12 +229,57 @@ TOOL_CALL_RE = re.compile(
     r"<tool_call>\s*(?P<name>\w+)\((?P<args>.*?)\)\s*</tool_call>", re.S)
 
 
+def _split_args(argstr: str) -> list[str]:
+    """Split a tool-call argument list on *top-level* commas only: commas
+    inside single/double-quoted strings belong to the argument (so
+    ``f("a, b", 2)`` yields ``["a, b", "2"]``, not four fragments).
+    A quote opens a string only at the *start* of an argument — an
+    apostrophe inside an unquoted token (``what's nearby``) is literal.
+    Surrounding quotes are stripped; ``\\``-escapes inside quotes are
+    honoured. Unquoted empty fragments are dropped (``f()`` -> no args),
+    quoted empties survive."""
+    args: list[str] = []
+    buf: list[str] = []
+    quote: Optional[str] = None
+    quoted = False
+
+    def flush() -> None:
+        nonlocal quoted
+        frag = "".join(buf).strip()
+        if frag or quoted:
+            args.append(frag)
+        buf.clear()
+        quoted = False
+
+    i = 0
+    while i < len(argstr):
+        ch = argstr[i]
+        if quote is not None:
+            if ch == "\\" and i + 1 < len(argstr):
+                buf.append(argstr[i + 1])
+                i += 2
+                continue
+            if ch == quote:
+                quote = None
+            else:
+                buf.append(ch)
+        elif ch in "\"'" and not "".join(buf).strip():
+            quote = ch
+            quoted = True
+        elif ch == ",":
+            flush()
+        else:
+            buf.append(ch)
+        i += 1
+    flush()
+    return args
+
+
 def parse_tool_call(text: str) -> Optional[tuple[str, list[str]]]:
     m = TOOL_CALL_RE.search(text)
     if not m:
         return None
-    args = [a.strip() for a in m.group("args").split(",") if a.strip()]
-    return m.group("name"), args
+    return m.group("name"), _split_args(m.group("args"))
 
 
 class ToolEnv(MultiTurnEnv):

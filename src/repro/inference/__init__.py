@@ -1,7 +1,7 @@
 """Disaggregated inference service: continuous batching + in-flight updates."""
-from .engine import EngineStats, InferenceEngine, Request
+from .engine import EngineSession, EngineStats, InferenceEngine, Request
 from .client import InferencePool
 from .reference import HostReferenceEngine
 
-__all__ = ["EngineStats", "HostReferenceEngine", "InferenceEngine",
-           "InferencePool", "Request"]
+__all__ = ["EngineSession", "EngineStats", "HostReferenceEngine",
+           "InferenceEngine", "InferencePool", "Request"]

@@ -10,10 +10,16 @@ engine drew the stragglers. A group's rollouts share a prompt, so keeping
 them on one engine maximizes prefix reuse, exactly the paper's
 engine-affinity argument. There is no inter-engine synchronization; weight
 updates are pushed to each engine independently (in-flight).
+
+Multi-turn *sessions* are engine-pinned by construction: ``open_session``
+picks the least-loaded engine once, and every turn of that conversation is
+dispatched to it — the turn's KV cache lives in that engine's slot state,
+so there is nothing to migrate (the strongest form of the engine-affinity
+argument).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -29,9 +35,11 @@ class InferencePool:
         self.engines = list(engines)
         self._next_request_id = 0
         self._next_group_id = 0
+        self._next_session_id = 0
         # group_id -> (problem_id, expected, [finished Requests])
         self._groups: Dict[int, tuple] = {}
         self._ungrouped: List[Request] = []
+        self._session_engine: Dict[int, InferenceEngine] = {}
 
     def _pick_engine(self) -> InferenceEngine:
         """Least-loaded dispatch; ties break to the earliest engine."""
@@ -59,18 +67,40 @@ class InferencePool:
         self._groups[gid] = (problem_id, group_size, [])
         return gid
 
+    def open_session(self) -> Optional[int]:
+        """Open a multi-turn session pinned to the least-loaded engine.
+        Returns None when the engine config cannot host sessions (the
+        caller falls back to full-context turns)."""
+        eng = self._pick_engine()
+        if not eng.supports_sessions:
+            return None
+        sid = self._next_session_id
+        self._next_session_id += 1
+        eng.open_session(sid)
+        self._session_engine[sid] = eng
+        return sid
+
+    def close_session(self, session_id: int) -> None:
+        eng = self._session_engine.pop(session_id, None)
+        if eng is not None:
+            eng.close_session(session_id)
+
     def submit_request(self, prompt_tokens: np.ndarray, *,
                        max_new_tokens: int = 64, temperature: float = 1.0,
-                       problem_id: str = "") -> Request:
-        """Submit a single ungrouped request (least-loaded). Used by the
-        asyncio rollout client; completion surfaces via drain_requests."""
+                       problem_id: str = "",
+                       session: Optional[int] = None) -> Request:
+        """Submit a single ungrouped request (least-loaded, or pinned to
+        its session's engine). Used by the asyncio rollout client;
+        completion surfaces via drain_requests."""
         req = Request(
             request_id=self._next_request_id, problem_id=problem_id,
             prompt_tokens=np.asarray(prompt_tokens, np.int32),
             max_new_tokens=max_new_tokens, temperature=temperature,
-            group_id=-1)
+            group_id=-1, session_id=session)
         self._next_request_id += 1
-        self._pick_engine().submit(req)
+        eng = (self._session_engine[session] if session is not None
+               else self._pick_engine())
+        eng.submit(req)
         return req
 
     def _collect(self) -> None:
@@ -126,6 +156,18 @@ class InferencePool:
             "prefill_requests": [e.stats.prefill_requests
                                  for e in self.engines],
             "prefill_traces": [e.stats.prefill_traces for e in self.engines],
+            "extends": [e.stats.extends for e in self.engines],
+            "extend_requests": [e.stats.extend_requests
+                                for e in self.engines],
+            "prefill_tokens": sum(e.stats.prefill_tokens
+                                  for e in self.engines),
+            "prefill_tokens_saved": sum(e.stats.prefill_tokens_saved
+                                        for e in self.engines),
+            "session_evictions": sum(e.stats.session_evictions
+                                     for e in self.engines),
+            "session_fallbacks": sum(e.stats.session_fallbacks
+                                     for e in self.engines),
+            "overflows": sum(e.stats.overflows for e in self.engines),
         }
 
 

@@ -32,24 +32,45 @@ length. Families with recurrent state (SSM/hybrid) fall back to
 exact-length row batches, because an SSM scan would fold pad tokens into
 its state.
 
+Engine sessions (multi-turn KV reuse)
+-------------------------------------
+Agentic multi-turn rollouts (§2.2.1) would otherwise re-prefill the whole
+conversation every turn — O(T·context) prefill FLOPs for a T-turn tool-use
+trajectory. A *session* keeps the conversation's slot and device-resident
+KV cache alive across turns: when a turn finishes, the slot *parks*
+(inactive but not freed); the next turn submits only the **new** tokens
+(tool result + turn delimiters), which are admitted through a bucketed
+``extend`` prefill that writes into the existing cache at the session's
+current position and resumes decoding. One conversation = one cache.
+
+Parked sessions are reclaimable: when fresh prompts need slots, the
+least-recently-used parked session is evicted — it keeps its token
+history host-side, and its next turn transparently falls back to a full
+re-prefill (the pre-session behaviour). Prompts or turns that would grow
+past ``max_seq`` finish gracefully with ``finish_reason="overflow"``
+instead of crashing the pump loop.
+
 ``HostReferenceEngine`` (repro.inference.reference) keeps the pre-fusion
 host path alive as the parity oracle and Fig. 4 baseline: same scheduling
 and RNG discipline, but eager host-side sampling with per-token scalar
 syncs. Under a fixed seed the two engines must produce identical
-token/logprob/version streams.
+token/logprob/version streams — and a session-extend run must reproduce
+the full-re-prefill run's streams exactly (same one-split-per-admission,
+one-split-per-tick RNG discipline).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
-from repro.models import init_decode_state, prefill_sample, sample_step
+from repro.models import (extend_sample, init_decode_state, prefill_sample,
+                          sample_step)
 
 DEFAULT_PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -64,12 +85,39 @@ class Request:
     max_new_tokens: int
     temperature: float = 1.0
     group_id: int = 0
+    # multi-turn: the engine session this turn continues. For a session's
+    # first turn prompt_tokens is the full prompt; for later turns it is
+    # only the *delta* (tool result + turn delimiters).
+    session_id: Optional[int] = None
     # filled during generation
     completion: List[int] = field(default_factory=list)
     logprobs: List[float] = field(default_factory=list)
     versions: List[int] = field(default_factory=list)
     finished: bool = False
     finish_reason: str = ""
+
+
+@dataclass
+class EngineSession:
+    """One multi-turn conversation pinned to (at most) one slot.
+
+    Invariant while parked: the device cache row holds K/V for
+    ``tokens[:-1]`` at positions ``0..len(tokens)-2`` — the final token of
+    the last turn was sampled but never fed through the model, so the next
+    turn's extend block re-feeds it as its first token.
+    """
+
+    session_id: int
+    tokens: np.ndarray           # full conversation history (host fallback)
+    slot: Optional[int] = None   # resident slot (parked or active)
+    last_use: int = 0            # admission counter, LRU eviction key
+    # policy version the cache prefix was (re)built under. A weight update
+    # between turns leaves parked caches stale; the version check makes
+    # the next turn fall back to a full re-prefill under the new policy —
+    # the analogue of vLLM's reset_prefix_cache on update_weights. (A turn
+    # *actively decoding* across an update keeps its cache: the PR-1
+    # in-flight contract.)
+    cache_version: int = -1
 
 
 @dataclass
@@ -81,6 +129,14 @@ class EngineStats:
     prefill_requests: int = 0    # requests admitted across all batches
     prefill_traces: int = 0      # compiled (rows, bucket_len) shapes
     decode_traces: int = 0       # compiled decode-tick shapes (expect 1)
+    extends: int = 0             # bucketed session-extend calls (batches)
+    extend_requests: int = 0     # turns admitted via extend
+    extend_traces: int = 0       # compiled (rows, bucket_len) extend shapes
+    prefill_tokens: int = 0      # prompt tokens run through prefill+extend
+    prefill_tokens_saved: int = 0  # cached tokens extends did NOT re-prefill
+    session_evictions: int = 0   # parked sessions evicted under slot pressure
+    session_fallbacks: int = 0   # evicted sessions fully re-prefilled
+    overflows: int = 0           # requests finished with reason "overflow"
     # per-step occupancy trace for the Fig. 4 / utilization benchmark
     occupancy_trace: List[int] = field(default_factory=list)
 
@@ -112,6 +168,15 @@ class InferenceEngine:
         # right-padding is unsound for recurrent-state families: the SSM
         # scan would fold pad tokens into its state
         self._pad_prompts = cfg.ssm is None
+        # sessions need a linear per-row cache the extend path can append
+        # to: recurrent state can't be continued per-row, a meta-token
+        # prefix offsets host position accounting, and a ring
+        # (window-sized) cache has a slot->position mapping the block
+        # write does not respect
+        self.supports_sessions = (self._pad_prompts
+                                  and cfg.num_meta_tokens == 0
+                                  and not (cfg.sliding_window
+                                           and max_seq <= cfg.sliding_window))
 
         # cache dtype follows the served params dtype
         cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
@@ -119,6 +184,12 @@ class InferenceEngine:
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.pending: Deque[Request] = deque()
         self.completed: List[Request] = []
+        self.sessions: Dict[int, EngineSession] = {}
+        # session owning each slot (active OR parked); a slot is free for
+        # fresh admission only when both slots[i] and _slot_session[i] are
+        # None
+        self._slot_session: List[Optional[int]] = [None] * num_slots
+        self._use_counter = 0
 
         # device-resident slot bookkeeping (read back once per tick)
         self._last_token = jnp.zeros((num_slots,), jnp.int32)
@@ -132,12 +203,34 @@ class InferenceEngine:
         # the decode caches in place instead of copying them every dispatch
         self._tick_fn = jax.jit(self._tick_impl, donate_argnums=(1,))
         self._prefill_fn = jax.jit(self._prefill_impl)
+        # extend must not donate the slot state: it only *reads* row
+        # copies; the follow-up scatter (which does donate) writes them
+        # back
+        self._extend_fn = jax.jit(self._extend_impl)
         self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------------ api
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
+
+    def open_session(self, session_id: int) -> None:
+        """Register a multi-turn session. Turns are submitted as Requests
+        carrying ``session_id``; completed turns park their slot + KV cache
+        for the next turn's extend."""
+        assert self.supports_sessions, "engine config cannot host sessions"
+        self.sessions[session_id] = EngineSession(
+            session_id=session_id, tokens=np.zeros((0,), np.int32),
+            last_use=self._next_use())
+
+    def close_session(self, session_id: int) -> None:
+        """Drop a session. A parked slot is freed immediately; a slot with
+        the turn still decoding is released by the normal finish path
+        (the session is gone from the table, so it will not re-park)."""
+        sess = self.sessions.pop(session_id, None)
+        if sess is not None and sess.slot is not None \
+                and self.slots[sess.slot] is None:
+            self._slot_session[sess.slot] = None
 
     def update_weights(self, params, version: int) -> None:
         """In-flight policy update: takes effect at the next decode tick;
@@ -152,8 +245,12 @@ class InferenceEngine:
 
     @property
     def load(self) -> int:
-        """Work queued on this engine (pool dispatch key)."""
-        return self.num_active + len(self.pending)
+        """Work queued on this engine (pool dispatch key): live requests
+        plus open sessions — each session is an ongoing conversation whose
+        turns are all pinned here, and parked slots are otherwise invisible
+        (slots[i] is None), so without this term a session-saturated engine
+        reports load 0 and keeps winning ``open_session`` ties."""
+        return self.num_active + len(self.pending) + len(self.sessions)
 
     @property
     def idle(self) -> bool:
@@ -185,6 +282,19 @@ class InferenceEngine:
         batch = self._build_prefill_batch(tokens, prompt_lens)
         return prefill_sample(params, batch, temps, rng, self.cfg,
                               self.max_seq, self.pcfg)
+
+    def _extend_impl(self, params, state, gather_idx, tokens, ext_lens,
+                     start_pos, temps, rng):
+        """Fused bucketed session extend + first-token sampling: gather the
+        pinned slot rows, run the new-token block against their caches, and
+        sample (one dispatch). Padded rows gather slot 0 and are dropped by
+        the follow-up scatter."""
+        self.stats.extend_traces += 1   # python side effect: trace-time only
+        rows = {k: (v[gather_idx] if k == "pos" else v[:, gather_idx])
+                for k, v in state.items()}
+        batch = {"tokens": tokens, "prompt_lens": ext_lens}
+        return extend_sample(params, rows, batch, start_pos, temps, rng,
+                             self.cfg, self.pcfg)
 
     def _tick_impl(self, params, state, token, active, temps, gen, max_new,
                    rng):
@@ -231,6 +341,17 @@ class InferenceEngine:
             jnp.asarray(temps), self._rng)
         return toks, lps, st
 
+    def _extend_exec(self, gather_idx, tokens, ext_lens, start_pos, temps):
+        """Run one bucketed session extend. Returns (tokens, logprobs, row
+        state); consumes exactly one split of the engine RNG — the same
+        discipline as a prefill batch, so an extend turn and a
+        re-prefilled turn keep the RNG streams aligned."""
+        toks, lps, st, self._rng = self._extend_fn(
+            self.params, self.state, jnp.asarray(gather_idx),
+            jnp.asarray(tokens), jnp.asarray(ext_lens),
+            jnp.asarray(start_pos), jnp.asarray(temps), self._rng)
+        return toks, lps, st
+
     def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
                       row_active) -> None:
         (self.state, self._last_token, self._active, self._temps, self._gen,
@@ -250,28 +371,178 @@ class InferenceEngine:
 
     # ------------------------------------------------------------ internals
 
-    def _admit(self) -> None:
-        """Fill free slots from the pending queue with bucketed batched
-        prefills (requests that finish at their first token free their slot
-        immediately, so keep admitting until slots or queue run out)."""
-        while self.pending and any(s is None for s in self.slots):
-            free = [i for i, s in enumerate(self.slots) if s is None]
-            n = min(len(free), len(self.pending))
-            if self._pad_prompts:
-                reqs = [self.pending.popleft() for _ in range(n)]
-            else:
-                # exact-length rows: take the run of equal-length prompts
-                # at the queue head
-                L0 = len(self.pending[0].prompt_tokens)
-                reqs = []
-                while (self.pending and len(reqs) < n
-                       and len(self.pending[0].prompt_tokens) == L0):
-                    reqs.append(self.pending.popleft())
-            self._admit_batch(reqs, free[:len(reqs)])
+    def _next_use(self) -> int:
+        self._use_counter += 1
+        return self._use_counter
 
-    def _admit_batch(self, reqs: List[Request], slot_ids: List[int]) -> None:
+    def _session_of(self, req: Request) -> Optional[EngineSession]:
+        if req.session_id is None:
+            return None
+        return self.sessions.get(req.session_id)
+
+    def _required_len(self, req: Request) -> int:
+        """Total conversation length this request implies (history + new
+        tokens) — the same bound a full re-prefill of the conversation
+        would have to satisfy."""
+        sess = self._session_of(req)
+        hist = len(sess.tokens) if sess is not None else 0
+        return hist + len(req.prompt_tokens)
+
+    def _is_resident_extend(self, req: Request) -> bool:
+        """True when the request continues a session whose slot + KV cache
+        are still resident (parked) AND still built under the current
+        policy — the extend fast path. A stale cache (weight update since
+        the prefix was built) forces the full-re-prefill fallback so fresh
+        turns sample against self-consistent new-policy KV."""
+        sess = self._session_of(req)
+        return (sess is not None and len(sess.tokens) > 0
+                and sess.slot is not None
+                and self.slots[sess.slot] is None
+                and sess.cache_version == self.policy_version)
+
+    def _overflow_head(self) -> bool:
+        """Finish the head request with ``finish_reason="overflow"`` if its
+        conversation would not fit in ``max_seq`` (graceful: the pump loop
+        keeps running, the client surfaces a masked rollout)."""
+        req = self.pending[0]
+        if self._required_len(req) <= self.max_seq:
+            return False
+        self.pending.popleft()
+        req.finished = True
+        req.finish_reason = "overflow"
+        # no _finish(): the turn produced nothing, session history is
+        # untouched (its cache stays consistent for a later, shorter turn)
+        self.completed.append(req)
+        self.stats.overflows += 1
+        return True
+
+    def _evict_lru_parked(self) -> Optional[int]:
+        """Reclaim the least-recently-used parked session's slot. The
+        evicted session keeps its host-side token history; its next turn
+        transparently falls back to a full re-prefill."""
+        parked = [(sess.last_use, sid) for sid, sess in self.sessions.items()
+                  if sess.slot is not None and self.slots[sess.slot] is None]
+        if not parked:
+            return None
+        _, sid = min(parked)
+        sess = self.sessions[sid]
+        slot, sess.slot = sess.slot, None
+        self._slot_session[slot] = None
+        self.stats.session_evictions += 1
+        return slot
+
+    def _effective_prompt(self, req: Request) -> np.ndarray:
+        """Tokens a fresh prefill of this request must process: the raw
+        prompt, or — for an evicted session's turn — the full conversation
+        history plus the delta (fallback re-prefill)."""
+        p = np.asarray(req.prompt_tokens, np.int32)
+        sess = self._session_of(req)
+        if sess is None or not len(sess.tokens):
+            return p
+        return np.concatenate([sess.tokens, p])
+
+    def _admit(self) -> None:
+        """Fill slots from the pending queue, strictly FIFO in type runs:
+        session-extend turns re-activate their parked slot via a bucketed
+        extend (no free slot needed); everything else — fresh prompts,
+        first session turns, evicted-session fallbacks — goes through the
+        bucketed batched prefill, evicting LRU parked sessions when free
+        slots run out. Requests that finish at their first token free
+        their slot immediately, so keep admitting until slots or queue run
+        out."""
+        while self.pending:
+            if self._overflow_head():
+                continue
+            if self._is_resident_extend(self.pending[0]):
+                self._admit_extend_run()
+                continue
+            if not self._admit_prefill_run():
+                return
+
+    def _admit_prefill_run(self) -> bool:
+        """Admit the head run of prefill-type requests. Returns False when
+        no progress is possible (every slot active)."""
+        want = 0                      # head run length (no queue mutation)
+        for req in self.pending:
+            if want >= self.num_slots or self._is_resident_extend(req):
+                break
+            if self._required_len(req) > self.max_seq:
+                continue              # overflow-doomed: never takes a slot
+            # a session going the prefill path with a parked-but-unusable
+            # slot (stale cache version) releases that slot up front — the
+            # fallback re-prefill will claim a slot like any fresh prompt
+            sess = self._session_of(req)
+            if (sess is not None and sess.slot is not None
+                    and self.slots[sess.slot] is None):
+                self._slot_session[sess.slot] = None
+                sess.slot = None
+            want += 1
+        free = [i for i in range(self.num_slots)
+                if self.slots[i] is None and self._slot_session[i] is None]
+        while len(free) < want:
+            slot = self._evict_lru_parked()
+            if slot is None:
+                break
+            free.append(slot)
+        if not free:
+            return False
+        reqs: List[Request] = []
+        prompts: List[np.ndarray] = []
+        progress = False
+        while (self.pending and len(reqs) < len(free)
+               and not self._is_resident_extend(self.pending[0])):
+            if self._overflow_head():
+                progress = True
+                continue
+            prompt = self._effective_prompt(self.pending[0])
+            # exact-length rows for recurrent-state families
+            if not self._pad_prompts and prompts \
+                    and len(prompt) != len(prompts[0]):
+                break
+            reqs.append(self.pending.popleft())
+            prompts.append(prompt)
+        if reqs:
+            self._admit_batch(reqs, prompts, free[:len(reqs)])
+            progress = True
+        return progress
+
+    def _admit_extend_run(self) -> None:
+        """Admit the head run of resident-session extend turns that share
+        one length bucket, as a single fused extend dispatch."""
+        head = self.pending[0]
+        head_sess = self.sessions[head.session_id]
+        S_b = self._extend_bucket(1 + len(head.prompt_tokens),
+                                  len(head_sess.tokens) - 1)
+        reqs: List[Request] = []
+        seen = set()
+        while self.pending and len(reqs) < self.num_slots:
+            req = self.pending[0]
+            if not self._is_resident_extend(req) or req.session_id in seen:
+                break
+            if self._overflow_head():
+                continue
+            sess = self.sessions[req.session_id]
+            pos = len(sess.tokens) - 1
+            if 1 + len(req.prompt_tokens) > S_b or pos + S_b > self.max_seq:
+                break
+            self.pending.popleft()
+            reqs.append(req)
+            seen.add(req.session_id)
+        if reqs:
+            self._admit_extend(reqs, S_b)
+
+    def _extend_bucket(self, ext_len: int, pos: int) -> int:
+        """Power-of-two extend bucket, capped so the block write at ``pos``
+        cannot be clamp-shifted into the live cache prefix. The overflow
+        check guarantees ``pos + ext_len <= max_seq``, so the cap never
+        truncates the block itself."""
+        return min(_pow2_bucket(ext_len, self._min_bucket),
+                   self.max_seq - pos)
+
+    def _admit_batch(self, reqs: List[Request], prompts: List[np.ndarray],
+                     slot_ids: List[int]) -> None:
         n = len(reqs)
-        lens = [len(r.prompt_tokens) for r in reqs]
+        lens = [len(p) for p in prompts]
         maxlen = max(lens)
         assert maxlen <= self.max_seq, \
             f"prompt ({maxlen} tokens) exceeds max_seq={self.max_seq}"
@@ -285,7 +556,7 @@ class InferenceEngine:
         temps = np.ones((R,), np.float32)
         maxnew = np.ones((R,), np.int32)
         for r, req in enumerate(reqs):
-            p = np.asarray(req.prompt_tokens, np.int32)
+            p = prompts[r]
             tokens[r, :len(p)] = p
             plens[r] = len(p)
             temps[r] = req.temperature
@@ -297,17 +568,86 @@ class InferenceEngine:
         slot_idx[:n] = slot_ids
         row_active = np.zeros((R,), bool)
         for r, req in enumerate(reqs):
+            sess = self._session_of(req)
+            if sess is not None:
+                if len(sess.tokens):
+                    self.stats.session_fallbacks += 1
+                sess.slot = slot_ids[r]
+                sess.last_use = self._next_use()
+                sess.cache_version = self.policy_version
+                self._slot_session[slot_ids[r]] = req.session_id
             tok, lp = int(toks_h[r]), float(lps_h[r])
             finished = (tok == self.eos_id) or (req.max_new_tokens <= 1)
             self._record(req, tok, lp, finished)
             if finished:
-                self.completed.append(req)
+                self._finish(req)
             else:
                 self.slots[slot_ids[r]] = req
                 row_active[r] = True
         self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
         self.stats.prefills += 1
         self.stats.prefill_requests += n
+        self.stats.prefill_tokens += int(sum(lens))
+
+    def _admit_extend(self, reqs: List[Request], S_b: int) -> None:
+        """One fused extend dispatch: gather the pinned slot rows, run each
+        session's new-token block ([last history token] + delta) against
+        its cache at the session's position, sample the first token of the
+        turn, and scatter the advanced rows back."""
+        n = len(reqs)
+        R = _pow2_bucket(n)
+        tokens = np.zeros((R, S_b), np.int32)
+        ext_lens = np.ones((R,), np.int32)
+        start_pos = np.zeros((R,), np.int32)
+        temps = np.ones((R,), np.float32)
+        maxnew = np.ones((R,), np.int32)
+        gather_idx = np.zeros((R,), np.int32)   # pad rows gather slot 0
+        slot_idx = np.full((R,), self.num_slots, np.int32)  # OOB rows drop
+        for r, req in enumerate(reqs):
+            sess = self.sessions[req.session_id]
+            block = np.concatenate([
+                sess.tokens[-1:], np.asarray(req.prompt_tokens, np.int32)])
+            tokens[r, :len(block)] = block
+            ext_lens[r] = len(block)
+            start_pos[r] = len(sess.tokens) - 1
+            temps[r] = req.temperature
+            maxnew[r] = max(1, req.max_new_tokens)
+            gather_idx[r] = sess.slot
+            slot_idx[r] = sess.slot
+            sess.last_use = self._next_use()
+        toks, lps, st = self._extend_exec(gather_idx, tokens, ext_lens,
+                                          start_pos, temps)
+        toks_h, lps_h = jax.device_get((toks, lps))
+
+        row_active = np.zeros((R,), bool)
+        for r, req in enumerate(reqs):
+            tok, lp = int(toks_h[r]), float(lps_h[r])
+            finished = (tok == self.eos_id) or (req.max_new_tokens <= 1)
+            self._record(req, tok, lp, finished)
+            if finished:
+                self._finish(req)
+            else:
+                self.slots[self.sessions[req.session_id].slot] = req
+                row_active[r] = True
+            # a full re-prefill would have re-processed the whole cached
+            # prefix on top of the block
+            self.stats.prefill_tokens_saved += int(start_pos[r])
+        self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
+        self.stats.extends += 1
+        self.stats.extend_requests += n
+        self.stats.prefill_tokens += int(ext_lens[:n].sum())
+
+    def _finish(self, req: Request) -> None:
+        """Bank a completed request and update its session: the turn's
+        tokens join the host-side history and the slot parks (it is NOT
+        freed — the KV cache stays resident for the next turn)."""
+        self.completed.append(req)
+        sess = self._session_of(req)
+        if sess is not None:
+            sess.tokens = np.concatenate([
+                sess.tokens, np.asarray(req.prompt_tokens, np.int32),
+                np.asarray(req.completion, np.int32)])
+            sess.last_use = self._next_use()
 
     def _record(self, req: Request, tok: int, lp: float,
                 finished: bool) -> None:
@@ -335,8 +675,12 @@ class InferenceEngine:
             req = self.slots[i]
             self._record(req, int(toks_h[i]), float(lps_h[i]), bool(fin_h[i]))
             if req.finished:
-                self.completed.append(req)
+                self._finish(req)
                 self.slots[i] = None
+                sess = self._session_of(req)
+                if sess is None or sess.slot != i:
+                    # no live session to park for -> free the slot
+                    self._slot_session[i] = None
         self.stats.decode_steps += 1
         return len(active)
 

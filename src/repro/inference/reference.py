@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import prefill, serve_step
+from repro.models import extend, prefill, serve_step
 
 from .engine import InferenceEngine
 
@@ -43,6 +43,9 @@ class HostReferenceEngine(InferenceEngine):
             donate_argnums=(1,))
         self._prefill_logits = jax.jit(
             lambda p, b: prefill(p, b, cfg, max_seq=max_seq, pcfg=pcfg))
+        self._extend_logits = jax.jit(
+            lambda p, rows, t, el, sp: extend(
+                p, rows, {"tokens": t, "prompt_lens": el}, sp, cfg, pcfg))
         # host mirror of the last sampled token per slot
         self._last_np = np.zeros((self.num_slots,), np.int32)
 
@@ -55,6 +58,29 @@ class HostReferenceEngine(InferenceEngine):
                                           jnp.asarray(prompt_lens))
         logits, st = self._prefill_logits(self.params, batch)
         # host-path sampling: eager dispatches + per-row scalar syncs
+        logits = jnp.asarray(logits, jnp.float32)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+        toks = jax.random.categorical(k, scaled, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        toks_h = np.zeros((R,), np.int32)
+        lps_h = np.zeros((R,), np.float32)
+        for r in range(R):
+            toks_h[r] = int(toks[r])                 # scalar sync per row
+            lps_h[r] = float(logp[r, toks_h[r]])     # and per logprob
+        return toks_h, lps_h, st
+
+    def _extend_exec(self, gather_idx, tokens, ext_lens, start_pos, temps):
+        """Host-path session extend: eager row gather + jitted logits +
+        host-dispatched sampling with per-row scalar syncs (same RNG split
+        discipline as the fused extend)."""
+        self._rng, k = jax.random.split(self._rng)
+        R = tokens.shape[0]
+        gi = jnp.asarray(gather_idx)
+        rows = {key: (val[gi] if key == "pos" else val[:, gi])
+                for key, val in self.state.items()}
+        logits, st = self._extend_logits(
+            self.params, rows, jnp.asarray(tokens), jnp.asarray(ext_lens),
+            jnp.asarray(start_pos))
         logits = jnp.asarray(logits, jnp.float32)
         scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
         toks = jax.random.categorical(k, scaled, axis=-1)

@@ -65,6 +65,12 @@ def main():
     print(f"prefill batches per engine: {stats['prefill_batches']} "
           f"({stats['prefill_requests']} requests, "
           f"{stats['prefill_traces']} compiled bucket shapes)")
+    if any(stats["extend_requests"]):
+        print(f"session extends per engine: {stats['extends']} "
+              f"({sum(stats['extend_requests'])} turns, "
+              f"{stats['prefill_tokens_saved']} prefill tokens saved, "
+              f"{stats['session_evictions']} evictions / "
+              f"{stats['session_fallbacks']} fallbacks)")
     print(f"mean slot occupancy: {np.mean(occ):.2f}/{args.slots} "
           f"(continuous batching keeps slots saturated)")
     for r in done[:3]:

@@ -196,6 +196,33 @@ def attention_decode_ring(q, k_cache, v_cache, pos, *, scale=None):
     return out.reshape(B, 1, Hq, hd).astype(q.dtype)
 
 
+def attention_extend(q, k_cache, v_cache, q_pos, *, window=0, scale=None):
+    """Multi-token continuation against a *linear* cache (engine sessions).
+
+    q: [B, Sq, Hq, hd] — a block of new tokens already written into the
+    caches; caches: [B, S_max, Hkv, hd]; q_pos: [B, Sq] absolute positions.
+    Each query attends to every cache slot at k_idx <= q_pos (optionally
+    windowed), i.e. the whole conversation prefix plus the new block's own
+    causal triangle. Unwritten/padded cache tail slots sit above every
+    valid q_pos, so the mask excludes them; masked lanes contribute exact
+    zeros to the softmax, matching the full-prefill computation.
+    """
+    B, Sq, Hq, hd = q.shape
+    S_max, Hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = scale or hd ** -0.5
+    qg = _group_q(q, Hkv).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    k_idx = jnp.arange(S_max)
+    valid = k_idx[None, None, :] <= q_pos[:, :, None]       # [B, Sq, S_max]
+    if window:
+        valid &= k_idx[None, None, :] > q_pos[:, :, None] - window
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
 def attention_decode(q, k_cache, v_cache, pos, *, window=0, scale=None):
     """One-token decode. q: [B,1,Hq,hd]; caches: [B,S_max,Hkv,hd]; pos: [B] or scalar.
 
@@ -303,6 +330,37 @@ def attn_decode_apply(params, x, k_cache, v_cache, pos, cfg):
         out = attention_decode(q, k_cache, v_cache, pos,
                                window=cfg.sliding_window)
     out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return out, k_cache, v_cache
+
+
+def attn_extend_apply(params, x, k_cache, v_cache, positions, cfg):
+    """Session-extend attention: insert a contiguous block of new tokens'
+    K/V at ``positions`` (block start = positions[:, 0]) and attend each
+    new token over the full cache prefix.
+
+    x: [B, S_new, d]; caches: [B, S_max, Hkv, hd]; positions: [B, S_new].
+    Returns (out [B, S_new, d], new_k_cache, new_v_cache).
+
+    Linear caches only — a ring (sliding-window-sized) cache has a
+    slot->position mapping this write does not respect; callers gate
+    sessions off for ring/SSM families. The caller must guarantee
+    ``positions[:, 0] + S_new <= S_max`` so the block write is not clamped
+    into the live prefix.
+    """
+    B, S_new, _ = x.shape
+    q, k, v = _project_qkv(params, x, positions, cfg)
+    start = positions[:, 0]
+
+    def upd(cache, new):
+        def one(c, n, p):
+            return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+        return jax.vmap(one)(cache, new, start)
+
+    k_cache = upd(k_cache, k.astype(k_cache.dtype))
+    v_cache = upd(v_cache, v.astype(v_cache.dtype))
+    out = attention_extend(q, k_cache, v_cache, positions,
+                           window=cfg.sliding_window)
+    out = out.reshape(B, S_new, cfg.q_dim) @ params["wo"]
     return out, k_cache, v_cache
 
 

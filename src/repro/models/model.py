@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig
-from .attention import (attn_apply, attn_decode_apply, attn_init,
-                        cross_attn_apply, cross_attn_kv)
+from .attention import (attn_apply, attn_decode_apply, attn_extend_apply,
+                        attn_init, cross_attn_apply, cross_attn_kv)
 from .layers import (embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
                      sinusoidal_positions)
 from .moe import moe_apply, moe_decode_apply, moe_init
@@ -516,6 +516,75 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: int,
     return logits, state
 
 
+def _decoder_layer_extend(lp, x, positions, caches, cfg, pcfg):
+    """One layer over a block of new tokens continuing an existing cache.
+
+    The multi-token sibling of ``_decoder_layer_decode``: K/V for the block
+    are written into the caches at ``positions`` and each token attends
+    over the full cache prefix. SSM/hybrid families are excluded by the
+    engine's session gate (their recurrent state cannot be right-padded or
+    continued per-row here).
+    """
+    new = dict(caches)
+    h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+    attn_out, k_cache, v_cache = attn_extend_apply(
+        lp["attn"], h, caches["k"], caches["v"], positions, cfg)
+    new["k"], new["v"] = k_cache, v_cache
+    x = x + attn_out
+    if cfg.is_encoder_decoder:
+        h = rmsnorm(x, lp["ln_cross"], cfg.rms_eps)
+        x = x + cross_attn_apply(lp["cross"], h, caches["cross_k"],
+                                 caches["cross_v"], cfg)
+    if cfg.moe is not None:
+        h = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        out, _ = moe_apply(lp["moe"], h, cfg, use_pallas=pcfg.use_pallas,
+                           expert_parallel=pcfg.expert_parallel)
+        x = x + out
+    elif cfg.d_ff:
+        x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.rms_eps))
+    return x, new
+
+
+def extend(params, state, batch, start_pos, cfg: ModelConfig,
+           pcfg=DEFAULT_PARALLEL):
+    """Continuation prefill: run a block of *new* tokens against existing
+    per-row decode caches (engine sessions — §2.2.1 multi-turn rollouts).
+
+    state: decode-state rows (caches [L, R, S_max, ...], "pos" ignored in
+    favour of ``start_pos``); batch["tokens"]: right-padded [R, S_b] block
+    of new tokens with batch["prompt_lens"] [R] valid lengths; start_pos
+    [R]: cache position of each row's first new token. Returns
+    (logits_last [R, V], new state rows) with the same right-padding
+    contract as ``prefill``: logits gathered at ``prompt_lens - 1``,
+    ``pos`` advanced by ``prompt_lens``, padded-tail cache writes land
+    above ``pos`` and are never read before decode overwrites them.
+    Callers must guarantee ``start_pos + S_b <= S_max``.
+    """
+    tokens = batch["tokens"]
+    ext_lens = batch["prompt_lens"]
+    R, S = tokens.shape
+    start = start_pos.astype(jnp.int32)
+    positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = params["embed"][tokens]
+    if cfg.rope_theta == 0.0:  # whisper: sinusoidal absolute positions
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    def body(x, inp):
+        lp, caches = inp
+        return _decoder_layer_extend(lp, x, positions, caches, cfg, pcfg)
+
+    per_layer = {k: state[k] for k in _CACHE_KEYS if k in state}
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], per_layer))
+    last_idx = jnp.clip(ext_lens - 1, 0, S - 1)
+    x_last = x[jnp.arange(R), last_idx]
+    x_last = rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
+    logits = (x_last @ head_weights(params, cfg)).astype(jnp.float32)
+    new_state = dict(state)
+    new_state.update(new_caches)
+    new_state["pos"] = start + ext_lens.astype(jnp.int32)
+    return logits, new_state
+
+
 # ---------------------------------------------------------------------------
 # Fused sampling (device-resident decode hot path)
 # ---------------------------------------------------------------------------
@@ -562,3 +631,19 @@ def prefill_sample(params, batch, temps, rng, cfg: ModelConfig, max_seq: int,
     logits, state = prefill(params, batch, cfg, max_seq=max_seq, pcfg=pcfg)
     toks, lps = sample_logits(k, logits, temps)
     return toks, lps, state, rng
+
+
+def extend_sample(params, state, batch, start_pos, temps, rng,
+                  cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Bucketed session extend + fused first-token sampling.
+
+    The continuation sibling of ``prefill_sample``: one RNG split covers
+    the whole bucket (the same split discipline, so a session-extend turn
+    and a full-re-prefill turn consume the engine RNG identically —
+    what makes stream parity checkable). Returns
+    (tokens [R], logprobs [R], new state rows, new_rng).
+    """
+    rng, k = jax.random.split(rng)
+    logits, new_state = extend(params, state, batch, start_pos, cfg, pcfg)
+    toks, lps = sample_logits(k, logits, temps)
+    return toks, lps, new_state, rng

@@ -70,6 +70,35 @@ def test_parse_tool_call():
     assert parse_tool_call("no call here") is None
 
 
+def test_parse_tool_call_quoted_args():
+    """Commas inside quoted strings belong to the argument — the naive
+    split mangled f("a, b", 2) into four fragments."""
+    assert parse_tool_call('<tool_call>f("a, b", 2)</tool_call>') == \
+        ("f", ["a, b", "2"])
+    assert parse_tool_call("<tool_call>f('x, y, z', 'q')</tool_call>") == \
+        ("f", ["x, y, z", "q"])
+    # nested commas + mixed quoting + unquoted args
+    assert parse_tool_call(
+        '<tool_call>g("a, b, c", raw, \'d, e\')</tool_call>') == \
+        ("g", ["a, b, c", "raw", "d, e"])
+    # escapes inside quotes
+    assert parse_tool_call(
+        '<tool_call>f("say \\"hi\\", ok")</tool_call>') == \
+        ("f", ['say "hi", ok'])
+    # an apostrophe inside an unquoted token is literal, not a quote
+    assert parse_tool_call(
+        "<tool_call>search(what's nearby, 5km)</tool_call>") == \
+        ("search", ["what's nearby", "5km"])
+
+
+def test_parse_tool_call_empty_args():
+    assert parse_tool_call("<tool_call>ping()</tool_call>") == ("ping", [])
+    assert parse_tool_call("<tool_call>ping(  )</tool_call>") == ("ping", [])
+    # a quoted empty string is a real argument; dangling commas are not
+    assert parse_tool_call('<tool_call>f("")</tool_call>') == ("f", [""])
+    assert parse_tool_call("<tool_call>f(a,)</tool_call>") == ("f", ["a"])
+
+
 # -- single turn ------------------------------------------------------------
 
 

@@ -86,6 +86,24 @@ def test_env_token_versions_do_not_trigger_staleness():
     assert r.min_policy_version == 7
 
 
+def test_fully_masked_rollouts_are_never_stale():
+    """Rollouts with no trainable model tokens (sandbox failure, env-only
+    segments) must count as current: version 0 would make them maximally
+    off-policy once current_step > max_off_policy_steps, silently
+    shrinking groups below 2 and discarding them wholesale."""
+    env_only = _rollout(comp=(8, 9, 3), version=0, cmask=(0, 0, 0))
+    sandbox_masked = _rollout(comp=(8, 9), version=0, masked=True)
+    assert env_only.off_policyness(current_step=100) == 0
+    assert sandbox_masked.off_policyness(current_step=100) == 0
+
+    cfg = RLConfig(max_off_policy_steps=8)
+    g = RolloutGroup("p", [env_only, sandbox_masked,
+                           _rollout(version=99, reward=1.0)])
+    kept, dropped = filter_stale([g], current_step=100, cfg=cfg)
+    assert dropped == 0
+    assert len(kept) == 1 and len(kept[0].rollouts) == 3
+
+
 def test_zero_signal_filter():
     all_fail = RolloutGroup("a", [_rollout(reward=0.0), _rollout(reward=0.0)])
     all_pass = RolloutGroup("b", [_rollout(reward=1.0), _rollout(reward=1.0)])

@@ -1,0 +1,377 @@
+"""Engine sessions: multi-turn KV-cache reuse across agentic turns.
+
+The contract under test is the one that makes the extend hot path safe:
+a session-resident conversation (bucketed ``extend`` into the parked
+slot's cache) must emit **byte-identical** token/logprob/policy-version
+streams to the full-re-prefill baseline under a fixed seed — including
+across an in-flight ``update_weights`` mid-conversation and across an LRU
+session eviction (whose fallback IS the full re-prefill) — while doing
+O(new tokens) prefill work instead of O(conversation) per turn.
+"""
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.orchestrator import AsyncPoolClient
+from repro.data import TOKENIZER
+from repro.envs import MultiTurnEnv, Rubric
+from repro.inference import (HostReferenceEngine, InferenceEngine,
+                             InferencePool, Request)
+from repro.models import forward, init_params
+
+PCFG = ParallelConfig(remat="none", loss_chunk=0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
+                              vocab_size=TOKENIZER.vocab_size, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+PROMPT = (np.arange(12, dtype=np.int32) % 40) + 10
+DELTAS = [(np.arange(7, dtype=np.int32) % 30) + 60,
+          (np.arange(5, dtype=np.int32) % 30) + 80,
+          (np.arange(9, dtype=np.int32) % 30) + 100]
+
+
+def _drain_one(eng, req, *, update_at=None, new_params=None, pushed=None):
+    """Run the engine until `req` completes; optionally push a weight
+    update once the global decode-step count reaches `update_at` (the same
+    schedule in session and baseline runs keeps the RNG streams aligned)."""
+    eng.submit(req)
+    while not eng.idle:
+        eng.step()
+        if (update_at is not None and not pushed[0]
+                and eng.stats.decode_steps >= update_at):
+            eng.update_weights(new_params, 1)
+            pushed[0] = True
+    done = eng.drain_completed()
+    assert len(done) == 1 and done[0] is req
+    return req
+
+
+def _run_conversation(eng, *, use_session, prompt=PROMPT, deltas=DELTAS,
+                      max_new=6, sid=0, update_at=None, new_params=None):
+    """One multi-turn conversation; returns the per-turn streams."""
+    pushed = [False]
+    streams = []
+    kw = dict(update_at=update_at, new_params=new_params, pushed=pushed)
+    if use_session:
+        eng.open_session(sid)
+        turns = [prompt] + list(deltas)
+        for t, toks in enumerate(turns):
+            req = _drain_one(eng, Request(100 * sid + t, f"s{sid}", toks,
+                                          max_new, session_id=sid), **kw)
+            streams.append((tuple(req.completion), tuple(req.logprobs),
+                            tuple(req.versions), req.finish_reason))
+        eng.close_session(sid)
+    else:
+        ctx = np.asarray(prompt, np.int32)
+        for t in range(len(deltas) + 1):
+            req = _drain_one(eng, Request(100 * sid + t, f"s{sid}", ctx,
+                                          max_new), **kw)
+            streams.append((tuple(req.completion), tuple(req.logprobs),
+                            tuple(req.versions), req.finish_reason))
+            if t < len(deltas):
+                ctx = np.concatenate([ctx, np.asarray(req.completion,
+                                                      np.int32), deltas[t]])
+    return streams
+
+
+def test_session_extend_matches_full_reprefill(setup):
+    """Byte-identical streams, >=2x fewer prefilled tokens."""
+    cfg, params = setup
+    sess_eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=7)
+    base_eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=7)
+    s = _run_conversation(sess_eng, use_session=True)
+    b = _run_conversation(base_eng, use_session=False)
+    assert s == b    # tokens, logprobs, versions, finish reasons — exact
+    assert sess_eng.stats.extends == len(DELTAS)
+    assert sess_eng.stats.prefill_tokens * 2 <= base_eng.stats.prefill_tokens
+    assert sess_eng.stats.prefill_tokens_saved > 0
+    assert sess_eng.stats.session_fallbacks == 0
+
+
+def test_session_parity_across_inflight_update(setup):
+    """A weight update landing mid-conversation must stamp the same
+    version boundaries in both modes (one trajectory, multiple policies)."""
+    cfg, params = setup
+    p2 = jax.tree_util.tree_map(lambda x: x * 1.01, params)
+    runs = []
+    for use_session in (True, False):
+        eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=3)
+        runs.append(_run_conversation(eng, use_session=use_session,
+                                      update_at=8, new_params=p2))
+    assert runs[0] == runs[1]
+    versions = [v for turn in runs[0] for v in turn[2]]
+    assert versions[0] == 0 and versions[-1] == 1, \
+        "update must land mid-conversation for the test to mean anything"
+
+
+def test_session_matches_host_reference(setup):
+    """The pre-fusion host path drives the same extend scheduling: the
+    PR-1 parity oracle extends to sessions."""
+    cfg, params = setup
+    fused = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=11)
+    host = HostReferenceEngine(params, cfg, num_slots=2, max_seq=128,
+                               seed=11)
+    sf = _run_conversation(fused, use_session=True)
+    sh = _run_conversation(host, use_session=True)
+    for a, b in zip(sf, sh):
+        assert a[0] == b[0] and a[2] == b[2] and a[3] == b[3]
+        np.testing.assert_allclose(a[1], b[1], atol=1e-5)
+    assert host.stats.extends == fused.stats.extends == len(DELTAS)
+
+
+def test_lru_eviction_fallback_parity(setup):
+    """Two sessions fighting over one slot: every turn evicts the other
+    session, every follow-up turn falls back to full re-prefill — and the
+    streams still match the no-session baseline exactly."""
+    cfg, params = setup
+
+    def interleaved(use_session):
+        eng = InferenceEngine(params, cfg, num_slots=1, max_seq=160, seed=5)
+        turns = {0: [PROMPT] + DELTAS[:2], 1: [PROMPT + 3] + DELTAS[1:]}
+        streams = {0: [], 1: []}
+        ctx = {}
+        if use_session:
+            for sid in (0, 1):
+                eng.open_session(sid)
+        for t in range(3):
+            for sid in (0, 1):
+                if use_session:
+                    toks = turns[sid][t]
+                else:
+                    toks = (np.asarray(turns[sid][t], np.int32) if t == 0
+                            else np.concatenate([ctx[sid], turns[sid][t]]))
+                req = _drain_one(eng, Request(
+                    10 * sid + t, f"s{sid}", toks, 5,
+                    session_id=sid if use_session else None))
+                streams[sid].append((tuple(req.completion),
+                                     tuple(req.logprobs),
+                                     tuple(req.versions)))
+                if not use_session:
+                    ctx[sid] = np.concatenate(
+                        [toks, np.asarray(req.completion, np.int32)])
+        return streams, eng.stats
+
+    s, st_s = interleaved(True)
+    b, st_b = interleaved(False)
+    assert s == b
+    # one slot, two live sessions: admissions must have evicted parked
+    # sessions and their next turns re-prefilled in full
+    assert st_s.session_evictions >= 2
+    assert st_s.session_fallbacks >= 2
+    assert st_s.extends == 0     # never resident at its next turn
+
+
+def test_parked_cache_survives_unrelated_decode_traffic(setup):
+    """While a session is parked, other slots keep decoding (the jitted
+    tick advances every row). The parked row's logical prefix must stay
+    intact: after the next extend, recorded logprobs must match a direct
+    full-sequence forward of the conversation."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=9)
+    eng.open_session(0)
+    r1 = _drain_one(eng, Request(0, "s", PROMPT, 5, session_id=0))
+    # unrelated traffic decodes ~20 ticks while the session is parked
+    _drain_one(eng, Request(50, "other",
+                            (np.arange(6, dtype=np.int32) % 40) + 10, 20))
+    r2 = _drain_one(eng, Request(1, "s", DELTAS[0], 5, session_id=0))
+    seq = np.concatenate([PROMPT, np.asarray(r1.completion, np.int32),
+                          DELTAS[0], np.asarray(r2.completion, np.int32)])
+    logits, _ = forward(params, {"tokens": jnp.asarray(seq[None])}, cfg,
+                        PCFG)
+    logp = jax.nn.log_softmax(logits[0], axis=-1)
+    off = len(PROMPT) + len(r1.completion) + len(DELTAS[0])
+    for t, (tok, lp) in enumerate(zip(r2.completion, r2.logprobs)):
+        model_lp = float(logp[off - 1 + t, tok])
+        assert abs(model_lp - lp) < 2e-3, (t, model_lp, lp)
+
+
+def test_prompt_overflow_finishes_gracefully(setup):
+    """A prompt past max_seq must not crash the pump loop: the request
+    finishes with finish_reason='overflow' and the engine keeps serving."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=32, seed=0)
+    big = Request(0, "big", (np.arange(40, dtype=np.int32) % 40) + 10, 4)
+    ok = Request(1, "ok", (np.arange(6, dtype=np.int32) % 40) + 10, 4)
+    eng.submit(big)
+    eng.submit(ok)
+    eng.run_until_idle()
+    done = {r.request_id: r for r in eng.drain_completed()}
+    assert done[0].finish_reason == "overflow"
+    assert done[0].completion == []
+    assert done[1].finished and done[1].finish_reason in ("eos", "length")
+    assert eng.stats.overflows == 1
+
+
+def test_session_growth_overflow(setup):
+    """A session whose conversation outgrows max_seq overflows on the turn
+    that no longer fits — same bound a full re-prefill would hit."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=1, max_seq=48, seed=0)
+    eng.open_session(0)
+    big_deltas = [(np.arange(20, dtype=np.int32) % 30) + 60] * 3
+    reasons = []
+    for t, toks in enumerate([PROMPT] + big_deltas):
+        req = _drain_one(eng, Request(t, "s", toks, 4, session_id=0))
+        reasons.append(req.finish_reason)
+    assert reasons[0] in ("eos", "length")
+    assert "overflow" in reasons
+    assert eng.stats.overflows >= 1
+
+
+# ---------------------------------------------------------------------------
+# environment / client level
+# ---------------------------------------------------------------------------
+
+
+class _PingEnv(MultiTurnEnv):
+    """Forces a fixed number of turns regardless of model output (a byte
+    tokenizer model can't emit valid tool calls) — the 4-turn ToolEnv
+    workload shape without scripting the model."""
+
+    env_id = "ping"
+
+    async def env_response(self, state, completion):
+        return False, f"result {state['turn']}"
+
+
+class _NoSessionClient:
+    """AsyncPoolClient minus the session API -> envs fall back to full
+    re-prefill (the baseline)."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.pump = inner.pump
+
+    async def generate(self, prompt_tokens, *, max_new_tokens=None,
+                       temperature=1.0):
+        return await self._inner.generate(
+            prompt_tokens, max_new_tokens=max_new_tokens,
+            temperature=temperature)
+
+
+def _run_env_rollouts(cfg, params, *, use_sessions, n_rows=2, max_turns=3,
+                      max_seq=256):
+    env = _PingEnv([{"id": f"p{i}", "prompt": f"question {i}"}
+                    for i in range(n_rows)],
+                   Rubric([lambda **kw: 0.0]),
+                   max_turns=max_turns, max_new_tokens=6)
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=max_seq, seed=13)
+    pool = InferencePool([eng])
+    client = AsyncPoolClient(pool, max_new_tokens=6)
+    if not use_sessions:
+        client = _NoSessionClient(client)
+
+    async def run():
+        outs = []
+        for row in env.dataset:     # sequential: identical tick schedules
+            task = asyncio.get_event_loop().create_task(
+                env.rollout(client, row))
+            while not task.done():
+                await asyncio.sleep(0)
+                client.pump()
+                await asyncio.sleep(0)
+            outs.append(task.result())
+        return outs
+
+    outs = asyncio.get_event_loop().run_until_complete(run())
+    return outs, eng.stats
+
+
+def test_env_rollout_session_parity(setup):
+    """MultiTurnEnv on the session client reproduces the full-re-prefill
+    client's rollouts byte-for-byte while prefilling far fewer tokens."""
+    cfg, params = setup
+    sess, st_s = _run_env_rollouts(cfg, params, use_sessions=True)
+    base, st_b = _run_env_rollouts(cfg, params, use_sessions=False)
+    for a, b in zip(sess, base):
+        np.testing.assert_array_equal(a.completion_tokens,
+                                      b.completion_tokens)
+        np.testing.assert_array_equal(a.infer_logprobs, b.infer_logprobs)
+        np.testing.assert_array_equal(a.policy_versions, b.policy_versions)
+        np.testing.assert_array_equal(a.completion_mask, b.completion_mask)
+    assert st_s.extends >= 2 * len(sess) // 2   # extend turns actually ran
+    assert st_s.prefill_tokens < st_b.prefill_tokens
+    assert st_s.prefill_tokens_saved > 0
+
+
+def test_env_rollout_overflow_masks(setup):
+    """Conversation outgrowing the engine cache surfaces as a masked
+    rollout (not an engine crash)."""
+    cfg, params = setup
+    outs, stats = _run_env_rollouts(cfg, params, use_sessions=True,
+                                    n_rows=1, max_turns=8, max_seq=48)
+    assert outs[0].masked
+    assert stats.overflows >= 1
+
+
+def test_pool_open_session_spreads_across_engines(setup):
+    """Parked sessions are invisible to num_active/pending, so the
+    dispatch key must count open sessions — otherwise every concurrent
+    conversation pins to engine 0 and the pool parallelism is lost."""
+    cfg, params = setup
+    engines = [InferenceEngine(params, cfg, num_slots=2, max_seq=64, seed=i)
+               for i in range(3)]
+    pool = InferencePool(engines)
+    for _ in range(6):
+        assert pool.open_session() is not None
+    assert [len(e.sessions) for e in engines] == [2, 2, 2]
+
+
+def test_async_client_explicit_zero_max_new_tokens(setup):
+    """max_new_tokens=0 must not silently become the 64-token default."""
+    cfg, params = setup
+    pool = InferencePool([InferenceEngine(params, cfg, num_slots=2,
+                                          max_seq=64, seed=0)])
+    client = AsyncPoolClient(pool, max_new_tokens=64)
+
+    async def run():
+        task = asyncio.get_event_loop().create_task(client.generate(
+            (np.arange(5, dtype=np.int32) % 40) + 10, max_new_tokens=0))
+        while not task.done():
+            await asyncio.sleep(0)
+            client.pump()
+            await asyncio.sleep(0)
+        return task.result()
+
+    out = asyncio.get_event_loop().run_until_complete(run())
+    # engine clamps the budget to one prefill-sampled token — but never 64
+    assert len(out.tokens) == 1
+
+
+def test_async_client_cancelled_rollout_frees_future(setup):
+    """Aborted rollout tasks (e.g. cancelled evals) must not leak
+    `_futures` entries, and the engine must finish the orphaned request
+    without tripping the pump."""
+    cfg, params = setup
+    pool = InferencePool([InferenceEngine(params, cfg, num_slots=2,
+                                          max_seq=64, seed=0)])
+    client = AsyncPoolClient(pool, max_new_tokens=4)
+
+    async def run():
+        task = asyncio.get_event_loop().create_task(client.generate(
+            (np.arange(5, dtype=np.int32) % 40) + 10))
+        await asyncio.sleep(0)           # let generate() submit
+        task.cancel()
+        try:
+            await task
+        except asyncio.CancelledError:
+            pass
+        assert client.in_flight == 0     # entry cleaned up on cancellation
+        while not pool.idle:             # orphaned request still drains
+            client.pump()
+        client.pump()
+        assert client.in_flight == 0
+
+    asyncio.get_event_loop().run_until_complete(run())
