@@ -53,10 +53,9 @@ def multi_client_scaling():
 
 def muon_collectives():
     out = run_with_devices("""
-import jax
 from repro.optim import lower_scheme
-mesh = jax.make_mesh((8,), ('model',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ('model',))
 from repro.launch.hlo_parse import collective_wire_bytes
 for scheme in ('round_robin', 'all_to_all'):
     lo = lower_scheme(mesh, (48, 4096, 1024), scheme=scheme)

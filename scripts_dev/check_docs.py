@@ -1,0 +1,94 @@
+"""Docs integrity check (CI docs job).
+
+1. Every *relative* markdown link in every tracked ``*.md`` file must
+   resolve to an existing file/directory (external http(s) links and pure
+   ``#anchor`` links are skipped).
+2. The README benchmarks table and the ``benchmarks/run.py`` registry
+   must list exactly the same benchmark modules — a benchmark cannot be
+   registered without being documented, or documented without running.
+
+Run:  python scripts_dev/check_docs.py   (from the repo root)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "results"}
+# verbatim excerpts of *external* material (paper markdown, related-repo
+# snippets): their links point into the repos they were lifted from, not
+# into this tree
+SKIP_FILES = {"PAPER.md", "PAPERS.md", "SNIPPETS.md"}
+
+
+def iter_markdown():
+    # tracked files only, so untracked local dirs (.venv, build trees)
+    # cannot inject third-party READMEs; fall back to a filesystem walk
+    # when git is unavailable (e.g. an exported tarball)
+    try:
+        names = subprocess.run(
+            ["git", "ls-files", "*.md"], cwd=ROOT, check=True,
+            capture_output=True, text=True).stdout.splitlines()
+        paths = [ROOT / n for n in names]
+    except (OSError, subprocess.CalledProcessError):
+        paths = [p for p in ROOT.rglob("*.md")
+                 if not SKIP_DIRS.intersection(q.name for q in p.parents)]
+    for path in sorted(paths):
+        if path.name not in SKIP_FILES:
+            yield path
+
+
+def check_links() -> list:
+    errors = []
+    for md in iter_markdown():
+        for target in LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            base = ROOT if rel.startswith("/") else md.parent
+            if not (base / rel.lstrip("/")).exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> "
+                              f"{target}")
+    return errors
+
+
+def check_benchmark_registry() -> list:
+    errors = []
+    readme = (ROOT / "README.md").read_text()
+    documented = set(re.findall(r"benchmarks/(\w+)\.py", readme))
+    documented.discard("run")                   # the aggregator itself
+    runpy = (ROOT / "benchmarks" / "run.py").read_text()
+    m = re.search(r"MODULES\s*=\s*\[(.*?)\]", runpy, re.S)
+    if not m:
+        return [f"benchmarks/run.py: no MODULES registry found"]
+    registered = set(re.findall(r"benchmarks\.(\w+)", m.group(1)))
+    for name in sorted(registered - documented):
+        errors.append(f"README.md: benchmarks/{name}.py is registered in "
+                      f"benchmarks/run.py but missing from the README "
+                      f"benchmarks table")
+    for name in sorted(documented - registered):
+        errors.append(f"README.md: benchmarks/{name}.py is documented but "
+                      f"not registered in benchmarks/run.py")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_benchmark_registry()
+    for e in errors:
+        print(f"ERROR: {e}")
+    if errors:
+        return 1
+    n_md = len(list(iter_markdown()))
+    print(f"docs check ok: {n_md} markdown files, links + benchmark "
+          f"registry consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

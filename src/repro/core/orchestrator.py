@@ -55,6 +55,11 @@ class AsyncPoolClient:
         config cannot host sessions — callers fall back to full context)."""
         return self.pool.open_session()
 
+    def open_group_sessions(self, group_size: int) -> Optional[List[int]]:
+        """One session per group member, all pinned to the same engine so
+        the group fork can seed their residency (None when unsupported)."""
+        return self.pool.open_group_sessions(group_size)
+
     def close_session(self, session_id: Optional[int]) -> None:
         if session_id is not None:
             self.pool.close_session(session_id)
@@ -78,6 +83,36 @@ class AsyncPoolClient:
             # cancelled rollouts (aborted evals) must not leak their entry;
             # normal completion already popped it in pump()
             self._futures.pop(req.request_id, None)
+
+    async def generate_group(self, prompt_tokens, *, group_size: int,
+                             max_new_tokens=None, temperature=1.0,
+                             sessions: Optional[List[int]] = None
+                             ) -> List[GenOutput]:
+        """Group-shared prefill: submit ``group_size`` rollouts of one
+        shared prompt as a single ``GroupRequest`` — the engine prefills
+        the prompt once and forks the KV cache to every member slot,
+        emitting byte-identical streams to ``group_size`` independent
+        ``generate`` calls. Returns one ``GenOutput`` per member, in
+        member order. With ``sessions`` (from ``open_group_sessions``)
+        each member's turn-1 residency is seeded by the fork, so turn 2+
+        can ``generate(..., session=...)`` as usual."""
+        if max_new_tokens is None:
+            max_new_tokens = self.default_max_new_tokens
+        members = self.pool.submit_group_request(
+            np.asarray(prompt_tokens, np.int32), group_size,
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            sessions=sessions)
+        loop = asyncio.get_running_loop()
+        futs = [loop.create_future() for _ in members]
+        for req, fut in zip(members, futs):
+            self._futures[req.request_id] = fut
+        try:
+            return list(await asyncio.gather(*futs))
+        finally:
+            # cancellation must not leak any member's entry; normal
+            # completion already popped them in pump()
+            for req in members:
+                self._futures.pop(req.request_id, None)
 
     def pump(self) -> int:
         """One decode tick: advance engines, resolve finished requests."""
@@ -136,9 +171,15 @@ class Orchestrator:
         row = self.env.row(ids[0])
 
         async def run_group():
-            outs = await asyncio.gather(*(
-                self.env.rollout(self.client, row)
-                for _ in range(self.cfg.group_size)))
+            # rollout_group handles the whole member lifecycle: the
+            # group-shared-prefill fast path when the client offers
+            # generate_group (with transparent per-member fallback when it
+            # does not), and cancellation-safe gathering — if one member
+            # raises, its siblings are cancelled AND awaited so their
+            # in-flight requests, futures and sessions are released
+            # instead of leaking into the engine forever.
+            outs = await self.env.rollout_group(self.client, row,
+                                                self.cfg.group_size)
             group = RolloutGroup(row["id"], list(outs))
             self.pools.update(group)
             self.stats.groups_completed += 1

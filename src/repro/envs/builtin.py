@@ -141,9 +141,11 @@ class DeepDiveEnv(ToolEnv):
     def _search(self, key: str = "") -> str:
         return self._current_facts.get(str(key).strip(), "no results")
 
-    async def rollout(self, client, row):
+    async def rollout(self, client, row, **kw):
+        # forward kwargs: group members arrive with a pre-generated first
+        # turn / pre-opened session (MultiTurnEnv.rollout_group)
         self._current_facts = row.get("facts", {})
-        return await super().rollout(client, row)
+        return await super().rollout(client, row, **kw)
 
 
 def load_deepdive_env(n: int = 8, seed: int = 0, **kw) -> DeepDiveEnv:

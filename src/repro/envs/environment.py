@@ -50,6 +50,23 @@ class RolloutState(dict):
     """Mutable per-rollout state threaded through env_response/tools."""
 
 
+async def gather_cancel_on_error(coros) -> list:
+    """``asyncio.gather`` that does not leak siblings: plain gather
+    propagates the first exception but leaves the other awaitables
+    running detached — their engine requests, client futures and sessions
+    would live on with nobody to collect them. Here every sibling is
+    cancelled and *awaited* before the exception re-raises, so each
+    coroutine's finally blocks (session close, state teardown) run."""
+    tasks = [asyncio.ensure_future(c) for c in coros]
+    try:
+        return list(await asyncio.gather(*tasks))
+    except BaseException:
+        for t in tasks:
+            t.cancel()
+        await asyncio.gather(*tasks, return_exceptions=True)
+        raise
+
+
 class Environment(abc.ABC):
     """Base: dataset management, prompt formatting, generate/score pipeline."""
 
@@ -86,6 +103,20 @@ class Environment(abc.ABC):
     @abc.abstractmethod
     async def rollout(self, client: InferenceClient, row: dict) -> Rollout:
         ...
+
+    async def rollout_group(self, client: InferenceClient, row: dict,
+                            group_size: int) -> List[Rollout]:
+        """A GRPO group: ``group_size`` rollouts of the same problem.
+
+        Base implementation runs the members independently (the pre-fork
+        baseline); ``MultiTurnEnv`` overrides it to prefill the shared
+        prompt once via ``client.generate_group`` when the client offers
+        it. Either way member gathering is cancellation-safe: if one
+        member raises, its siblings are cancelled *and awaited* so their
+        in-flight requests, futures and engine sessions are released
+        (each rollout's own finally blocks run) instead of leaking."""
+        return await gather_cancel_on_error(
+            [self.rollout(client, row) for _ in range(group_size)])
 
     async def setup_state(self, state: RolloutState) -> None:
         """Resource provisioning hook (sandboxes etc.)."""
@@ -140,7 +171,46 @@ class MultiTurnEnv(Environment):
         state["reward_breakdown"] = breakdown
         return reward
 
-    async def rollout(self, client: InferenceClient, row: dict) -> Rollout:
+    async def rollout_group(self, client: InferenceClient, row: dict,
+                            group_size: int) -> List[Rollout]:
+        """Group-shared prefill: all members share the same rendered
+        first-turn prompt, so when the client offers ``generate_group``
+        the group's first generations come from ONE engine-side prefill
+        whose KV cache is forked to every member (byte-identical streams
+        to per-member admission). Each member rollout then continues
+        independently from turn 2, seeded with its pre-generated first
+        turn — via group sessions (all pinned to one engine, residency
+        established by the fork) when available, else by full-context
+        turns. Clients without ``generate_group`` fall back transparently
+        to independent member rollouts."""
+        if not hasattr(client, "generate_group"):
+            return await super().rollout_group(client, row, group_size)
+        context = render_chat(self.initial_messages(row),
+                              add_generation_prompt=True)
+        sessions = (client.open_group_sessions(group_size)
+                    if self.max_turns > 1
+                    and hasattr(client, "open_group_sessions") else None)
+        try:
+            gens = await client.generate_group(
+                context, group_size=group_size,
+                max_new_tokens=self.max_new_tokens,
+                temperature=self.temperature, sessions=sessions)
+            coros = [self.rollout(client, row, _first_gen=gens[i],
+                                  _session=sessions[i] if sessions else None)
+                     for i in range(group_size)]
+            return await gather_cancel_on_error(coros)
+        finally:
+            # close_session is idempotent: members close their own session
+            # on the happy path, but a member that died before entering
+            # its try block never did — sweep them all so no engine slot
+            # stays parked for a dead rollout
+            if sessions:
+                for sid in sessions:
+                    client.close_session(sid)
+
+    async def rollout(self, client: InferenceClient, row: dict, *,
+                      _first_gen: Optional[GenOutput] = None,
+                      _session: Optional[int] = None) -> Rollout:
         state = RolloutState(row=row, turn=0)
         await self.setup_state(state)
         masked = False
@@ -149,9 +219,19 @@ class MultiTurnEnv(Environment):
         # tokens instead of re-prefilling the concatenated context.
         # Single-turn envs skip the session (nothing to reuse); scripted
         # test clients without the session API fall back to full context.
-        session = (client.open_session()
-                   if self.max_turns > 1 and hasattr(client, "open_session")
-                   else None)
+        # A group member arrives with its first turn already generated
+        # (shared-prefill fork) and — when the fork seeded sessions — a
+        # pre-opened session whose ownership transfers here.
+        if _session is not None:
+            session = _session
+        elif _first_gen is not None:
+            # group fallback without sessions: later turns re-submit the
+            # full context (a late-opened session would have no history)
+            session = None
+        else:
+            session = (client.open_session()
+                       if self.max_turns > 1
+                       and hasattr(client, "open_session") else None)
         try:
             msgs = self.initial_messages(row)
             context = render_chat(msgs, add_generation_prompt=True)
@@ -160,7 +240,9 @@ class MultiTurnEnv(Environment):
             delta = context     # tokens the engine has not seen yet
             for turn in range(self.max_turns):
                 state["turn"] = turn
-                if session is not None:
+                if turn == 0 and _first_gen is not None:
+                    gen = _first_gen
+                elif session is not None:
                     gen = await client.generate(
                         delta, max_new_tokens=self.max_new_tokens,
                         temperature=self.temperature, session=session)

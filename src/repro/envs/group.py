@@ -46,3 +46,14 @@ class EnvGroup(Environment):
         out.problem_id = row["id"]            # restore the routed id
         out.env_id = row["task"]
         return out
+
+    async def rollout_group(self, client: InferenceClient, row: dict,
+                            group_size: int) -> List[Rollout]:
+        """Route the whole group to the sub-environment so its
+        group-shared-prefill path (and member-failure cancellation) apply."""
+        env = self.env_for(row["id"])
+        outs = await env.rollout_group(client, self._sub_row(row), group_size)
+        for out in outs:
+            out.problem_id = row["id"]
+            out.env_id = row["task"]
+        return outs

@@ -1,7 +1,9 @@
 """Disaggregated inference service: continuous batching + in-flight updates."""
-from .engine import EngineSession, EngineStats, InferenceEngine, Request
+from .engine import (EngineSession, EngineStats, GroupRequest,
+                     InferenceEngine, Request)
 from .client import InferencePool
 from .reference import HostReferenceEngine
 
-__all__ = ["EngineSession", "EngineStats", "HostReferenceEngine",
-           "InferenceEngine", "InferencePool", "Request"]
+__all__ = ["EngineSession", "EngineStats", "GroupRequest",
+           "HostReferenceEngine", "InferenceEngine", "InferencePool",
+           "Request"]

@@ -8,8 +8,11 @@ owns N independent ``InferenceEngine`` replicas and dispatches whole
 long-tailed rollout lengths make blind round-robin pile work onto whichever
 engine drew the stragglers. A group's rollouts share a prompt, so keeping
 them on one engine maximizes prefix reuse, exactly the paper's
-engine-affinity argument. There is no inter-engine synchronization; weight
-updates are pushed to each engine independently (in-flight).
+engine-affinity argument — and with group-shared prefill the affinity is
+literal: the group is submitted as one ``GroupRequest``, its prompt is
+prefilled once, and the KV cache is forked to every member slot. There is
+no inter-engine synchronization; weight updates are pushed to each engine
+independently (in-flight).
 
 Multi-turn *sessions* are engine-pinned by construction: ``open_session``
 picks the least-loaded engine once, and every turn of that conversation is
@@ -24,7 +27,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.rollouts import Rollout, RolloutGroup
-from .engine import InferenceEngine, Request
+from .engine import GroupRequest, InferenceEngine, Request
 
 
 class InferencePool:
@@ -45,27 +48,64 @@ class InferencePool:
         """Least-loaded dispatch; ties break to the earliest engine."""
         return min(self.engines, key=lambda e: e.load)
 
+    def _make_group_request(self, prompt_tokens: np.ndarray, group_size: int,
+                            *, problem_id: str, group_id: int,
+                            max_new_tokens: int, temperature: float,
+                            sessions: Optional[Sequence[int]] = None
+                            ) -> GroupRequest:
+        prompt = np.asarray(prompt_tokens, np.int32)
+        members = []
+        for i in range(group_size):
+            members.append(Request(
+                request_id=self._next_request_id, problem_id=problem_id,
+                prompt_tokens=prompt, max_new_tokens=max_new_tokens,
+                temperature=temperature, group_id=group_id,
+                session_id=sessions[i] if sessions else None))
+            self._next_request_id += 1
+        return GroupRequest(group_req_id=group_id, problem_id=problem_id,
+                            prompt_tokens=prompt, members=members)
+
     # ------------------------------------------------------------------ api
 
     def submit_group(self, problem_id: str, prompt_tokens: np.ndarray,
                      group_size: int, *, max_new_tokens: int = 64,
                      temperature: float = 1.0) -> int:
         """Submit one prompt × group_size rollouts to a single engine
-        (least-loaded across groups; the group stays together for prefix
-        affinity)."""
+        (least-loaded across groups). The group is admitted as a
+        ``GroupRequest``: the shared prompt is prefilled once and the KV
+        cache forked to every member slot — the strongest form of the
+        prefix-affinity argument that already kept groups together."""
         gid = self._next_group_id
         self._next_group_id += 1
-        eng = self._pick_engine()
-        for _ in range(group_size):
-            req = Request(
-                request_id=self._next_request_id, problem_id=problem_id,
-                prompt_tokens=np.asarray(prompt_tokens, np.int32),
-                max_new_tokens=max_new_tokens, temperature=temperature,
-                group_id=gid)
-            self._next_request_id += 1
-            eng.submit(req)
+        greq = self._make_group_request(
+            prompt_tokens, group_size, problem_id=problem_id, group_id=gid,
+            max_new_tokens=max_new_tokens, temperature=temperature)
+        self._pick_engine().submit_group(greq)
         self._groups[gid] = (problem_id, group_size, [])
         return gid
+
+    def submit_group_request(self, prompt_tokens: np.ndarray,
+                             group_size: int, *, max_new_tokens: int = 64,
+                             temperature: float = 1.0, problem_id: str = "",
+                             sessions: Optional[Sequence[int]] = None
+                             ) -> List[Request]:
+        """Group-shared-prefill variant of ``submit_request``: one
+        GroupRequest whose members surface individually via
+        ``drain_requests`` (the asyncio client resolves one future per
+        member). When ``sessions`` is given (one id per member, all opened
+        via ``open_group_sessions`` so they share an engine) the fork
+        seeds every member's session residency."""
+        if sessions is not None:
+            assert len(sessions) == group_size, "one session per member"
+            eng = self._session_engine[sessions[0]]
+        else:
+            eng = self._pick_engine()
+        greq = self._make_group_request(
+            prompt_tokens, group_size, problem_id=problem_id, group_id=-1,
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            sessions=sessions)
+        eng.submit_group(greq)
+        return list(greq.members)
 
     def open_session(self) -> Optional[int]:
         """Open a multi-turn session pinned to the least-loaded engine.
@@ -79,6 +119,24 @@ class InferencePool:
         eng.open_session(sid)
         self._session_engine[sid] = eng
         return sid
+
+    def open_group_sessions(self, group_size: int) -> Optional[List[int]]:
+        """Open ``group_size`` multi-turn sessions pinned to ONE engine —
+        a GRPO group of agentic rollouts. Sharing an engine is what lets
+        ``submit_group_request(..., sessions=...)`` fork the shared first
+        turn into every member's session. Returns None when the chosen
+        engine cannot host sessions (callers fall back per member)."""
+        eng = self._pick_engine()
+        if not eng.supports_sessions:
+            return None
+        sids = []
+        for _ in range(group_size):
+            sid = self._next_session_id
+            self._next_session_id += 1
+            eng.open_session(sid)
+            self._session_engine[sid] = eng
+            sids.append(sid)
+        return sids
 
     def close_session(self, session_id: int) -> None:
         eng = self._session_engine.pop(session_id, None)
@@ -168,6 +226,14 @@ class InferencePool:
             "session_fallbacks": sum(e.stats.session_fallbacks
                                      for e in self.engines),
             "overflows": sum(e.stats.overflows for e in self.engines),
+            "group_prefills": sum(e.stats.group_prefills
+                                  for e in self.engines),
+            "group_fork_requests": sum(e.stats.group_fork_requests
+                                       for e in self.engines),
+            "group_partial_admissions": sum(e.stats.group_partial_admissions
+                                            for e in self.engines),
+            "group_prefill_tokens_saved": sum(
+                e.stats.group_prefill_tokens_saved for e in self.engines),
         }
 
 

@@ -50,27 +50,46 @@ re-prefill (the pre-session behaviour). Prompts or turns that would grow
 past ``max_seq`` finish gracefully with ``finish_reason="overflow"``
 instead of crashing the pump loop.
 
+Group-shared prefill (GRPO groups)
+----------------------------------
+Group-based RL samples ``group_size`` (G) rollouts of the *same* prompt
+per problem to form the shared-baseline advantage (§2.1) — yet admitted
+independently, every member re-prefills the identical prompt, wasting
+(G−1)/G of admission FLOPs on the dominant rollout path. A
+``GroupRequest`` admits the whole group as a unit: the shared prompt is
+prefilled ONCE as a single row through the bucketed prefill machinery,
+the first token of every member is sampled from the broadcast logits
+(byte-identical to a G-row batched prefill — see
+``models.prefill_fork_sample``), and the resulting KV-cache row is forked
+into the G member slots with one jitted broadcast→scatter (no host round
+trip). Each member then decodes independently like any other slot. When
+fewer than G slots are free the group is admitted *partially*: the
+available slots are forked now, and the remainder re-forks (one more
+1-row prefill) as slots free up — never a per-member prefill, never a
+deadlock.
+
 ``HostReferenceEngine`` (repro.inference.reference) keeps the pre-fusion
 host path alive as the parity oracle and Fig. 4 baseline: same scheduling
 and RNG discipline, but eager host-side sampling with per-token scalar
 syncs. Under a fixed seed the two engines must produce identical
 token/logprob/version streams — and a session-extend run must reproduce
 the full-re-prefill run's streams exactly (same one-split-per-admission,
-one-split-per-tick RNG discipline).
+one-split-per-tick RNG discipline). The same oracle covers the group
+fork (host-side row broadcast + eager scatter).
 """
 from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
-from repro.models import (extend_sample, init_decode_state, prefill_sample,
-                          sample_step)
+from repro.models import (extend_sample, fork_decode_rows, init_decode_state,
+                          prefill_fork_sample, prefill_sample, sample_step)
 
 DEFAULT_PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -95,6 +114,25 @@ class Request:
     versions: List[int] = field(default_factory=list)
     finished: bool = False
     finish_reason: str = ""
+
+
+@dataclass
+class GroupRequest:
+    """A GRPO group admitted as a unit: ``group_size`` rollouts of one
+    shared prompt. The prompt is prefilled once and the KV cache forked
+    to every member slot; ``members`` holds the not-yet-admitted member
+    ``Request`` objects (each carrying the full prompt, so history and
+    fallback accounting are per-member as usual) and is drained as slots
+    become available (partial admission)."""
+
+    group_req_id: int
+    problem_id: str
+    prompt_tokens: np.ndarray
+    members: List[Request] = field(default_factory=list)
+
+    @property
+    def group_size(self) -> int:
+        return len(self.members)
 
 
 @dataclass
@@ -137,6 +175,11 @@ class EngineStats:
     session_evictions: int = 0   # parked sessions evicted under slot pressure
     session_fallbacks: int = 0   # evicted sessions fully re-prefilled
     overflows: int = 0           # requests finished with reason "overflow"
+    group_prefills: int = 0      # group-fork dispatches (1-row prefill+fork)
+    group_fork_requests: int = 0  # members admitted via a cache fork
+    group_prefill_traces: int = 0  # compiled group-fork shapes
+    group_partial_admissions: int = 0  # forks that admitted < the remainder
+    group_prefill_tokens_saved: int = 0  # prompt tokens members did NOT re-prefill
     # per-step occupancy trace for the Fig. 4 / utilization benchmark
     occupancy_trace: List[int] = field(default_factory=list)
 
@@ -182,7 +225,7 @@ class InferenceEngine:
         cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
         self.state = init_decode_state(cfg, num_slots, max_seq, cache_dtype)
         self.slots: List[Optional[Request]] = [None] * num_slots
-        self.pending: Deque[Request] = deque()
+        self.pending: Deque[Union[Request, GroupRequest]] = deque()
         self.completed: List[Request] = []
         self.sessions: Dict[int, EngineSession] = {}
         # session owning each slot (active OR parked); a slot is free for
@@ -208,11 +251,21 @@ class InferenceEngine:
         # back
         self._extend_fn = jax.jit(self._extend_impl)
         self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
+        self._group_prefill_fn = jax.jit(self._group_prefill_impl)
+        self._fork_scatter_fn = jax.jit(self._fork_scatter_impl,
+                                        donate_argnums=(0,))
 
     # ------------------------------------------------------------------ api
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
+
+    def submit_group(self, greq: GroupRequest) -> None:
+        """Admit a GRPO group as a unit: the shared prompt is prefilled
+        once and the KV cache forked to every member slot (partial
+        admission under slot pressure — see ``_admit_group``)."""
+        assert greq.members, "group must have at least one member"
+        self.pending.append(greq)
 
     def open_session(self, session_id: int) -> None:
         """Register a multi-turn session. Turns are submitted as Requests
@@ -244,13 +297,21 @@ class InferenceEngine:
         return sum(s is not None for s in self.slots)
 
     @property
+    def pending_units(self) -> int:
+        """Pending work in *member* units: a queued GroupRequest counts as
+        its remaining group size, not 1 — without this a G=16 group looks
+        as cheap as a single request to the pool's least-loaded dispatch."""
+        return sum(g.group_size if isinstance(g, GroupRequest) else 1
+                   for g in self.pending)
+
+    @property
     def load(self) -> int:
         """Work queued on this engine (pool dispatch key): live requests
         plus open sessions — each session is an ongoing conversation whose
         turns are all pinned here, and parked slots are otherwise invisible
         (slots[i] is None), so without this term a session-saturated engine
         reports load 0 and keeps winning ``open_session`` ties."""
-        return self.num_active + len(self.pending) + len(self.sessions)
+        return self.num_active + self.pending_units + len(self.sessions)
 
     @property
     def idle(self) -> bool:
@@ -295,6 +356,28 @@ class InferenceEngine:
         batch = {"tokens": tokens, "prompt_lens": ext_lens}
         return extend_sample(params, rows, batch, start_pos, temps, rng,
                              self.cfg, self.pcfg)
+
+    def _group_prefill_impl(self, params, tokens, prompt_lens, temps, rng):
+        """Fused group-shared prefill: run the ONE shared-prompt row through
+        the bucketed prefill and sample every member's first token from the
+        broadcast logits (one dispatch). ``temps`` is [R] — the row bucket
+        an equivalent per-member admission would have used."""
+        self.stats.group_prefill_traces += 1  # python side effect: trace-time
+        batch = self._build_prefill_batch(tokens, prompt_lens)
+        return prefill_fork_sample(params, batch, temps, rng, self.cfg,
+                                   self.max_seq, self.pcfg)
+
+    def _fork_scatter_impl(self, state, last_token, active, temps, gen,
+                           max_new, st, slot_idx, toks, row_temps,
+                           row_max_new, row_active):
+        """Fork the single prefilled row into every member slot: broadcast
+        the row (lazy under jit — a gather→broadcast, no materialized
+        [L, R, S_max, ...] copy) and reuse the bucketed-prefill scatter.
+        One dispatch, no host round trip; padded rows drop as usual."""
+        st_rows = fork_decode_rows(st, slot_idx.shape[0])
+        return self._scatter_impl(state, last_token, active, temps, gen,
+                                  max_new, st_rows, slot_idx, toks,
+                                  row_temps, row_max_new, row_active)
 
     def _tick_impl(self, params, state, token, active, temps, gen, max_new,
                    rng):
@@ -351,6 +434,26 @@ class InferenceEngine:
             jnp.asarray(tokens), jnp.asarray(ext_lens),
             jnp.asarray(start_pos), jnp.asarray(temps), self._rng)
         return toks, lps, st
+
+    def _group_prefill_exec(self, tokens, prompt_lens, temps):
+        """Run one group-shared prefill (single prompt row, member-bucket
+        ``temps``). Returns (tokens [R], logprobs [R], single-row state);
+        consumes exactly one split of the engine RNG — the same discipline
+        as a per-member prefill batch, which is what keeps fork and
+        independent admission on identical RNG streams."""
+        toks, lps, st, self._rng = self._group_prefill_fn(
+            self.params, jnp.asarray(tokens), jnp.asarray(prompt_lens),
+            jnp.asarray(temps), self._rng)
+        return toks, lps, st
+
+    def _fork_scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
+                           row_active) -> None:
+        (self.state, self._last_token, self._active, self._temps, self._gen,
+         self._max_new) = self._fork_scatter_fn(
+            self.state, self._last_token, self._active, self._temps,
+            self._gen, self._max_new, st, jnp.asarray(slot_idx),
+            jnp.asarray(toks), jnp.asarray(row_temps),
+            jnp.asarray(row_max_new), jnp.asarray(row_active))
 
     def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
                       row_active) -> None:
@@ -444,13 +547,18 @@ class InferenceEngine:
     def _admit(self) -> None:
         """Fill slots from the pending queue, strictly FIFO in type runs:
         session-extend turns re-activate their parked slot via a bucketed
-        extend (no free slot needed); everything else — fresh prompts,
-        first session turns, evicted-session fallbacks — goes through the
-        bucketed batched prefill, evicting LRU parked sessions when free
-        slots run out. Requests that finish at their first token free
-        their slot immediately, so keep admitting until slots or queue run
-        out."""
+        extend (no free slot needed); a GroupRequest prefills its shared
+        prompt once and forks the cache to every member slot; everything
+        else — fresh prompts, first session turns, evicted-session
+        fallbacks — goes through the bucketed batched prefill, evicting
+        LRU parked sessions when free slots run out. Requests that finish
+        at their first token free their slot immediately, so keep
+        admitting until slots or queue run out."""
         while self.pending:
+            if isinstance(self.pending[0], GroupRequest):
+                if not self._admit_group():
+                    return
+                continue
             if self._overflow_head():
                 continue
             if self._is_resident_extend(self.pending[0]):
@@ -464,7 +572,8 @@ class InferenceEngine:
         no progress is possible (every slot active)."""
         want = 0                      # head run length (no queue mutation)
         for req in self.pending:
-            if want >= self.num_slots or self._is_resident_extend(req):
+            if (want >= self.num_slots or isinstance(req, GroupRequest)
+                    or self._is_resident_extend(req)):
                 break
             if self._required_len(req) > self.max_seq:
                 continue              # overflow-doomed: never takes a slot
@@ -490,6 +599,7 @@ class InferenceEngine:
         prompts: List[np.ndarray] = []
         progress = False
         while (self.pending and len(reqs) < len(free)
+               and not isinstance(self.pending[0], GroupRequest)
                and not self._is_resident_extend(self.pending[0])):
             if self._overflow_head():
                 progress = True
@@ -538,6 +648,99 @@ class InferenceEngine:
         truncates the block itself."""
         return min(_pow2_bucket(ext_len, self._min_bucket),
                    self.max_seq - pos)
+
+    def _admit_group(self) -> bool:
+        """Admit (part of) the head GroupRequest via the shared-prefill
+        fork. Returns False when no progress is possible (no free slot,
+        nothing evictable). Partial admission: fork into however many
+        slots are free now; the remainder stays queued at the head and
+        re-forks (one more 1-row prefill, never per-member prefills) as
+        slots free up — first-token finishes can free slots within this
+        same ``_admit`` pass."""
+        greq = self.pending[0]
+        if len(greq.prompt_tokens) > self.max_seq:
+            # shared prompt can never fit: every member overflows, exactly
+            # as each would have independently
+            self.pending.popleft()
+            for req in greq.members:
+                req.finished = True
+                req.finish_reason = "overflow"
+                self.completed.append(req)
+                self.stats.overflows += 1
+            greq.members = []
+            return True
+        free = [i for i in range(self.num_slots)
+                if self.slots[i] is None and self._slot_session[i] is None]
+        while len(free) < len(greq.members):
+            slot = self._evict_lru_parked()
+            if slot is None:
+                break
+            free.append(slot)
+        if not free:
+            return False
+        k = min(len(free), len(greq.members))
+        if k < len(greq.members):
+            self.stats.group_partial_admissions += 1
+        members, greq.members = greq.members[:k], greq.members[k:]
+        if not greq.members:
+            self.pending.popleft()
+        self._admit_group_fork(greq, members, free[:k])
+        return True
+
+    def _admit_group_fork(self, greq: "GroupRequest", members: List[Request],
+                          slot_ids: List[int]) -> None:
+        """One shared-prefill fork dispatch: prefill the group prompt as a
+        single bucketed row, sample every member's first token from the
+        broadcast logits (byte-identical to a per-member prefill batch —
+        see ``models.prefill_fork_sample``), and fork the cache row into
+        the member slots with one jitted broadcast→scatter."""
+        k = len(members)
+        prompt = np.asarray(greq.prompt_tokens, np.int32)
+        plen = len(prompt)
+        if self._pad_prompts:
+            S_b = min(_pow2_bucket(plen, self._min_bucket), self.max_seq)
+        else:
+            S_b = plen
+        tokens = np.zeros((1, S_b), np.int32)
+        tokens[0, :plen] = prompt
+        plens = np.full((1,), plen, np.int32)
+        R = _pow2_bucket(k)           # member-row bucket, NOT the prompt row
+        temps = np.ones((R,), np.float32)
+        maxnew = np.ones((R,), np.int32)
+        for r, req in enumerate(members):
+            temps[r] = req.temperature
+            maxnew[r] = max(1, req.max_new_tokens)
+        toks, lps, st = self._group_prefill_exec(tokens, plens, temps)
+        toks_h, lps_h = jax.device_get((toks, lps))
+
+        slot_idx = np.full((R,), self.num_slots, np.int32)  # OOB rows drop
+        slot_idx[:k] = slot_ids
+        row_active = np.zeros((R,), bool)
+        for r, req in enumerate(members):
+            sess = self._session_of(req)
+            if sess is not None:
+                # the fork establishes session residency for every member
+                # at once (a group of multi-turn rollouts): the member slot
+                # parks for its turn-2 extend exactly as a prefilled first
+                # turn would
+                sess.slot = slot_ids[r]
+                sess.last_use = self._next_use()
+                sess.cache_version = self.policy_version
+                self._slot_session[slot_ids[r]] = req.session_id
+            tok, lp = int(toks_h[r]), float(lps_h[r])
+            finished = (tok == self.eos_id) or (req.max_new_tokens <= 1)
+            self._record(req, tok, lp, finished)
+            if finished:
+                self._finish(req)
+            else:
+                self.slots[slot_ids[r]] = req
+                row_active[r] = True
+        self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
+                                row_active)
+        self.stats.group_prefills += 1
+        self.stats.group_fork_requests += k
+        self.stats.prefill_tokens += plen               # prefilled ONCE
+        self.stats.group_prefill_tokens_saved += (k - 1) * plen
 
     def _admit_batch(self, reqs: List[Request], prompts: List[np.ndarray],
                      slot_ids: List[int]) -> None:

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import extend, prefill, serve_step
+from repro.models import extend, fork_decode_rows, prefill, serve_step
 
 from .engine import InferenceEngine
 
@@ -68,6 +68,38 @@ class HostReferenceEngine(InferenceEngine):
             toks_h[r] = int(toks[r])                 # scalar sync per row
             lps_h[r] = float(logp[r, toks_h[r]])     # and per logprob
         return toks_h, lps_h, st
+
+    def _group_prefill_exec(self, tokens, prompt_lens, temps):
+        """Host-path group-shared prefill: jitted 1-row logits, host-side
+        broadcast to the member-row bucket, eager categorical sampling
+        with per-row scalar syncs (same RNG split discipline as the fused
+        fork — identical streams under a fixed seed)."""
+        self._rng, k = jax.random.split(self._rng)
+        R = temps.shape[0]
+        batch = self._build_prefill_batch(jnp.asarray(tokens),
+                                          jnp.asarray(prompt_lens))
+        logits, st = self._prefill_logits(self.params, batch)
+        logits = jnp.broadcast_to(jnp.asarray(logits, jnp.float32)[0],
+                                  (R, logits.shape[-1]))
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+        toks = jax.random.categorical(k, scaled, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        toks_h = np.zeros((R,), np.int32)
+        lps_h = np.zeros((R,), np.float32)
+        for r in range(R):
+            toks_h[r] = int(toks[r])                 # scalar sync per row
+            lps_h[r] = float(logp[r, toks_h[r]])     # and per logprob
+        return toks_h, lps_h, st
+
+    def _fork_scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
+                           row_active) -> None:
+        """Old-style cache fork: eagerly broadcast the single prefilled row
+        into member rows on host, then write them slot by slot (one eager
+        dispatch per tensor per row — the N-small-transfers pattern the
+        fused fork replaces with a single scatter)."""
+        st_rows = fork_decode_rows(st, len(np.asarray(slot_idx)))
+        self._scatter_exec(st_rows, slot_idx, toks, row_temps, row_max_new,
+                           row_active)
 
     def _extend_exec(self, gather_idx, tokens, ext_lens, start_pos, temps):
         """Host-path session extend: eager row gather + jitted logits +

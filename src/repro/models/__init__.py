@@ -1,14 +1,15 @@
 """Composable model definitions for all assigned architecture families."""
 from .model import (DEFAULT_PARALLEL, chunked_token_nll, embed_inputs, encode,
-                    extend, extend_sample, forward, forward_hidden,
-                    head_weights, init_decode_state, init_params, lm_loss,
-                    prefill, prefill_sample, sample_logits, sample_step,
-                    serve_step, token_logprobs)
+                    extend, extend_sample, fork_decode_rows, forward,
+                    forward_hidden, head_weights, init_decode_state,
+                    init_params, lm_loss, prefill, prefill_fork_sample,
+                    prefill_sample, sample_logits, sample_step, serve_step,
+                    token_logprobs)
 
 __all__ = [
     "DEFAULT_PARALLEL", "chunked_token_nll", "embed_inputs", "encode",
-    "extend", "extend_sample", "forward", "forward_hidden", "head_weights",
-    "init_decode_state", "init_params", "lm_loss", "prefill",
-    "prefill_sample", "sample_logits", "sample_step", "serve_step",
-    "token_logprobs",
+    "extend", "extend_sample", "fork_decode_rows", "forward",
+    "forward_hidden", "head_weights", "init_decode_state", "init_params",
+    "lm_loss", "prefill", "prefill_fork_sample", "prefill_sample",
+    "sample_logits", "sample_step", "serve_step", "token_logprobs",
 ]

@@ -227,6 +227,13 @@ def attention_decode(q, k_cache, v_cache, pos, *, window=0, scale=None):
     """One-token decode. q: [B,1,Hq,hd]; caches: [B,S_max,Hkv,hd]; pos: [B] or scalar.
 
     With a window, reads only a [window]-sized dynamic slice of the cache.
+
+    The validity mask ``k_idx <= pos`` is the load-bearing invariant for
+    every cache-manipulation fast path in the engine: right-padded bucketed
+    prefill, session extend, and the group-shared-prefill cache fork all
+    leave garbage K/V *above* a row's logical position, and all are sound
+    because this mask never lets a query read it — decode then overwrites
+    the garbage in place before ``pos`` can reach it.
     """
     B, _, Hq, hd = q.shape
     S_max, Hkv = k_cache.shape[1], k_cache.shape[2]

@@ -633,6 +633,61 @@ def prefill_sample(params, batch, temps, rng, cfg: ModelConfig, max_seq: int,
     return toks, lps, state, rng
 
 
+def fork_decode_rows(state, num_rows: int):
+    """Fork one prefilled decode-state row into ``num_rows`` identical rows.
+
+    ``state`` is a single-row decode state (caches ``[L, 1, S_max, ...]``,
+    ``pos`` ``[1]``) as produced by a 1-row ``prefill``; the result has the
+    same tree with the row axis broadcast to ``num_rows``. This is the
+    group-shared-prefill cache fork (GRPO groups sample ``group_size``
+    rollouts of one prompt): the shared prompt's K/V prefix is computed
+    once and every member slot receives a bitwise copy.
+
+    The fork is ``prompt_lens``-aware by construction: a right-padded
+    bucketed prefill leaves garbage K/V above ``pos`` in the source row,
+    and the fork copies it verbatim — sound for the same reason right
+    padding itself is sound (the decode/extend masks ``k_idx <= pos``
+    never read above the row's logical position, and each member's decode
+    overwrites its own padded tail in place). Broadcasts are lazy under
+    jit, so inside a jitted scatter this lowers to a gather→broadcast
+    with no materialized [L, G, S_max, ...] intermediate on host.
+    """
+    def bcast(key, val):
+        if key == "pos":
+            return jnp.broadcast_to(val[:1], (num_rows,))
+        # cache tensors are [L, B, ...] -> row axis 1
+        return jnp.broadcast_to(val[:, :1],
+                                val.shape[:1] + (num_rows,) + val.shape[2:])
+    return {k: bcast(k, v) for k, v in state.items()}
+
+
+def prefill_fork_sample(params, batch, temps, rng, cfg: ModelConfig,
+                        max_seq: int, pcfg=DEFAULT_PARALLEL):
+    """Group-shared prefill + fused first-token sampling for all members.
+
+    ``batch`` holds ONE row — the group's shared prompt, right-padded to
+    its length bucket with ``prompt_lens`` — run through the same
+    ``prefill`` machinery as ``prefill_sample``. ``temps`` is ``[R]``
+    where ``R`` is the row bucket an equivalent per-member admission
+    would have used (pow2 of the member count): the single row of logits
+    is broadcast to ``[R, V]`` before sampling, so member ``r`` draws
+    against the identical logits and the identical slice of the
+    ``[R, V]`` gumbel noise that row ``r`` of a batched ``prefill_sample``
+    over R copies of the prompt would have seen — byte-identical streams,
+    at 1/G of the prefill FLOPs. One RNG split per call (the engine's
+    one-split-per-admission discipline).
+
+    Returns (tokens [R], logprobs [R], single-row state, new_rng); the
+    caller forks the state into member slots (``fork_decode_rows``).
+    """
+    rng, k = jax.random.split(rng)
+    logits, state = prefill(params, batch, cfg, max_seq=max_seq, pcfg=pcfg)
+    R = temps.shape[0]
+    logits_b = jnp.broadcast_to(logits[0], (R, logits.shape[-1]))
+    toks, lps = sample_logits(k, logits_b, temps)
+    return toks, lps, state, rng
+
+
 def extend_sample(params, state, batch, start_pos, temps, rng,
                   cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
     """Bucketed session extend + fused first-token sampling.

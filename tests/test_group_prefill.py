@@ -1,0 +1,349 @@
+"""Group-shared prefill: one prompt prefill forked to a whole GRPO group.
+
+The contract under test is the one that makes the fork hot path safe: a
+``GroupRequest`` (prompt prefilled ONCE, KV cache forked to all G member
+slots, first tokens sampled from the broadcast logits) must emit
+**byte-identical** token/logprob/policy-version streams to G independent
+prefills of the same prompt under a fixed seed — including across an
+in-flight ``update_weights`` — while doing 1/G of the admission prefill
+work. Plus: partial admission under slot pressure, the G=1 degenerate
+case, the host-reference oracle, and the orchestrator-level fallbacks
+(client without ``generate_group``; sibling cancellation when one member
+rollout raises).
+"""
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.orchestrator import AsyncPoolClient
+from repro.data import TOKENIZER
+from repro.envs import MultiTurnEnv, Rubric
+from repro.inference import (GroupRequest, HostReferenceEngine,
+                             InferenceEngine, InferencePool, Request)
+from repro.models import init_params
+
+PROMPT = (np.arange(12, dtype=np.int32) % 40) + 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
+                              vocab_size=TOKENIZER.vocab_size, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _members(G, *, prompt=PROMPT, max_new=8, base_id=0):
+    return [Request(base_id + i, "p0", np.asarray(prompt, np.int32),
+                    max_new, group_id=0) for i in range(G)]
+
+
+def _drain(eng, *, update_at=None, new_params=None):
+    pushed = False
+    while not eng.idle:
+        eng.step()
+        if (update_at is not None and not pushed
+                and eng.stats.decode_steps >= update_at):
+            eng.update_weights(new_params, 1)
+            pushed = True
+    done = {r.request_id: r for r in eng.drain_completed()}
+    return [(tuple(done[i].completion), tuple(done[i].logprobs),
+             tuple(done[i].versions), done[i].finish_reason)
+            for i in sorted(done)]
+
+
+def _run_group(eng, G, **kw):
+    eng.submit_group(GroupRequest(0, "p0", PROMPT, members=_members(G)))
+    return _drain(eng, **kw)
+
+
+def _run_independent(eng, G, **kw):
+    for req in _members(G):
+        eng.submit(req)
+    return _drain(eng, **kw)
+
+
+def test_group_fork_matches_independent_prefills(setup):
+    """Byte-identical streams, 1/G of the prompt prefill work."""
+    cfg, params = setup
+    G = 4
+    g_eng = InferenceEngine(params, cfg, num_slots=4, max_seq=128, seed=7)
+    b_eng = InferenceEngine(params, cfg, num_slots=4, max_seq=128, seed=7)
+    assert _run_group(g_eng, G) == _run_independent(b_eng, G)
+    assert g_eng.stats.group_prefills == 1
+    assert g_eng.stats.group_fork_requests == G
+    assert g_eng.stats.prefill_tokens * G == b_eng.stats.prefill_tokens
+    assert g_eng.stats.group_prefill_tokens_saved == (G - 1) * len(PROMPT)
+    assert g_eng.stats.group_partial_admissions == 0
+
+
+def test_group_fork_parity_across_inflight_update(setup):
+    """A weight update landing mid-decode must stamp the same version
+    boundaries in both admission modes (one group, multiple policies)."""
+    cfg, params = setup
+    p2 = jax.tree_util.tree_map(lambda x: x * 1.01, params)
+    kw = dict(update_at=3, new_params=p2)
+    g_eng = InferenceEngine(params, cfg, num_slots=4, max_seq=128, seed=5)
+    b_eng = InferenceEngine(params, cfg, num_slots=4, max_seq=128, seed=5)
+    sg = _run_group(g_eng, 4, **kw)
+    assert sg == _run_independent(b_eng, 4, **kw)
+    versions = [v for s in sg for v in s[2]]
+    assert 0 in versions and 1 in versions, \
+        "update must land mid-stream for the test to mean anything"
+
+
+def test_group_fork_g1_degenerate(setup):
+    """G=1 is a plain request in a group coat: identical stream to an
+    independently submitted request (row bucket 1, same RNG splits)."""
+    cfg, params = setup
+    g_eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=11)
+    b_eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=11)
+    assert _run_group(g_eng, 1) == _run_independent(b_eng, 1)
+    assert g_eng.stats.group_prefills == 1
+
+
+def test_group_fork_matches_host_reference(setup):
+    """The pre-fusion host path (eager row-by-row fork scatter + host
+    sampling) drives the same scheduling: the parity oracle covers the
+    group fork."""
+    cfg, params = setup
+    fused = InferenceEngine(params, cfg, num_slots=4, max_seq=128, seed=13)
+    host = HostReferenceEngine(params, cfg, num_slots=4, max_seq=128,
+                               seed=13)
+    sf = _run_group(fused, 4)
+    sh = _run_group(host, 4)
+    for a, b in zip(sf, sh):
+        assert a[0] == b[0] and a[2] == b[2] and a[3] == b[3]
+        np.testing.assert_allclose(a[1], b[1], atol=1e-5)
+    assert host.stats.group_prefills == fused.stats.group_prefills == 1
+
+
+def test_group_partial_admission_under_slot_pressure(setup):
+    """Fewer free slots than members: the group forks into what is free
+    now and the remainder re-forks as slots drain — every member
+    completes, and the admission is counted as partial."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=3, max_seq=128, seed=3)
+    blocker = Request(100, "long", PROMPT, 25)
+    eng.submit(blocker)
+    eng.step()                      # long request takes a slot, 2 stay free
+    eng.submit_group(GroupRequest(1, "p1", PROMPT + 1,
+                                  members=_members(3, prompt=PROMPT + 1,
+                                                   max_new=5)))
+    eng.run_until_idle()
+    done = {r.request_id: r for r in eng.drain_completed()}
+    assert set(done) == {0, 1, 2, 100}
+    for i in range(3):
+        assert done[i].finished and len(done[i].completion) >= 1
+        assert done[i].finish_reason in ("eos", "length")
+    assert eng.stats.group_partial_admissions >= 1
+    assert eng.stats.group_prefills >= 2    # fork now + re-fork later
+    # still cheaper than per-member prefills: 3 members, <3 prompt runs
+    assert eng.stats.group_prefill_tokens_saved > 0
+
+
+def test_group_prompt_overflow(setup):
+    """A shared prompt past max_seq must finish every member with
+    finish_reason='overflow' without crashing the pump loop."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=16, seed=0)
+    big = (np.arange(40, dtype=np.int32) % 40) + 10
+    eng.submit_group(GroupRequest(0, "big", big,
+                                  members=_members(3, prompt=big)))
+    eng.submit(Request(50, "ok", PROMPT[:6], 4))
+    eng.run_until_idle()
+    done = {r.request_id: r for r in eng.drain_completed()}
+    assert all(done[i].finish_reason == "overflow" for i in range(3))
+    assert all(done[i].completion == [] for i in range(3))
+    assert done[50].finish_reason in ("eos", "length")
+    assert eng.stats.overflows == 3
+
+
+def test_pool_load_counts_group_members(setup):
+    """A queued GroupRequest must weigh as its member count in the pool's
+    least-loaded dispatch, not as one request."""
+    cfg, params = setup
+    engines = [InferenceEngine(params, cfg, num_slots=2, max_seq=64, seed=i)
+               for i in range(2)]
+    pool = InferencePool(engines)
+    pool.submit_group("g0", PROMPT, group_size=6, max_new_tokens=3)
+    assert engines[0].load == 6
+    pool.submit_group("g1", PROMPT, group_size=2, max_new_tokens=3)
+    assert engines[1].load == 2      # second group avoids the loaded engine
+
+
+# ---------------------------------------------------------------------------
+# environment / client level
+# ---------------------------------------------------------------------------
+
+
+class _PingEnv(MultiTurnEnv):
+    """Forces a fixed number of turns regardless of model output."""
+
+    env_id = "ping"
+
+    async def env_response(self, state, completion):
+        return False, f"result {state['turn']}"
+
+
+class _FailingEnv(_PingEnv):
+    """Member #fail_at of a group raises after its first generation."""
+
+    def __init__(self, *a, fail_at=1, **kw):
+        super().__init__(*a, **kw)
+        self.fail_at = fail_at
+        self._spawned = 0
+
+    async def rollout(self, client, row, **kw):
+        me = self._spawned
+        self._spawned += 1
+        if me == self.fail_at:
+            await asyncio.sleep(0)
+            raise RuntimeError("member exploded")
+        return await super().rollout(client, row, **kw)
+
+
+class _NoGroupClient:
+    """AsyncPoolClient minus the group API — envs must fall back to
+    per-member rollouts transparently (sessions still available)."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.pump = inner.pump
+
+    def open_session(self):
+        return self._inner.open_session()
+
+    def close_session(self, sid):
+        return self._inner.close_session(sid)
+
+    async def generate(self, prompt_tokens, *, max_new_tokens=None,
+                       temperature=1.0, session=None):
+        return await self._inner.generate(
+            prompt_tokens, max_new_tokens=max_new_tokens,
+            temperature=temperature, session=session)
+
+
+def _mk_env(env_cls, max_turns, **kw):
+    return env_cls([{"id": "p0", "prompt": "question zero"}],
+                   Rubric([lambda **kwargs: 0.0]),
+                   max_turns=max_turns, max_new_tokens=5, **kw)
+
+
+def _run_rollout_group(cfg, params, *, group_mode, max_turns, G=4,
+                       env=None):
+    env = env or _mk_env(_PingEnv, max_turns)
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=256, seed=13)
+    client = AsyncPoolClient(InferencePool([eng]), max_new_tokens=5)
+    raw = client
+    if not group_mode:
+        client = _NoGroupClient(client)
+
+    async def go():
+        task = asyncio.ensure_future(
+            env.rollout_group(client, env.dataset[0], G))
+        while not task.done():
+            await asyncio.sleep(0)
+            raw.pump()
+            await asyncio.sleep(0)
+        return task.result()
+
+    outs = asyncio.get_event_loop().run_until_complete(go())
+    return outs, eng, raw
+
+
+def _streams(outs):
+    return [(tuple(r.completion_tokens.tolist()),
+             tuple(r.infer_logprobs.tolist()),
+             tuple(r.policy_versions.tolist()),
+             tuple(r.completion_mask.tolist())) for r in outs]
+
+
+@pytest.mark.parametrize("max_turns", [1, 3])
+def test_env_rollout_group_parity(setup, max_turns):
+    """MultiTurnEnv.rollout_group over generate_group reproduces the
+    per-member client's rollouts byte-for-byte — single-turn (pure fork)
+    and multi-turn (fork seeds group sessions, turns 2+ extend)."""
+    cfg, params = setup
+    g_outs, g_eng, _ = _run_rollout_group(cfg, params, group_mode=True,
+                                          max_turns=max_turns)
+    b_outs, b_eng, _ = _run_rollout_group(cfg, params, group_mode=False,
+                                          max_turns=max_turns)
+    assert _streams(g_outs) == _streams(b_outs)
+    assert g_eng.stats.group_prefills == 1
+    assert g_eng.stats.prefill_tokens < b_eng.stats.prefill_tokens
+    if max_turns > 1:
+        assert g_eng.stats.extends > 0       # fork seeded session residency
+        assert len(g_eng.sessions) == 0      # all closed after the group
+
+
+def test_env_rollout_group_fallback_without_group_client(setup):
+    """A client with no generate_group still serves groups: the base
+    per-member path engages transparently."""
+    cfg, params = setup
+    outs, eng, raw = _run_rollout_group(cfg, params, group_mode=False,
+                                        max_turns=2, G=3)
+    assert len(outs) == 3
+    assert eng.stats.group_prefills == 0     # nothing went the fork path
+    assert all(len(r.completion_tokens) > 0 for r in outs)
+    assert raw.in_flight == 0
+
+
+@pytest.mark.parametrize("group_mode", [True, False])
+def test_rollout_group_member_failure_cancels_siblings(setup, group_mode):
+    """Regression (run_group leak): when one member rollout raises, its
+    siblings must be cancelled AND awaited — no leaked client futures, no
+    leaked engine sessions — and the engine must drain back to idle."""
+    cfg, params = setup
+    env = _mk_env(_FailingEnv, 3)
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=256, seed=13)
+    client = AsyncPoolClient(InferencePool([eng]), max_new_tokens=5)
+    raw = client
+    if not group_mode:
+        client = _NoGroupClient(client)
+
+    async def go():
+        task = asyncio.ensure_future(
+            env.rollout_group(client, env.dataset[0], 4))
+        with pytest.raises(RuntimeError, match="member exploded"):
+            while True:
+                await asyncio.sleep(0)
+                raw.pump()
+                await asyncio.sleep(0)
+                if task.done():
+                    task.result()
+                    break
+        # cancelled siblings released their futures and sessions
+        assert raw.in_flight == 0
+        while not raw.pool.idle:             # orphaned work still drains
+            raw.pump()
+        raw.pump()
+        assert raw.in_flight == 0
+        assert len(eng.sessions) == 0
+
+    asyncio.get_event_loop().run_until_complete(go())
+
+
+def test_orchestrator_spawn_group_uses_rollout_group(setup):
+    """Orchestrator._spawn_group routes through env.rollout_group, so a
+    grouped batch exercises the shared-prefill fork end to end."""
+    cfg, params = setup
+    from repro.configs.base import RLConfig
+    from repro.core.orchestrator import Orchestrator
+    env = _PingEnv([{"id": f"p{i}", "prompt": f"question {i}"}
+                    for i in range(3)],
+                   Rubric([lambda **kw: 0.0]), max_turns=2,
+                   max_new_tokens=4)
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=256, seed=21)
+    rl = RLConfig(group_size=2, drop_zero_signal_groups=False)
+    orch = Orchestrator(env, InferencePool([eng]), rl, max_new_tokens=4)
+    batch = asyncio.get_event_loop().run_until_complete(
+        orch.gather_batch(2, concurrent_groups=2))
+    assert batch["tokens"].shape[0] == 4     # 2 groups x G=2
+    assert eng.stats.group_prefills >= 2
+    assert orch.stats.groups_completed >= 2
