@@ -3,7 +3,10 @@
 Trainer (IcePop + Muon) + disaggregated inference pool (2 engines,
 continuous batching) + orchestrator (difficulty pools, zero-signal
 filtering, staleness filter, in-flight weight updates) + i3-math / i3-logic
-environments via EnvGroup.
+environments via EnvGroup — driven by the AsyncRLRunner (§2.1.2): a
+continuously-running rollout producer feeds a bounded batch queue while
+the trainer overlaps its device step with decode ticks. `--async-level 0`
+runs the sequential reference loop instead.
 
 Run:  PYTHONPATH=src python examples/rl_end_to_end.py [--steps 8]
 """
@@ -17,7 +20,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import OptimizerConfig, ParallelConfig, RLConfig
-from repro.core import Orchestrator
+from repro.core import AsyncRLRunner, Orchestrator
 from repro.data import TOKENIZER
 from repro.envs import EnvGroup, load_logic_env, load_math_env
 from repro.inference import InferenceEngine, InferencePool
@@ -29,6 +32,9 @@ def main():
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--algorithm", default="icepop",
                     choices=["icepop", "cispo", "gspo"])
+    ap.add_argument("--async-level", type=int, default=8,
+                    help="trainer may run this many steps ahead of rollout "
+                         "generation (0 = sequential reference loop)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(get_config("minicpm-2b:reduced"),
@@ -36,7 +42,7 @@ def main():
     pcfg = ParallelConfig(remat="none", loss_chunk=0)
     opt = OptimizerConfig(name="muon", lr=5e-3, schedule="constant")
     rl = RLConfig(batch_prompts=8, group_size=4, algorithm=args.algorithm,
-                  max_off_policy_steps=8)
+                  max_off_policy_steps=8, async_level=args.async_level)
 
     trainer = Trainer(jax.random.PRNGKey(0), cfg, opt, rl, pcfg,
                       dtype=jnp.float32, mode="rl")
@@ -47,28 +53,30 @@ def main():
                     load_logic_env(n=16, max_new_tokens=6)],
                    names=["math", "logic"])
     orch = Orchestrator(env, pool, rl, max_new_tokens=6)
+    runner = AsyncRLRunner(trainer, orch)
 
-    async def loop():
-        print(f"algorithm={args.algorithm}  envs=math+logic  "
-              f"batch={rl.batch_prompts}x{rl.group_size}")
-        for step in range(args.steps):
-            batch = await orch.gather_batch(rl.batch_prompts)
-            m = trainer.step(batch)
-            orch.push_weights(trainer.params, trainer.version)
-            n = rl.batch_prompts * rl.group_size
-            print(f"step {step:3d}  rl_loss={m['rl_loss']:+.4f}  "
-                  f"reward={np.mean(orch.stats.rewards[-n:]):.3f}  "
-                  f"masked={m.get('masked_frac', 0.0):.3f}  "
-                  f"stale_drops={orch.stats.rollouts_dropped_stale}  "
-                  f"zero_sig={orch.stats.groups_dropped_zero_signal}",
-                  flush=True)
-        s = orch.stats
-        print(f"\ndone: {s.groups_completed} groups, {s.decode_ticks} decode "
-              f"ticks, {s.weight_pushes} in-flight weight pushes")
-        print("per-engine weight updates:",
-              [e.stats.weight_updates for e in pool.engines])
+    print(f"algorithm={args.algorithm}  envs=math+logic  "
+          f"batch={rl.batch_prompts}x{rl.group_size}  "
+          f"async_level={rl.async_level}")
 
-    asyncio.run(loop())
+    def on_step(step, m, r):
+        n = rl.batch_prompts * rl.group_size
+        print(f"step {step:3d}  rl_loss={m['rl_loss']:+.4f}  "
+              f"reward={np.mean(orch.stats.rewards[-n:]):.3f}  "
+              f"masked={m.get('masked_frac', 0.0):.3f}  "
+              f"stale_drops={orch.stats.rollouts_dropped_stale}  "
+              f"zero_sig={orch.stats.groups_dropped_zero_signal}  "
+              f"ahead={r.stats.trainer_ahead[-1]}", flush=True)
+
+    asyncio.run(runner.run(args.steps, on_step=on_step))
+    s, rs = orch.stats, runner.stats
+    print(f"\ndone: {s.groups_completed} groups, {s.decode_ticks} decode "
+          f"ticks, {s.weight_pushes} in-flight weight pushes")
+    print(f"overlap: {rs.overlap_ticks} decode ticks "
+          f"({rs.overlap_tokens} tokens) inside train-step windows, "
+          f"bubble_fraction={rs.bubble_fraction:.3f}")
+    print("per-engine weight updates:",
+          [e.stats.weight_updates for e in pool.engines])
 
 
 if __name__ == "__main__":

@@ -266,6 +266,11 @@ class RLConfig:
     group_size: int = 16
     max_context: int = 65536
     max_off_policy_steps: int = 8
+    # §2.1.2: how many optimizer steps the trainer may run ahead of rollout
+    # generation (the bounded batch-queue capacity of the async runner).
+    # 0 = strictly sequential gather -> step -> push; 8 was the paper's
+    # production setting.
+    async_level: int = 8
     alpha: float = 0.5
     beta: float = 5.0
     rollout_kill_threshold: float = 1e-5

@@ -4,16 +4,21 @@ losses       IcePop (Eq. 1-2) + CISPO/GSPO baselines
 rollouts     policy-version-stamped trajectories, staleness filter, packing
 filtering    difficulty pools + online zero-signal filtering
 orchestrator continuous batching, in-flight weight relays, batch assembly
+async_rl     the async-k runner: rollout producer + bounded BatchQueue +
+             overlapped trainer (§2.1.2, Fig. 3) — see README.md here
 """
 from .losses import (LOSSES, cispo_loss, group_advantages, gspo_loss,
                      icepop_loss, rl_loss, rollout_kill_mask)
-from .rollouts import Rollout, RolloutGroup, filter_stale, pack_batch
+from .rollouts import (Rollout, RolloutGroup, batch_policy_span,
+                       filter_stale, pack_batch)
 from .filtering import DifficultyPools, filter_zero_signal
 from .orchestrator import AsyncPoolClient, Orchestrator, OrchestratorStats
+from .async_rl import AsyncRLRunner, BatchQueue, RunnerStats
 
 __all__ = [
-    "AsyncPoolClient", "DifficultyPools", "LOSSES", "Orchestrator",
-    "OrchestratorStats", "Rollout", "RolloutGroup", "cispo_loss",
+    "AsyncPoolClient", "AsyncRLRunner", "BatchQueue", "DifficultyPools",
+    "LOSSES", "Orchestrator", "OrchestratorStats", "Rollout",
+    "RolloutGroup", "RunnerStats", "batch_policy_span", "cispo_loss",
     "filter_stale", "filter_zero_signal", "group_advantages", "gspo_loss",
     "icepop_loss", "pack_batch", "rl_loss", "rollout_kill_mask",
 ]

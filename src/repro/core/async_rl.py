@@ -1,0 +1,278 @@
+"""Async RL runner (§2.1.2, Fig. 3): overlap rollout generation with
+training.
+
+The paper's central systems claim is that the trainer runs up to
+``async_level = k`` optimizer steps ahead of rollout generation, with
+in-flight weight updates keeping inference saturated (">2x step time
+without in-flight"). This module promotes that overlap from the
+event-driven simulation in ``benchmarks/fig3_async_overlap.py`` to the
+real stack:
+
+  producer   ``Orchestrator.produce_batches`` — a continuously-running
+             task that keeps rollout groups in flight and feeds assembled
+             batches into a bounded ``BatchQueue``. A full queue blocks
+             the put: generation never runs more than ``async_level``
+             batches ahead of the trainer (backpressure).
+  trainer    the consumer loop — dequeues a batch (re-checking staleness
+             at dequeue), dispatches the jitted step WITHOUT a host sync
+             (``Trainer.step_async``), keeps pumping decode ticks while
+             the device computes, and relays the new policy in-flight the
+             moment the step's params are ready.
+
+``async_level = 0`` bypasses the queue entirely and reproduces the
+sequential ``gather_batch -> step -> push_weights`` loop exactly (same
+batches, same metrics under a fixed seed — parity-tested); ``>= 1``
+overlaps generation and training. See ``src/repro/core/README.md`` for
+the lifecycle diagram and stats table.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .orchestrator import Orchestrator
+from .rollouts import (RolloutGroup, batch_policy_span, filter_stale,
+                       pack_batch)
+
+if TYPE_CHECKING:  # repro.train imports repro.core.losses — avoid the cycle
+    from repro.train.trainer import Trainer
+
+
+class BatchQueue(asyncio.Queue):
+    """Bounded producer→trainer queue of rollout-group batches.
+
+    Capacity IS the async level: a blocked ``put`` is the backpressure
+    that pauses the producer, a blocked ``get`` is the trainer waiting for
+    generation to catch up. Items are *unpacked* group lists so the
+    consumer can re-check staleness (and re-carry survivors) at dequeue.
+    """
+
+    def __init__(self, capacity: int):
+        assert capacity >= 1, "BatchQueue needs capacity >= 1 (async mode)"
+        super().__init__(maxsize=capacity)
+        self.high_water = 0
+
+    def _put(self, item) -> None:
+        super()._put(item)
+        self.high_water = max(self.high_water, self.qsize())
+
+
+@dataclass
+class RunnerStats:
+    """Pipeline observability for one ``AsyncRLRunner.run``."""
+
+    async_level: int = 0
+    steps: int = 0
+    # decode pump ticks (and tokens they generated) that ran *inside* a
+    # train-step execution window — the overlap the paper's Fig. 3 is about
+    overlap_ticks: int = 0
+    overlap_tokens: int = 0
+    # host seconds spent inside train-step windows, and the subset of that
+    # during which the decode pump made no progress (sync mode: all of it)
+    train_time: float = 0.0
+    stalled_train_time: float = 0.0
+    elapsed: float = 0.0
+    # dequeue-time staleness re-check: whole batches sent back to the carry
+    batches_requeued_stale: int = 0
+    queue_depth: List[int] = field(default_factory=list)  # sampled at dequeue
+    queue_high_water: int = 0
+    # trainer.version - freshest generating policy in the consumed batch
+    trainer_ahead: List[int] = field(default_factory=list)
+    # (trainer version at consume, oldest, freshest policy version) per step
+    consumed_spans: List[Tuple[int, int, int]] = field(default_factory=list)
+    pushed_versions: List[int] = field(default_factory=list)
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Fraction of the run during which training stalled the decode
+        pump — the paper's idle bubble. Sequential mode pays the full
+        train time as bubble; async-k hides it behind decode ticks."""
+        return self.stalled_train_time / self.elapsed if self.elapsed else 0.0
+
+
+class AsyncRLRunner:
+    """Drives rollout producer + trainer concurrently (§2.1.2).
+
+    ``orch.cfg.async_level`` selects the mode:
+      0   sequential parity path: ``gather_batch -> Trainer.step ->
+          push_weights``, byte-identical to the pre-runner loop;
+      k   pipelined path: producer feeds a capacity-k ``BatchQueue``,
+          the trainer overlaps its device step with decode pump ticks,
+          staleness is re-checked at dequeue, and the new policy is
+          relayed in-flight as soon as the step's params materialize.
+    """
+
+    def __init__(self, trainer: "Trainer", orch: Orchestrator, *,
+                 concurrent_groups: Optional[int] = None,
+                 record_batches: bool = False):
+        self.trainer = trainer
+        self.orch = orch
+        self.concurrent_groups = concurrent_groups
+        self.record_batches = record_batches
+        self.batches: List[dict] = []
+        self.metrics: List[dict] = []
+        self.stats = RunnerStats(async_level=orch.cfg.async_level)
+
+    # ------------------------------------------------------------- shared
+
+    def _consume(self, batch: dict) -> None:
+        """Per-step bookkeeping common to both modes (pre-dispatch)."""
+        if self.record_batches:
+            self.batches.append(batch)
+        v = self.trainer.version
+        if (np.asarray(batch["loss_mask"]) > 0).any():
+            oldest, freshest = batch_policy_span(batch)
+        else:
+            # no trainable model tokens (fully masked/env-only batch):
+            # nothing was generated behind the trainer — the span's (0, 0)
+            # sentinel would log a bogus trainer_ahead spike of `v`
+            oldest = freshest = v
+        self.stats.consumed_spans.append((v, oldest, freshest))
+        self.stats.trainer_ahead.append(v - freshest)
+
+    def _finish_step(self, step: int, metrics: dict,
+                     on_step: Optional[Callable]) -> None:
+        self.orch.push_weights(self.trainer.params, self.trainer.version)
+        self.stats.pushed_versions.append(self.trainer.version)
+        self.stats.steps += 1
+        self.metrics.append(metrics)
+        if on_step is not None:
+            on_step(step, metrics, self)
+
+    # --------------------------------------------------- sequential (k=0)
+
+    async def _run_sync(self, num_steps: int, on_step) -> None:
+        cfg = self.orch.cfg
+        for step in range(num_steps):
+            batch = await self.orch.gather_batch(
+                cfg.batch_prompts, concurrent_groups=self.concurrent_groups)
+            self._consume(batch)
+            t0 = time.perf_counter()
+            # blocking step: the decode pump is stalled for the whole
+            # device step — this IS the sync bubble the paper measures
+            metrics = self.trainer.step(batch)
+            dt = time.perf_counter() - t0
+            self.stats.train_time += dt
+            self.stats.stalled_train_time += dt
+            self._finish_step(step, metrics, on_step)
+
+    # ---------------------------------------------------- pipelined (k>=1)
+
+    async def _run_async(self, num_steps: int, on_step) -> None:
+        cfg = self.orch.cfg
+        queue = BatchQueue(cfg.async_level)
+        stop = asyncio.Event()
+        producer = asyncio.get_running_loop().create_task(
+            self.orch.produce_batches(
+                cfg.batch_prompts, queue,
+                concurrent_groups=self.concurrent_groups, stop=stop))
+        try:
+            for step in range(num_steps):
+                groups = await self._next_fresh_groups(queue, producer)
+                batch = pack_batch(groups,
+                                   self.orch._batch_seq_len(groups))
+                self._consume(batch)
+                metrics = await self._train_overlapped(batch)
+                # in-flight relay: the step's params just materialized —
+                # push before dequeuing the next batch so every engine
+                # decodes under the freshest policy
+                self._finish_step(step, metrics, on_step)
+        finally:
+            stop.set()
+            producer.cancel()
+            await asyncio.gather(producer, return_exceptions=True)
+            # batches still queued at shutdown are finished work: return
+            # their groups to the carry (re-stale-checked on next use)
+            # instead of discarding them with the queue
+            while not queue.empty():
+                self.orch._carry.extend(queue.get_nowait())
+            self.stats.queue_high_water = queue.high_water
+
+    async def _next_fresh_groups(self, queue: BatchQueue,
+                                 producer: asyncio.Task
+                                 ) -> List[RolloutGroup]:
+        """Dequeue the next batch, re-checking staleness against the
+        *current* trainer step: a batch may have aged in the queue while
+        the trainer ran ahead. A batch that lost whole groups is returned
+        to the producer's carry (survivors are topped up, not discarded)
+        and the next one is awaited. Producer failures re-raise here."""
+        cfg = self.orch.cfg
+        while True:
+            self.stats.queue_depth.append(queue.qsize())
+            getter = asyncio.get_running_loop().create_task(queue.get())
+            await asyncio.wait({getter, producer},
+                               return_when=asyncio.FIRST_COMPLETED)
+            if not getter.done():
+                getter.cancel()
+                await asyncio.gather(getter, return_exceptions=True)
+                if producer.cancelled():
+                    raise asyncio.CancelledError("rollout producer cancelled")
+                if producer.exception() is not None:
+                    raise producer.exception()
+                raise RuntimeError("rollout producer exited mid-run")
+            groups = getter.result()
+            kept, ndrop = filter_stale(groups, self.orch._trainer_step, cfg)
+            self.orch.stats.rollouts_dropped_stale += ndrop
+            if len(kept) == len(groups):
+                return kept        # members may have shrunk; groups intact
+            self.orch._carry.extend(kept)
+            self.stats.batches_requeued_stale += 1
+
+    async def _train_overlapped(self, batch: dict) -> dict:
+        """Dispatch the jitted step without a host sync and keep the
+        decode pump ticking until its outputs materialize."""
+        t0 = time.perf_counter()
+        handle = self.trainer.step_async(batch)
+        window_tokens = 0
+        while True:
+            # always pump at least once inside the window: dispatch
+            # returns before the device finishes, and a tick here is
+            # exactly the generation/training overlap async-k buys
+            window_tokens += await self.orch._tick()
+            self.stats.overlap_ticks += 1
+            if handle.done():
+                break
+        dt = time.perf_counter() - t0
+        self.stats.overlap_tokens += window_tokens
+        self.stats.train_time += dt
+        if window_tokens == 0:
+            # the pump ran but decoded nothing: this window hid no
+            # generation behind the step — a measured bubble, not a
+            # structural zero (keeps the fig3 real-stack comparison honest)
+            self.stats.stalled_train_time += dt
+        return handle.metrics()
+
+    # ---------------------------------------------------------------- run
+
+    async def run(self, num_steps: int, *,
+                  on_step: Optional[Callable] = None) -> dict:
+        """Run ``num_steps`` optimizer steps; returns a summary dict.
+
+        ``on_step(step, metrics, runner)`` is called after every weight
+        push (logging hook)."""
+        cfg = self.orch.cfg
+        t0 = time.perf_counter()
+        try:
+            if cfg.async_level == 0:
+                await self._run_sync(num_steps, on_step)
+            else:
+                await self._run_async(num_steps, on_step)
+        finally:
+            # leave no rollout task running past the run (the pre-runner
+            # loop dropped them on the floor — "Task was destroyed but it
+            # is pending!" at interpreter exit)
+            await self.orch.cancel_in_flight()
+            self.stats.elapsed = time.perf_counter() - t0
+        recent = self.orch.stats.rewards[-cfg.batch_prompts
+                                         * cfg.group_size:]
+        return {
+            "metrics": self.metrics,
+            "mean_reward": float(np.mean(recent)) if recent else 0.0,
+            "pushed_versions": list(self.stats.pushed_versions),
+            "runner_stats": self.stats,
+            "orchestrator_stats": self.orch.stats,
+        }

@@ -10,8 +10,11 @@ Bidirectional relays:
 
 Async off-policy semantics (§2.1.2): the trainer consumes the oldest ready
 batch; rollouts older than ``max_off_policy_steps`` are discarded. With
-``async_level = k`` the trainer is allowed to run k steps ahead of the
-freshest rollout policy (async-8 was the paper's production setting).
+``RLConfig.async_level = k`` the trainer is allowed to run k steps ahead
+of the freshest rollout policy (async-8 was the paper's production
+setting): ``produce_batches`` is the continuously-running rollout
+producer the ``AsyncRLRunner`` (async_rl.py) pairs with an overlapped
+trainer, while ``gather_batch`` remains the sequential pull-based API.
 
 This is an in-process, event-driven reproduction: inference "time" advances
 one decode step per pump tick, and the trainer step happens between ticks.
@@ -157,6 +160,9 @@ class Orchestrator:
         self.client = AsyncPoolClient(pool, max_new_tokens=max_new_tokens)
         self.pools = pools or DifficultyPools(env.problem_ids(), seed=seed)
         self.stats = OrchestratorStats()
+        # ticks with no usable-group progress before declaring a stall
+        # (instance attr so tests can trip the guard quickly)
+        self.stall_guard_limit = 200_000
         self._ready_groups: List[RolloutGroup] = []
         self._carry: List[RolloutGroup] = []
         self._tasks: set = set()
@@ -199,51 +205,129 @@ class Orchestrator:
 
     # ---------------------------------------------------------------- steps
 
-    async def _tick(self) -> None:
-        """Let rollout coroutines run, then advance decode one step."""
+    async def _tick(self) -> int:
+        """Let rollout coroutines run, then advance decode one step.
+        Returns the number of tokens the tick generated."""
         await asyncio.sleep(0)      # run any ready coroutine steps
-        self.client.pump()
+        n = self.client.pump()
         self.stats.decode_ticks += 1
         await asyncio.sleep(0)
+        return n
+
+    def _take_carry(self) -> List[RolloutGroup]:
+        """Consume carried-over surplus groups, re-checked for staleness
+        against the *current* trainer step."""
+        if not self._carry:
+            return []
+        carried, self._carry = self._carry, []
+        kept, ndrop = filter_stale(carried, self._trainer_step, self.cfg)
+        self.stats.rollouts_dropped_stale += ndrop
+        self.stats.groups_discarded += len(carried) - len(kept)
+        return kept
+
+    def _drain_ready(self) -> List[RolloutGroup]:
+        """Collect finished groups, apply zero-signal + staleness filters."""
+        if not self._ready_groups:
+            return []
+        groups, self._ready_groups = self._ready_groups, []
+        if self.cfg.drop_zero_signal_groups:
+            groups, ndrop = filter_zero_signal(groups)
+            self.stats.groups_dropped_zero_signal += ndrop
+        groups, ndrop = filter_stale(groups, self._trainer_step, self.cfg)
+        self.stats.rollouts_dropped_stale += ndrop
+        return groups
+
+    async def cancel_in_flight(self) -> None:
+        """Cancel AND await every in-flight rollout task (the same
+        discipline ``rollout_group`` applies to group members): each
+        coroutine's finally blocks run, so engine requests, client futures
+        and sessions are released instead of leaking."""
+        tasks = list(self._tasks)
+        for t in tasks:
+            t.cancel()
+        if tasks:
+            await asyncio.gather(*tasks, return_exceptions=True)
+
+    def _emit_batch_groups(self, usable: List[RolloutGroup],
+                           num_groups: int) -> List[RolloutGroup]:
+        """Split `usable` into the emitted batch + carried surplus."""
+        self.stats.batches_emitted += 1
+        batch_groups, surplus = usable[:num_groups], usable[num_groups:]
+        self._carry.extend(surplus)
+        self.stats.groups_carried += len(surplus)
+        return batch_groups
+
+    async def _fill(self, usable: List[RolloutGroup], num_groups: int,
+                    concurrent: int, guard: int) -> int:
+        """One fill iteration: saturate, tick, drain. Raises (after
+        cancelling in-flight work) on stall or dataset exhaustion.
+        Returns the updated stall-guard counter."""
+        self._saturate(concurrent)
+        await self._tick()
+        usable.extend(self._drain_ready())
+        guard += 1
+        if guard > self.stall_guard_limit:
+            await self.cancel_in_flight()
+            raise RuntimeError("orchestrator stalled")
+        if not self._tasks and not usable and self.pools.num_active == 0:
+            await self.cancel_in_flight()
+            raise RuntimeError("dataset exhausted with no usable groups")
+        return guard
 
     async def gather_batch(self, num_groups: int, *,
                            concurrent_groups: Optional[int] = None) -> dict:
         """Run continuous batching until `num_groups` usable groups are
         ready, then pack them into a training batch. Surplus completed
         groups are carried over to the next batch (re-checked for staleness
-        when consumed) rather than discarded."""
+        when consumed) rather than discarded. This is the sequential
+        (pull-based) API; the async runner drives ``produce_batches``."""
         concurrent = concurrent_groups or max(2 * num_groups, 2)
-        usable: List[RolloutGroup] = []
-        if self._carry:
-            carried, self._carry = self._carry, []
-            kept, ndrop = filter_stale(carried, self._trainer_step, self.cfg)
-            self.stats.rollouts_dropped_stale += ndrop
-            self.stats.groups_discarded += len(carried) - len(kept)
-            usable.extend(kept)
+        usable = self._take_carry()
         guard = 0
         while len(usable) < num_groups:
-            self._saturate(concurrent)
-            await self._tick()
-            if self._ready_groups:
-                groups, self._ready_groups = self._ready_groups, []
-                if self.cfg.drop_zero_signal_groups:
-                    groups, ndrop = filter_zero_signal(groups)
-                    self.stats.groups_dropped_zero_signal += ndrop
-                groups, ndrop = filter_stale(groups, self._trainer_step,
-                                             self.cfg)
-                self.stats.rollouts_dropped_stale += ndrop
-                usable.extend(groups)
-            guard += 1
-            if guard > 200_000:
-                raise RuntimeError("orchestrator stalled")
-            if not self._tasks and not usable and self.pools.num_active == 0:
-                raise RuntimeError("dataset exhausted with no usable groups")
-        self.stats.batches_emitted += 1
-        batch_groups, surplus = usable[:num_groups], usable[num_groups:]
-        self._carry = surplus
-        self.stats.groups_carried += len(surplus)
+            guard = await self._fill(usable, num_groups, concurrent, guard)
+        batch_groups = self._emit_batch_groups(usable, num_groups)
         seq_len = self._batch_seq_len(batch_groups)
         return pack_batch(batch_groups, seq_len)
+
+    async def produce_batches(self, num_groups: int, queue, *,
+                              concurrent_groups: Optional[int] = None,
+                              stop: Optional[asyncio.Event] = None) -> None:
+        """Continuously-running rollout producer (the push half of the
+        async runner): keeps `concurrent_groups` rollout groups in flight,
+        assembles every `num_groups` usable groups into a batch, and
+        ``put``s the *groups* (unpacked — the consumer re-checks staleness
+        and packs at dequeue) into the bounded `queue`. A full queue blocks
+        the put — that is the backpressure that stops generation from
+        running more than ``queue.maxsize`` batches ahead of the trainer.
+
+        Runs until `stop` is set (surplus groups land in the carry, ready
+        for a later ``gather_batch``/producer) or a stall/exhaustion error
+        cancels all in-flight work and re-raises to the awaiting runner."""
+        concurrent = concurrent_groups or max(2 * num_groups, 2)
+        while stop is None or not stop.is_set():
+            usable = self._take_carry()
+            try:
+                guard = 0
+                while len(usable) < num_groups:
+                    if stop is not None and stop.is_set():
+                        self._carry.extend(usable)
+                        return
+                    guard = await self._fill(usable, num_groups, concurrent,
+                                             guard)
+            except asyncio.CancelledError:
+                # cancelled mid-assembly (runner shutdown): completed
+                # groups are work already paid for — re-carry them
+                self._carry.extend(usable)
+                raise
+            batch_groups = self._emit_batch_groups(usable, num_groups)
+            try:
+                await queue.put(batch_groups)
+            except asyncio.CancelledError:
+                # cancelled while blocked on a full queue: don't lose an
+                # assembled batch — re-carry it for whoever runs next
+                self._carry.extend(batch_groups)
+                raise
 
     @staticmethod
     def _batch_seq_len(groups: List[RolloutGroup]) -> int:
@@ -268,8 +352,26 @@ class Orchestrator:
         tasks = [asyncio.get_running_loop().create_task(
             eval_env.rollout(self.client, row))
             for row in rows for _ in range(avg_at)]
-        while not all(t.done() for t in tasks):
-            await self._tick()
+        # Fail fast: a rollout that raises must surface immediately — not
+        # after every surviving task finishes (they may be arbitrarily
+        # long, or hung). On failure the survivors are cancelled AND
+        # awaited so their in-flight requests/futures/sessions are
+        # released (same discipline as ``rollout_group``).
+        pending = set(tasks)
+        try:
+            while pending:
+                done = {t for t in pending if t.done()}
+                pending -= done
+                for t in done:
+                    if t.exception() is not None:
+                        raise t.exception()
+                if pending:
+                    await self._tick()
+        except BaseException:
+            for t in pending:
+                t.cancel()
+            await asyncio.gather(*pending, return_exceptions=True)
+            raise
         by_problem: Dict[str, list] = {}
         for t in tasks:
             r = t.result()

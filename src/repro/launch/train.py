@@ -5,7 +5,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.train --arch minitron-4b:reduced \
       --mode sft --steps 20
   PYTHONPATH=src python -m repro.launch.train --arch minitron-4b:reduced \
-      --mode rl --steps 5 --env math
+      --mode rl --steps 5 --env math --async-level 8
 """
 from __future__ import annotations
 
@@ -56,7 +56,7 @@ def run_sft(args) -> dict:
 def run_rl(args) -> dict:
     from repro.configs import get_config
     from repro.configs.base import (OptimizerConfig, ParallelConfig, RLConfig)
-    from repro.core import Orchestrator
+    from repro.core import AsyncRLRunner, Orchestrator
     from repro.data import TOKENIZER
     from repro.envs import load_logic_env, load_math_env
     from repro.inference import InferenceEngine, InferencePool
@@ -68,7 +68,7 @@ def run_rl(args) -> dict:
     opt = OptimizerConfig(name=args.optimizer, lr=args.lr,
                           schedule="constant")
     rl = RLConfig(batch_prompts=args.batch, group_size=args.group_size,
-                  algorithm=args.algorithm)
+                  algorithm=args.algorithm, async_level=args.async_level)
     trainer = Trainer(jax.random.PRNGKey(args.seed), cfg, opt, rl, pcfg,
                       dtype=jnp.float32, mode="rl")
     engines = [InferenceEngine(trainer.params, cfg, num_slots=args.slots,
@@ -79,21 +79,26 @@ def run_rl(args) -> dict:
     env = load_env(n=args.problems, seed=args.seed,
                    max_new_tokens=args.max_new_tokens)
     orch = Orchestrator(env, pool, rl, max_new_tokens=args.max_new_tokens)
+    runner = AsyncRLRunner(trainer, orch)
 
-    async def loop():
-        for step in range(args.steps):
-            batch = await orch.gather_batch(rl.batch_prompts)
-            m = trainer.step(batch)
-            orch.push_weights(trainer.params, trainer.version)
-            recent = orch.stats.rewards[-rl.batch_prompts * rl.group_size:]
-            print(f"step {step:3d} rl_loss={m['rl_loss']:+.4f} "
-                  f"reward={np.mean(recent):.3f} "
-                  f"masked={m.get('masked_frac', 0.0):.3f} "
-                  f"groups={orch.stats.groups_completed}", flush=True)
-        return {"mean_reward": float(np.mean(
-            orch.stats.rewards[-rl.batch_prompts * rl.group_size:]))}
+    def on_step(step, m, r):
+        recent = orch.stats.rewards[-rl.batch_prompts * rl.group_size:]
+        print(f"step {step:3d} rl_loss={m['rl_loss']:+.4f} "
+              f"reward={np.mean(recent):.3f} "
+              f"masked={m.get('masked_frac', 0.0):.3f} "
+              f"groups={orch.stats.groups_completed} "
+              f"qdepth={r.stats.queue_depth[-1] if r.stats.queue_depth else 0} "
+              f"ahead={r.stats.trainer_ahead[-1]} "
+              f"overlap_ticks={r.stats.overlap_ticks}", flush=True)
 
-    return asyncio.run(loop())
+    out = asyncio.run(runner.run(args.steps, on_step=on_step))
+    s = runner.stats
+    print(f"rl done: async_level={s.async_level} steps={s.steps} "
+          f"pushed_versions={out['pushed_versions']} "
+          f"mean_reward={out['mean_reward']:.3f} "
+          f"overlap_ticks={s.overlap_ticks} "
+          f"bubble_fraction={s.bubble_fraction:.3f}", flush=True)
+    return out
 
 
 def main():
@@ -113,6 +118,9 @@ def main():
     p.add_argument("--algorithm", default="icepop",
                    choices=["icepop", "cispo", "gspo"])
     p.add_argument("--group-size", type=int, default=4)
+    p.add_argument("--async-level", type=int, default=8,
+                   help="trainer may run this many steps ahead of rollout "
+                        "generation (0 = strictly sequential loop)")
     p.add_argument("--engines", type=int, default=2)
     p.add_argument("--slots", type=int, default=8)
     p.add_argument("--problems", type=int, default=32)

@@ -1,7 +1,8 @@
 """Training: SFT/RL step builders, the Trainer service, checkpointing."""
-from .trainer import (TrainState, Trainer, init_train_state, make_rl_step,
-                      make_sft_step)
+from .trainer import (AsyncStepHandle, TrainState, Trainer,
+                      init_train_state, make_rl_step, make_sft_step)
 from .checkpoint import load_checkpoint, save_checkpoint
 
-__all__ = ["TrainState", "Trainer", "init_train_state", "load_checkpoint",
-           "make_rl_step", "make_sft_step", "save_checkpoint"]
+__all__ = ["AsyncStepHandle", "TrainState", "Trainer", "init_train_state",
+           "load_checkpoint", "make_rl_step", "make_sft_step",
+           "save_checkpoint"]

@@ -116,6 +116,41 @@ def _global_norm(tree):
 # ---------------------------------------------------------------------------
 
 
+class AsyncStepHandle:
+    """A dispatched-but-not-yet-synced train step (``Trainer.step_async``).
+
+    JAX dispatch is asynchronous: the jitted step is enqueued on the device
+    and the host gets back futures. The handle lets the caller poll
+    ``done()`` (so decode pump ticks can run while the device computes the
+    step) and read ``metrics()`` once — only that final read blocks."""
+
+    def __init__(self, state: TrainState, metrics: dict):
+        self._state = state
+        self._metrics = metrics
+        # all outputs of one jitted call become ready together, so one
+        # representative buffer is enough to poll (walking every param +
+        # optimizer-state leaf per poll would cost O(leaves) each tick);
+        # probe the LAST jit output (the step counter) to be safe against
+        # per-buffer completion order
+        self._probe = state.step
+
+    def done(self) -> bool:
+        """True once the step's output buffers have materialized.
+        Platforms without ``is_ready`` degrade to blocking (still correct,
+        no overlap)."""
+        if hasattr(self._probe, "is_ready"):
+            return self._probe.is_ready()
+        return True
+
+    def block(self) -> "AsyncStepHandle":
+        jax.block_until_ready((self._state, self._metrics))
+        return self
+
+    def metrics(self) -> dict:
+        """Host metrics; blocks until the step has finished."""
+        return {k: float(v) for k, v in self._metrics.items()}
+
+
 class Trainer:
     """The trainer node: owns TrainState, produces new policies."""
 
@@ -128,6 +163,10 @@ class Trainer:
         self.rl_cfg = rl_cfg
         self.pcfg = pcfg
         self.state = init_train_state(key, cfg, opt_cfg, dtype)
+        # host-side mirror of state.step: reading the device counter would
+        # force a sync mid-overlap (the async runner reads `version` right
+        # after dispatching a step)
+        self._host_version = 0
         # donate=False: the inference engines hold references to pushed
         # params across trainer steps (the weight relay is zero-copy)
         if mode == "rl":
@@ -143,10 +182,21 @@ class Trainer:
 
     @property
     def version(self) -> int:
-        return int(self.state.step)
+        return self._host_version
 
-    def step(self, batch) -> dict:
+    def step_async(self, batch) -> AsyncStepHandle:
+        """Dispatch one optimizer step WITHOUT forcing a host sync.
+
+        ``self.state`` (and thus ``params``/``version``) advances
+        immediately — the new arrays are device futures; anything consuming
+        them queues behind the step on-device. The caller polls the
+        returned handle and reads ``metrics()`` when ready."""
         batch = {k: jnp.asarray(v) for k, v in batch.items()
                  if k != "policy_versions"}
         self.state, metrics = self._step(self.state, batch)
-        return {k: float(v) for k, v in metrics.items()}
+        self._host_version += 1
+        return AsyncStepHandle(self.state, metrics)
+
+    def step(self, batch) -> dict:
+        """Synchronous step: dispatch + block for host metrics."""
+        return self.step_async(batch).metrics()

@@ -18,6 +18,7 @@ from repro.data import TOKENIZER
 from repro.envs import load_deepdive_env
 from repro.inference import InferenceEngine, InferencePool
 from repro.train import Trainer
+from tests.utils import run_async
 
 PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -45,7 +46,7 @@ def test_multi_turn_agentic_rl_loop():
             batches.append(batch)
         return batches
 
-    batches = asyncio.get_event_loop().run_until_complete(loop())
+    batches = run_async(loop())
     assert orch.stats.groups_completed >= 2
     # multi-turn rollouts must carry env-injected (mask-0) completion spans
     # whenever a tool call occurred; at minimum the batch must be well formed
@@ -79,11 +80,11 @@ def test_multi_turn_rollout_masks_env_tokens_in_batch():
             return GenOutput(toks, -0.5 * np.ones(len(toks), np.float32),
                              np.zeros(len(toks), np.int32))
 
-    r = asyncio.get_event_loop().run_until_complete(
+    r = run_async(
         env.rollout(Scripted(), row))
     assert r.reward == 1.0
     assert r.completion_mask.min() == 0.0 and r.completion_mask.max() == 1.0
-    other = asyncio.get_event_loop().run_until_complete(
+    other = run_async(
         env.rollout(Scripted(), row))
     other.reward = 0.0  # make signal
     batch = pack_batch([RolloutGroup(row["id"], [r, other])], seq_len=128)

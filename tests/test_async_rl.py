@@ -1,0 +1,318 @@
+"""Async RL runner (§2.1.2): async_level=0 parity with the sequential
+loop, generation/training overlap, staleness at dequeue, backpressure —
+plus the orchestrator cancel-discipline regressions (stall guard,
+dataset exhaustion, fail-fast evaluate)."""
+import asyncio
+import dataclasses
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import OptimizerConfig, ParallelConfig, RLConfig
+from repro.core import (AsyncRLRunner, BatchQueue, Orchestrator, Rollout,
+                        RolloutGroup, batch_policy_span)
+from repro.data import TOKENIZER
+from repro.envs import load_logic_env
+from repro.envs.environment import Environment
+from repro.envs.rubric import Rubric
+from repro.inference import InferenceEngine, InferencePool
+from repro.train import Trainer
+from tests.utils import run_async
+
+PCFG = ParallelConfig(remat="none", loss_chunk=0)
+
+
+def _cfg():
+    return dataclasses.replace(get_config("minicpm-2b:reduced"),
+                               vocab_size=TOKENIZER.vocab_size, num_layers=2)
+
+
+def _stack(async_level, *, max_off_policy_steps=8, steps_env_n=16):
+    """A fresh, fully-seeded trainer + engine + env + orchestrator stack.
+    Two stacks built with the same arguments are deterministic replicas."""
+    cfg = _cfg()
+    rl = RLConfig(batch_prompts=2, group_size=2,
+                  max_off_policy_steps=max_off_policy_steps,
+                  async_level=async_level, drop_zero_signal_groups=False)
+    opt = OptimizerConfig(name="adamw", lr=1e-3)
+    trainer = Trainer(jax.random.PRNGKey(5), cfg, opt, rl, PCFG,
+                      dtype=jnp.float32, mode="rl")
+    pool = InferencePool([InferenceEngine(trainer.params, cfg, num_slots=8,
+                                          max_seq=96, pcfg=PCFG, seed=0)])
+    env = load_logic_env(n=steps_env_n, seed=0, max_new_tokens=4)
+    orch = Orchestrator(env, pool, rl, max_new_tokens=4, seed=0)
+    return trainer, orch
+
+
+# ---------------------------------------------------------------------------
+# tentpole: parity, overlap, staleness window, backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_async_level_zero_matches_sequential_loop():
+    """The runner at async_level=0 must emit byte-identical training
+    batches and metrics to the pre-runner hand-written sequential loop
+    under the same seeds."""
+    steps = 3
+
+    # reference: the exact pre-refactor loop shape
+    trainer_a, orch_a = _stack(async_level=0)
+
+    async def reference():
+        batches, metrics = [], []
+        for _ in range(steps):
+            batch = await orch_a.gather_batch(orch_a.cfg.batch_prompts)
+            batches.append(batch)
+            metrics.append(trainer_a.step(batch))
+            orch_a.push_weights(trainer_a.params, trainer_a.version)
+        return batches, metrics
+
+    ref_batches, ref_metrics = run_async(reference())
+
+    trainer_b, orch_b = _stack(async_level=0)
+    runner = AsyncRLRunner(trainer_b, orch_b, record_batches=True)
+    out = run_async(runner.run(steps))
+
+    assert len(runner.batches) == len(ref_batches) == steps
+    for got, want in zip(runner.batches, ref_batches):
+        assert got.keys() == want.keys()
+        for k in want:
+            np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+    assert runner.metrics == ref_metrics
+    assert out["pushed_versions"] == [1, 2, 3]
+    # sequential mode: training always stalls decode — the full sync bubble
+    assert runner.stats.overlap_ticks == 0
+    assert runner.stats.stalled_train_time == runner.stats.train_time > 0
+    assert runner.stats.bubble_fraction > 0
+
+
+def test_async_runner_overlaps_and_enforces_staleness_window():
+    """async_level=k: decode ticks run inside every train-step window, the
+    queue never exceeds k, pushed versions are monotone, and no consumed
+    rollout is older than max_off_policy_steps (re-checked at dequeue)."""
+    steps = 5
+    trainer, orch = _stack(async_level=2, max_off_policy_steps=1)
+    runner = AsyncRLRunner(trainer, orch, record_batches=True)
+    out = run_async(runner.run(steps))
+
+    s = runner.stats
+    assert s.steps == steps
+    # overlap: at least one decode tick per train-step window, and real
+    # decode progress hidden behind training (stall only accrues for
+    # windows whose ticks generated nothing)
+    assert s.overlap_ticks >= steps
+    assert s.overlap_tokens > 0
+    assert s.stalled_train_time < s.train_time
+    # backpressure: generation never ran more than async_level batches ahead
+    assert s.queue_high_water <= 2
+    assert max(s.queue_depth) <= 2
+    # in-flight relay ordering: versions strictly increase
+    assert out["pushed_versions"] == sorted(set(out["pushed_versions"]))
+    assert out["pushed_versions"][-1] == steps
+    # staleness window: every consumed model token within the off-policy cap
+    for (v, oldest, _freshest), batch in zip(s.consumed_spans,
+                                             runner.batches):
+        if (batch["loss_mask"] > 0).any():
+            assert v - oldest <= orch.cfg.max_off_policy_steps, \
+                (v, oldest)
+    # the recorded spans really came from the packed batches
+    assert s.consumed_spans[0][1:] == batch_policy_span(runner.batches[0])
+    # end-of-run hygiene: nothing left in flight
+    assert not orch._tasks
+    assert orch.client.in_flight == 0
+
+
+def _rollout(pid, version, reward):
+    comp = np.array([3, 4], np.int32)
+    return Rollout(problem_id=pid,
+                   prompt_tokens=np.array([1, 2], np.int32),
+                   completion_tokens=comp,
+                   infer_logprobs=-0.5 * np.ones(2, np.float32),
+                   policy_versions=np.full(2, version, np.int32),
+                   reward=reward)
+
+
+def _group(pid, version):
+    return RolloutGroup(pid, [_rollout(pid, version, 1.0),
+                              _rollout(pid, version, 0.0)])
+
+
+class _StubEnv:
+    def problem_ids(self):
+        return ["a"]
+
+
+class _StubPool:
+    """Engine-free pool: requests are accepted but never complete."""
+
+    def __init__(self):
+        self._n = 0
+
+    def submit_request(self, prompt_tokens, **kw):
+        self._n += 1
+        return types.SimpleNamespace(request_id=self._n)
+
+    def step(self):
+        return 0
+
+    def drain_requests(self):
+        return []
+
+
+def test_dequeue_staleness_recheck_requeues_aged_batches():
+    """A batch that aged in the queue while the trainer ran ahead must be
+    re-filtered at dequeue: whole-group losses send the survivors back to
+    the producer's carry and the next batch is consumed instead."""
+    rl = RLConfig(batch_prompts=2, group_size=2, max_off_policy_steps=8,
+                  async_level=2)
+    orch = Orchestrator(_StubEnv(), _StubPool(), rl)
+    orch._trainer_step = 10     # the trainer ran ahead while batches queued
+    runner = AsyncRLRunner(None, orch)
+
+    mixed = [_group("fresh_survivor", version=10), _group("stale", version=0)]
+    fresh = [_group("f1", version=10), _group("f2", version=9)]
+
+    async def scenario():
+        q = BatchQueue(2)
+        producer = asyncio.get_running_loop().create_task(
+            asyncio.sleep(30))
+        await q.put(mixed)
+        await q.put(fresh)
+        try:
+            return await runner._next_fresh_groups(q, producer)
+        finally:
+            producer.cancel()
+            await asyncio.gather(producer, return_exceptions=True)
+
+    groups = run_async(scenario())
+    assert [g.problem_id for g in groups] == ["f1", "f2"]
+    assert runner.stats.batches_requeued_stale == 1
+    assert [g.problem_id for g in orch._carry] == ["fresh_survivor"]
+    assert orch.stats.rollouts_dropped_stale == 2
+
+
+def test_producer_failure_propagates_to_consumer():
+    """A dead producer must surface at the dequeue point, not hang the
+    trainer on an empty queue forever."""
+    rl = RLConfig(batch_prompts=2, group_size=2, async_level=1)
+    orch = Orchestrator(_StubEnv(), _StubPool(), rl)
+    runner = AsyncRLRunner(None, orch)
+
+    async def scenario():
+        q = BatchQueue(1)
+
+        async def dead_producer():
+            raise RuntimeError("orchestrator stalled")
+
+        producer = asyncio.get_running_loop().create_task(dead_producer())
+        with pytest.raises(RuntimeError, match="stalled"):
+            await runner._next_fresh_groups(q, producer)
+
+    run_async(scenario())
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: cancel-AND-await discipline on every failure path
+# ---------------------------------------------------------------------------
+
+
+class _HangingEnv(Environment):
+    """Rollouts submit a request and wait forever (the stub pool never
+    completes anything) — the stall-guard scenario."""
+
+    env_id = "hang"
+
+    async def rollout(self, client, row):
+        await client.generate(np.array([1, 2, 3], np.int32),
+                              max_new_tokens=4)
+
+
+def _rows(n):
+    return [{"id": f"p{i}", "prompt": "x", "answer": ""} for i in range(n)]
+
+
+def test_stall_guard_cancels_and_awaits_in_flight_rollouts():
+    rl = RLConfig(batch_prompts=1, group_size=2, async_level=0)
+    env = _HangingEnv(_rows(4), Rubric())
+    orch = Orchestrator(env, _StubPool(), rl)
+    orch.stall_guard_limit = 20
+
+    async def scenario():
+        with pytest.raises(RuntimeError, match="stalled"):
+            await orch.gather_batch(1)
+        await asyncio.sleep(0)      # let task done-callbacks run
+        # every rollout task was cancelled AND awaited: no dangling tasks,
+        # no leaked client futures
+        assert not orch._tasks
+        assert orch.client.in_flight == 0
+
+    run_async(scenario())
+
+
+def test_producer_stall_guard_applies_same_discipline():
+    rl = RLConfig(batch_prompts=1, group_size=2, async_level=2)
+    env = _HangingEnv(_rows(4), Rubric())
+    orch = Orchestrator(env, _StubPool(), rl)
+    orch.stall_guard_limit = 20
+
+    async def scenario():
+        q = BatchQueue(2)
+        with pytest.raises(RuntimeError, match="stalled"):
+            await orch.produce_batches(1, q)
+        await asyncio.sleep(0)
+        assert not orch._tasks
+        assert orch.client.in_flight == 0
+
+    run_async(scenario())
+
+
+def test_dataset_exhausted_raises_with_clean_state():
+    rl = RLConfig(batch_prompts=1, group_size=2, async_level=0)
+    env = _HangingEnv([], Rubric())
+    orch = Orchestrator(env, _StubPool(), rl)
+
+    async def scenario():
+        with pytest.raises(RuntimeError, match="exhausted"):
+            await orch.gather_batch(1)
+        await asyncio.sleep(0)
+        assert not orch._tasks
+        assert orch.client.in_flight == 0
+
+    run_async(scenario())
+
+
+class _FailFastEvalEnv(Environment):
+    """One rollout raises immediately; the rest wait forever."""
+
+    env_id = "failfast"
+
+    async def rollout(self, client, row):
+        if row["id"] == "bad":
+            raise ValueError("boom")
+        await client.generate(np.array([1, 2, 3], np.int32),
+                              max_new_tokens=4)
+
+
+def test_evaluate_fails_fast_and_cancels_survivors():
+    """A failed eval rollout must surface immediately (the old loop waited
+    for EVERY task to finish first — hanging forever here) and the
+    surviving tasks' in-flight requests must not leak."""
+    rl = RLConfig(batch_prompts=1, group_size=2, async_level=0)
+    rows = [{"id": "bad", "prompt": "x", "answer": ""}] + _rows(3)
+    eval_env = _FailFastEvalEnv(rows, Rubric())
+    orch = Orchestrator(_FailFastEvalEnv(_rows(1), Rubric()), _StubPool(), rl)
+
+    async def scenario():
+        with pytest.raises(ValueError, match="boom"):
+            await orch.evaluate(eval_env)
+        await asyncio.sleep(0)
+        assert orch.client.in_flight == 0
+
+    run_async(scenario())
+    # fail-fast: detection within a couple of ticks, not after the (never
+    # finishing) survivors
+    assert orch.stats.decode_ticks <= 4

@@ -11,10 +11,11 @@ from repro.envs import (EnvGroup, Rubric, SingleTurnEnv, ToolEnv,
                         load_deepdive_env, load_logic_env, load_math_env,
                         parse_tool_call)
 from repro.envs.rubric import ComposedRubric, format_reward
+from tests.utils import run_async
 
 
 def run(coro):
-    return asyncio.get_event_loop().run_until_complete(coro)
+    return run_async(coro)
 
 
 class ScriptedClient:

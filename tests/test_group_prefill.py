@@ -26,6 +26,7 @@ from repro.envs import MultiTurnEnv, Rubric
 from repro.inference import (GroupRequest, HostReferenceEngine,
                              InferenceEngine, InferencePool, Request)
 from repro.models import init_params
+from tests.utils import run_async
 
 PROMPT = (np.arange(12, dtype=np.int32) % 40) + 10
 
@@ -253,7 +254,7 @@ def _run_rollout_group(cfg, params, *, group_mode, max_turns, G=4,
             await asyncio.sleep(0)
         return task.result()
 
-    outs = asyncio.get_event_loop().run_until_complete(go())
+    outs = run_async(go())
     return outs, eng, raw
 
 
@@ -326,7 +327,7 @@ def test_rollout_group_member_failure_cancels_siblings(setup, group_mode):
         assert raw.in_flight == 0
         assert len(eng.sessions) == 0
 
-    asyncio.get_event_loop().run_until_complete(go())
+    run_async(go())
 
 
 def test_orchestrator_spawn_group_uses_rollout_group(setup):
@@ -342,7 +343,7 @@ def test_orchestrator_spawn_group_uses_rollout_group(setup):
     eng = InferenceEngine(params, cfg, num_slots=4, max_seq=256, seed=21)
     rl = RLConfig(group_size=2, drop_zero_signal_groups=False)
     orch = Orchestrator(env, InferencePool([eng]), rl, max_new_tokens=4)
-    batch = asyncio.get_event_loop().run_until_complete(
+    batch = run_async(
         orch.gather_batch(2, concurrent_groups=2))
     assert batch["tokens"].shape[0] == 4     # 2 groups x G=2
     assert eng.stats.group_prefills >= 2

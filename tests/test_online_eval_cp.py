@@ -14,7 +14,7 @@ from repro.data import TOKENIZER
 from repro.envs import load_logic_env, load_math_env
 from repro.inference import InferenceEngine, InferencePool
 from repro.train import Trainer
-from tests.utils import check, run_with_devices
+from tests.utils import check, run_async, run_with_devices
 
 PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -44,7 +44,7 @@ def test_online_eval_interleaves_with_training():
         trainer.step(batch)
         return result
 
-    result = asyncio.get_event_loop().run_until_complete(loop())
+    result = run_async(loop())
     assert 0.0 <= result["score"] <= 1.0
     assert len(result["per_problem"]) == 4
     assert result["avg_at"] == 2

@@ -4,10 +4,11 @@ import asyncio
 import pytest
 
 from repro.sandbox import SandboxPool, SandboxProvisionError
+from tests.utils import run_async
 
 
 def run(coro):
-    return asyncio.get_event_loop().run_until_complete(coro)
+    return run_async(coro)
 
 
 @pytest.fixture(scope="module")

@@ -24,6 +24,7 @@ from repro.envs import MultiTurnEnv, Rubric
 from repro.inference import (HostReferenceEngine, InferenceEngine,
                              InferencePool, Request)
 from repro.models import forward, init_params
+from tests.utils import run_async
 
 PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -285,7 +286,7 @@ def _run_env_rollouts(cfg, params, *, use_sessions, n_rows=2, max_turns=3,
             outs.append(task.result())
         return outs
 
-    outs = asyncio.get_event_loop().run_until_complete(run())
+    outs = run_async(run())
     return outs, eng.stats
 
 
@@ -345,7 +346,7 @@ def test_async_client_explicit_zero_max_new_tokens(setup):
             await asyncio.sleep(0)
         return task.result()
 
-    out = asyncio.get_event_loop().run_until_complete(run())
+    out = run_async(run())
     # engine clamps the budget to one prefill-sampled token — but never 64
     assert len(out.tokens) == 1
 
@@ -374,4 +375,4 @@ def test_async_client_cancelled_rollout_frees_future(setup):
         client.pump()
         assert client.in_flight == 0
 
-    asyncio.get_event_loop().run_until_complete(run())
+    run_async(run())

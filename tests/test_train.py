@@ -14,6 +14,7 @@ from repro.configs.base import OptimizerConfig, ParallelConfig, RLConfig
 from repro.data import TOKENIZER, pack_documents, synthetic_reasoning_docs
 from repro.train import (Trainer, load_checkpoint, make_sft_step,
                          save_checkpoint)
+from tests.utils import run_async
 
 PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -122,7 +123,7 @@ def test_end_to_end_rl_reward_improves():
             rewards.append(float(np.mean(orch.stats.rewards[-n:])))
         return rewards
 
-    rewards = asyncio.get_event_loop().run_until_complete(loop())
+    rewards = run_async(loop())
     assert orch.stats.batches_emitted == 6
     assert orch.stats.weight_pushes == 6
     # trending up (allow noise): late mean > early mean - slack
@@ -154,7 +155,7 @@ def test_staleness_filter_engages_under_async():
             # jump versions ahead so in-flight rollouts become stale
             orch.push_weights(trainer.params, trainer.version + 10)
 
-    asyncio.get_event_loop().run_until_complete(loop())
+    run_async(loop())
     assert orch.stats.rollouts_dropped_stale > 0
 
 

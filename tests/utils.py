@@ -36,6 +36,21 @@ def check(res: subprocess.CompletedProcess) -> None:
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
 
 
+def run_async(coro):
+    """``asyncio.run`` without touching the thread's current-loop slot.
+
+    ``asyncio.run`` leaves ``set_event_loop(None)`` behind, which breaks
+    later tests that still use the legacy ``asyncio.get_event_loop()``
+    pattern (pytest runs every test in one process). A private loop keeps
+    the suites independent of execution order."""
+    import asyncio
+    loop = asyncio.new_event_loop()
+    try:
+        return loop.run_until_complete(coro)
+    finally:
+        loop.close()
+
+
 # ---------------------------------------------------------------------------
 # Optional-hypothesis shim
 # ---------------------------------------------------------------------------
