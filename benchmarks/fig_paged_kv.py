@@ -1,0 +1,161 @@
+"""Paged KV cache: block-pool memory vs dense per-slot rows.
+
+The vLLM-defining memory architecture, on the real engine. The dense
+layout pins one ``[L, max_seq, Hkv, hd]`` K/V row per slot, so (a)
+resident capacity is ``num_slots`` regardless of how short conversations
+actually are, and (b) a GRPO group fork physically copies G-1 full rows.
+The paged engine allocates ``ceil(tokens/block_size)`` blocks from a
+shared pool per request, parks sessions on exactly the blocks they
+filled, and forks groups copy-on-write (shared full blocks + one private
+tail block per member).
+
+Claims checked, all in one run:
+
+  capacity — at a FIXED KV-pool byte budget (the bytes a dense engine
+             spends on 4 slots), the paged engine keeps >=2x more
+             multi-turn sessions resident (their turn-2 extends all hit
+             the cache: zero fallbacks);
+  forks    — group-fork copy cost is O(1) in prompt length: the same
+             G private tail blocks (== ``cow_forks``) are materialized
+             whether the shared prompt is 20 or 52 tokens, while the
+             dense fork's per-member copy scales with max_seq;
+  parity   — token/logprob/version streams of BOTH workloads are
+             byte-identical to the unpaged ``HostReferenceEngine``
+             (same seed, same scheduling) — the paged rewrite changes
+             memory, not sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import TOKENIZER
+from repro.inference import (GroupRequest, HostReferenceEngine,
+                             InferenceEngine, Request)
+from repro.models import init_params
+
+BS = 8                 # KV block size (tokens)
+MAX_SEQ = 64
+DENSE_SLOTS = 4        # the dense baseline the byte budget is taken from
+PAGED_SLOTS = 8
+POOL_BLOCKS = DENSE_SLOTS * MAX_SEQ // BS      # fixed byte budget
+SESSIONS = 8
+GROUP = 4
+
+
+def _prompt(n, seed=0):
+    return ((np.arange(n, dtype=np.int32) * (seed + 3)) % 50) + 10
+
+
+def _streams(done):
+    return sorted((r.request_id, tuple(r.completion), tuple(r.logprobs),
+                   tuple(r.versions), r.finish_reason) for r in done)
+
+
+def run_sessions(eng):
+    """SESSIONS short two-turn conversations, all parked between turns."""
+    for sid in range(SESSIONS):
+        eng.open_session(sid)
+        eng.submit(Request(sid, f"s{sid}", _prompt(9, sid), 3,
+                           session_id=sid))
+    eng.run_until_idle()
+    done = list(eng.drain_completed())
+    resident = sum(1 for s in eng.sessions.values() if s.slot is not None)
+    for sid in range(SESSIONS):
+        eng.submit(Request(100 + sid, f"s{sid}", _prompt(5, sid + 1), 3,
+                           session_id=sid))
+    eng.run_until_idle()
+    done += eng.drain_completed()
+    for sid in range(SESSIONS):
+        eng.close_session(sid)
+    return _streams(done), resident
+
+
+def run_groups(eng):
+    """Two group forks with very different prompt lengths (same tail)."""
+    copies = []
+    done = []
+    for g, plen in enumerate((20, 52)):
+        prompt = _prompt(plen, seed=7 + g)
+        members = [Request(1000 * (g + 1) + i, f"g{g}", prompt, 5,
+                           group_id=g) for i in range(GROUP)]
+        before = eng.stats.cow_forks
+        eng.submit_group(GroupRequest(g, f"g{g}", prompt, members=members))
+        eng.run_until_idle()
+        done += eng.drain_completed()
+        copies.append(eng.stats.cow_forks - before)
+    return _streams(done), copies
+
+
+def main():
+    cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
+                              vocab_size=TOKENIZER.vocab_size, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+
+    def paged():
+        return InferenceEngine(params, cfg, num_slots=PAGED_SLOTS,
+                               max_seq=MAX_SEQ, seed=11, kv_block_size=BS,
+                               num_kv_blocks=POOL_BLOCKS)
+
+    def reference():
+        # unpaged oracle: same slots/seed/scheduling, dense rows
+        return HostReferenceEngine(params, cfg, num_slots=PAGED_SLOTS,
+                                   max_seq=MAX_SEQ, seed=11)
+
+    # -- capacity at a fixed byte budget + parity ------------------------
+    ep, er = paged(), reference()
+    s_paged, resident = run_sessions(ep)
+    s_ref, _ = run_sessions(er)
+    assert s_paged == s_ref, (
+        "paged session streams diverged from the unpaged reference")
+    assert ep.stats.kv_bytes * 2 <= er.stats.kv_bytes, (
+        f"budget: paged pool {ep.stats.kv_bytes}B must be <= half the "
+        f"dense rows {er.stats.kv_bytes}B")
+    assert resident >= 2 * DENSE_SLOTS, (
+        f"expected >= {2 * DENSE_SLOTS} resident sessions at the "
+        f"{DENSE_SLOTS}-dense-slot byte budget, got {resident}")
+    assert ep.stats.session_fallbacks == 0 and \
+        ep.stats.extend_requests == SESSIONS
+    assert ep.stats.kv_blocks_in_use == 0          # teardown clean
+
+    # -- O(1)-in-prompt-length copy-on-write forks + parity --------------
+    gp, gr = paged(), reference()
+    g_paged, copies = run_groups(gp)
+    g_ref, _ = run_groups(gr)
+    assert g_paged == g_ref, (
+        "paged group-fork streams diverged from the unpaged reference")
+    assert copies[0] == copies[1] == GROUP, (
+        f"fork copy cost must be G={GROUP} tail blocks regardless of "
+        f"prompt length, got {copies}")
+    dense_fork_tokens = (GROUP - 1) * MAX_SEQ      # what fork_decode_rows
+    paged_fork_tokens = GROUP * BS                 # broadcasts per group
+    assert gp.stats.kv_blocks_in_use == 0
+
+    rows = [
+        ("paged_resident_sessions", 0.0,
+         f"{resident} sessions resident at a {DENSE_SLOTS}-dense-slot "
+         f"byte budget ({resident / DENSE_SLOTS:.1f}x; 0 fallbacks, "
+         f"{SESSIONS} extend turns)"),
+        ("paged_kv_bytes", 0.0,
+         f"{ep.stats.kv_bytes}B pool vs {er.stats.kv_bytes}B dense rows "
+         f"({er.stats.kv_bytes / ep.stats.kv_bytes:.1f}x smaller), peak "
+         f"{ep.stats.kv_blocks_peak}/{ep.stats.kv_blocks_total} blocks"),
+        ("paged_cow_fork_blocks", 0.0,
+         f"{copies[0]} tail blocks copied per G={GROUP} fork at prompt "
+         f"20 AND 52 tokens (O(1) in prompt length; dense fork "
+         f"broadcasts {dense_fork_tokens} vs {paged_fork_tokens} "
+         f"tail tokens)"),
+        ("paged_stream_parity", 0.0,
+         "byte-identical tokens+logprobs+versions vs HostReferenceEngine "
+         "on both workloads"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in main():
+        print(f"{name},{us:.1f},{derived}")

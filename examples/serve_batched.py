@@ -57,6 +57,12 @@ for i, e in enumerate(pool.engines):
           f"{e.stats.prefill_requests} requests, "
           f"{e.stats.prefill_traces} prefill traces, "
           f"{e.stats.decode_traces} decode trace(s)")
+    if e.paged:
+        # paged KV: capacity is blocks actually filled, not slots x max_seq
+        print(f"engine[{i}]: KV peak {e.stats.kv_blocks_peak}"
+              f"/{e.stats.kv_blocks_total} blocks of "
+              f"{e.kv_block_size} tokens ({e.stats.kv_bytes} pool bytes, "
+              f"{e.stats.kv_blocks_in_use} still in use)")
 for r in done[:4]:
     v = np.asarray(r.versions)
     print(f"  {r.problem_id}: {len(r.completion):2d} tokens "

@@ -234,6 +234,16 @@ class InferencePool:
                                             for e in self.engines),
             "group_prefill_tokens_saved": sum(
                 e.stats.group_prefill_tokens_saved for e in self.engines),
+            "kv_blocks_total": sum(e.stats.kv_blocks_total
+                                   for e in self.engines),
+            "kv_blocks_in_use": sum(e.stats.kv_blocks_in_use
+                                    for e in self.engines),
+            "kv_blocks_peak": sum(e.stats.kv_blocks_peak
+                                  for e in self.engines),
+            "kv_bytes": sum(e.stats.kv_bytes for e in self.engines),
+            "cow_forks": sum(e.stats.cow_forks for e in self.engines),
+            "blocks_freed_on_evict": sum(e.stats.blocks_freed_on_evict
+                                         for e in self.engines),
         }
 
 

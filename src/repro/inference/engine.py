@@ -68,10 +68,31 @@ available slots are forked now, and the remainder re-forks (one more
 1-row prefill) as slots free up — never a per-member prefill, never a
 deadlock.
 
+Paged KV cache (block pool + block tables)
+------------------------------------------
+For attention-only families the dense per-slot cache is replaced by the
+vLLM memory architecture: one shared K/V pool of ``num_kv_blocks`` blocks
+(``kv_block_size`` tokens each) plus a per-slot block table. A
+refcounting ``BlockAllocator`` makes blocks the unit of admission
+(``ceil(prompt/bs)`` claimed before a slot is taken — pool-dry requests
+*wait*, backpressure instead of a crash), of sharing (a group fork
+increfs the prompt's full blocks into every member table copy-on-write;
+only the partial tail block is materialized per member, so fork cost is
+O(1) in prompt length), and of residency (a parked session holds only the
+blocks it filled, so session capacity is real token usage — not
+``num_slots x max_seq``). Every terminal path — finish, overflow,
+eviction, ``close_session``, stale-cache release — returns its block
+references, and ``run_until_idle`` asserts the pool leak-free at every
+drain. Decode reads K/V through the table (``models.paged_sample_step``
+-> Pallas ``kernels/paged_attention.py``, XLA gather fallback off
+``use_pallas``); prefill/extend keep their dense math and convert at the
+scatter/gather boundary, which keeps the streams bitwise-comparable.
+
 ``HostReferenceEngine`` (repro.inference.reference) keeps the pre-fusion
 host path alive as the parity oracle and Fig. 4 baseline: same scheduling
 and RNG discipline, but eager host-side sampling with per-token scalar
-syncs. Under a fixed seed the two engines must produce identical
+syncs — and *unpaged* dense rows, so it also oracles the paged memory
+paths. Under a fixed seed the two engines must produce identical
 token/logprob/version streams — and a session-extend run must reproduce
 the full-re-prefill run's streams exactly (same one-split-per-admission,
 one-split-per-tick RNG discipline). The same oracle covers the group
@@ -89,6 +110,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import (extend_sample, fork_decode_rows, init_decode_state,
+                          init_paged_state, paged_gather_rows,
+                          paged_sample_step, paged_write_rows,
                           prefill_fork_sample, prefill_sample, sample_step)
 
 DEFAULT_PCFG = ParallelConfig(remat="none", loss_chunk=0)
@@ -180,6 +203,13 @@ class EngineStats:
     group_prefill_traces: int = 0  # compiled group-fork shapes
     group_partial_admissions: int = 0  # forks that admitted < the remainder
     group_prefill_tokens_saved: int = 0  # prompt tokens members did NOT re-prefill
+    # paged KV-cache memory accounting (zero when the config is unpaged)
+    kv_blocks_total: int = 0     # block-pool size
+    kv_blocks_in_use: int = 0    # unique blocks off the free list
+    kv_blocks_peak: int = 0      # high-water mark of kv_blocks_in_use
+    kv_bytes: int = 0            # persistent K/V cache bytes (pool or dense)
+    cow_forks: int = 0           # copy-on-write private-block materializations
+    blocks_freed_on_evict: int = 0  # blocks reclaimed by parked-session eviction
     # per-step occupancy trace for the Fig. 4 / utilization benchmark
     occupancy_trace: List[int] = field(default_factory=list)
 
@@ -192,13 +222,70 @@ def _pow2_bucket(n: int, floor: int = 1) -> int:
     return b
 
 
+class BlockAllocator:
+    """Refcounting free-list allocator over the engine's KV block pool.
+
+    Blocks are the unit of both residency and sharing: a group fork
+    increfs the shared prompt's full blocks into every member's table
+    (copy-on-write), and a block returns to the free list only when its
+    last reference drops (finish, eviction, ``close_session``, overflow).
+    ``in_use`` counts *unique* blocks off the free list — the truth the
+    engine's KV stats and teardown leak assertions are written against."""
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))   # pop() -> low ids
+        self._ref = np.zeros((num_blocks,), np.int32)
+        self.in_use = 0
+        self.peak = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """All-or-nothing allocation; ``None`` means backpressure (the
+        caller leaves its request queued and retries after frees)."""
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        for b in ids:
+            self._ref[b] = 1
+        self.in_use += n
+        self.peak = max(self.peak, self.in_use)
+        return ids
+
+    def incref(self, ids) -> None:
+        for b in ids:
+            assert self._ref[b] > 0, f"incref of free block {b}"
+            self._ref[b] += 1
+
+    def refcount(self, block: int) -> int:
+        return int(self._ref[block])
+
+    def free(self, ids) -> int:
+        """Drop one reference per id; returns how many blocks actually
+        went back to the free list (refcount reached zero)."""
+        freed = 0
+        for b in ids:
+            assert self._ref[b] > 0, f"double free of block {b}"
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                self._free.append(b)
+                freed += 1
+        self.in_use -= freed
+        return freed
+
+
 class InferenceEngine:
     """Slot-based continuous-batching engine over a single model replica."""
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
                  max_seq: int = 512, eos_id: int = 1,
                  pcfg: ParallelConfig = DEFAULT_PCFG, seed: int = 0,
-                 policy_version: int = 0, min_prefill_bucket: int = 8):
+                 policy_version: int = 0, min_prefill_bucket: int = 8,
+                 kv_block_size: int = 16,
+                 num_kv_blocks: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.pcfg = pcfg
@@ -220,10 +307,59 @@ class InferenceEngine:
                                   and cfg.num_meta_tokens == 0
                                   and not (cfg.sliding_window
                                            and max_seq <= cfg.sliding_window))
+        # paged KV cache: attention-only families with a linear cache.
+        # Recurrent state (SSM/hybrid) has nothing pageable and keeps the
+        # dense rows; a ring (window-sized) cache has a slot->position
+        # wraparound the linear block table does not express. The block
+        # size is rounded down to a power-of-two divisor of max_seq so
+        # blocks_per_row * block_size == max_seq exactly — the linearized
+        # (gathered) cache then has the dense cache's shape, which is what
+        # makes paged-vs-dense stream parity *bitwise*.
+        bs = max(1, min(int(kv_block_size), max_seq))
+        while max_seq % bs:
+            bs >>= 1
+        self.kv_block_size = bs
+        # (meta tokens would offset every cache position by n_prefix,
+        # which the host-side block accounting does not model — same
+        # exclusion as supports_sessions)
+        self.paged = (self._supports_paging() and cfg.uses_attention
+                      and cfg.ssm is None and cfg.num_meta_tokens == 0
+                      and not (cfg.sliding_window
+                               and max_seq <= cfg.sliding_window))
 
         # cache dtype follows the served params dtype
         cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
-        self.state = init_decode_state(cfg, num_slots, max_seq, cache_dtype)
+        if self.paged:
+            self._blocks_per_row = max_seq // bs
+            if num_kv_blocks is None:
+                # default: byte parity with the dense layout — existing
+                # workloads can never exhaust the pool (each slot's table
+                # holds at most blocks_per_row blocks), they just stop
+                # pinning full-length rows for short requests
+                num_kv_blocks = num_slots * self._blocks_per_row
+            self.allocator: Optional[BlockAllocator] = \
+                BlockAllocator(num_kv_blocks)
+            self.state = init_paged_state(cfg, num_slots, num_kv_blocks, bs,
+                                          self._blocks_per_row, cache_dtype)
+            # host truth for every slot's block table; the device table is
+            # a mirror updated by scatters and _flush_table_updates
+            self._slot_blocks: List[List[int]] = \
+                [[] for _ in range(num_slots)]
+            self._table_dirty: List[tuple] = []
+            self.stats.kv_blocks_total = num_kv_blocks
+        else:
+            self.allocator = None
+            self.state = init_decode_state(cfg, num_slots, max_seq,
+                                           cache_dtype)
+        # logical K/V entries written per slot == the next decode write
+        # position. Tracked for EVERY engine (incl. the host reference):
+        # it drives the paged block-boundary allocs AND the shared
+        # cache-full overflow guard, which must fire identically on both
+        # engines for the parity contract to survive the max_seq edge
+        self._slot_len = np.zeros((num_slots,), np.int64)
+        if "k" in self.state:
+            self.stats.kv_bytes = int(self.state["k"].nbytes
+                                      + self.state["v"].nbytes)
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.pending: Deque[Union[Request, GroupRequest]] = deque()
         self.completed: List[Request] = []
@@ -254,6 +390,23 @@ class InferenceEngine:
         self._group_prefill_fn = jax.jit(self._group_prefill_impl)
         self._fork_scatter_fn = jax.jit(self._fork_scatter_impl,
                                         donate_argnums=(0,))
+        if self.paged:
+            self._paged_scatter_fn = jax.jit(self._paged_scatter_impl,
+                                             donate_argnums=(0,))
+            self._paged_fork_scatter_fn = jax.jit(
+                self._paged_fork_scatter_impl, donate_argnums=(0,))
+            # COW block copy: donated in-place pool update (one block's
+            # K/V moves, not a fresh O(pool) buffer pair per copy)
+            self._copy_block_fn = jax.jit(
+                lambda k, v, dst, src: (k.at[:, dst].set(k[:, src]),
+                                        v.at[:, dst].set(v[:, src])),
+                donate_argnums=(0, 1))
+
+    def _supports_paging(self) -> bool:
+        """Class-level paging opt-in. ``HostReferenceEngine`` returns
+        False: it stays the *unpaged* parity oracle, so every paged fast
+        path is gated by byte-identical streams against dense rows."""
+        return True
 
     # ------------------------------------------------------------------ api
 
@@ -277,13 +430,17 @@ class InferenceEngine:
             last_use=self._next_use())
 
     def close_session(self, session_id: int) -> None:
-        """Drop a session. A parked slot is freed immediately; a slot with
-        the turn still decoding is released by the normal finish path
+        """Drop a session. A parked slot is freed immediately — including
+        its KV blocks — while a slot with the turn still decoding is
+        released (and its blocks reclaimed) by the normal finish path
         (the session is gone from the table, so it will not re-park)."""
         sess = self.sessions.pop(session_id, None)
         if sess is not None and sess.slot is not None \
                 and self.slots[sess.slot] is None:
             self._slot_session[sess.slot] = None
+            if self.paged:
+                self._free_slot_blocks(sess.slot)
+                self._sync_kv_stats()
 
     def update_weights(self, params, version: int) -> None:
         """In-flight policy update: takes effect at the next decode tick;
@@ -347,12 +504,17 @@ class InferenceEngine:
     def _extend_impl(self, params, state, gather_idx, tokens, ext_lens,
                      start_pos, temps, rng):
         """Fused bucketed session extend + first-token sampling: gather the
-        pinned slot rows, run the new-token block against their caches, and
-        sample (one dispatch). Padded rows gather slot 0 and are dropped by
-        the follow-up scatter."""
+        pinned slot rows (linearizing each row's pool blocks through its
+        block table when paged), run the new-token block against their
+        caches with the *unchanged* dense extend math, and sample (one
+        dispatch). Padded rows gather slot 0 and are dropped by the
+        follow-up scatter."""
         self.stats.extend_traces += 1   # python side effect: trace-time only
-        rows = {k: (v[gather_idx] if k == "pos" else v[:, gather_idx])
-                for k, v in state.items()}
+        if self.paged:
+            rows = paged_gather_rows(state, gather_idx)
+        else:
+            rows = {k: (v[gather_idx] if k == "pos" else v[:, gather_idx])
+                    for k, v in state.items()}
         batch = {"tokens": tokens, "prompt_lens": ext_lens}
         return extend_sample(params, rows, batch, start_pos, temps, rng,
                              self.cfg, self.pcfg)
@@ -381,10 +543,19 @@ class InferenceEngine:
 
     def _tick_impl(self, params, state, token, active, temps, gen, max_new,
                    rng):
-        """Fused decode tick: serve + sample + finished-flag tracking."""
+        """Fused decode tick: serve + sample + finished-flag tracking.
+        Paged engines read K/V through the block table and mask inactive
+        rows' writes (a shared pool cannot tolerate parked-row drift
+        writes the way exclusively-owned dense rows can); the RNG split
+        and sampling math are identical either way."""
         self.stats.decode_traces += 1    # python side effect: trace-time only
-        toks, lps, new_state, rng = sample_step(
-            params, state, token, temps, rng, self.cfg, self.pcfg)
+        if self.paged:
+            toks, lps, new_state, rng = paged_sample_step(
+                params, state, token, active, temps, rng, self.cfg,
+                self.pcfg)
+        else:
+            toks, lps, new_state, rng = sample_step(
+                params, state, token, temps, rng, self.cfg, self.pcfg)
         count = gen + active.astype(jnp.int32)
         finished = active & ((toks == self.eos_id) | (count >= max_new))
         new_token = jnp.where(active, toks, token)
@@ -411,6 +582,44 @@ class InferenceEngine:
         gen = gen.at[slot_idx].set(jnp.ones_like(slot_idx), mode="drop")
         max_new = max_new.at[slot_idx].set(row_max_new, mode="drop")
         return new_state, last_token, active, temps, gen, max_new
+
+    def _paged_scatter_impl(self, state, last_token, active, temps, gen,
+                            max_new, st, slot_idx, toks, row_temps,
+                            row_max_new, row_active, src_pos, blk_pos,
+                            off_pos, new_tables):
+        """Paged scatter: copy row positions ``src_pos`` of the dense
+        prefill/extend product into pool blocks ``(blk_pos, off_pos)``
+        (host-computed from the allocator's tables; out-of-bounds block
+        ids drop — padded rows, unallocated tails, and blocks a row only
+        *shares*), and install each row's block table. One dispatch, same
+        bookkeeping as the dense scatter."""
+        new_state = paged_write_rows(state, st, slot_idx, src_pos, blk_pos,
+                                     off_pos, new_tables)
+        last_token = last_token.at[slot_idx].set(toks, mode="drop")
+        active = active.at[slot_idx].set(row_active, mode="drop")
+        temps = temps.at[slot_idx].set(row_temps, mode="drop")
+        gen = gen.at[slot_idx].set(jnp.ones_like(slot_idx), mode="drop")
+        max_new = max_new.at[slot_idx].set(row_max_new, mode="drop")
+        return new_state, last_token, active, temps, gen, max_new
+
+    def _paged_fork_scatter_impl(self, state, last_token, active, temps,
+                                 gen, max_new, st, slot_idx, toks,
+                                 row_temps, row_max_new, row_active,
+                                 src_pos, blk_pos, off_pos, new_tables):
+        """Copy-on-write group fork: broadcast the single prefilled row
+        (lazy under jit) and scatter it *once* into the shared prompt
+        blocks via member 0's coordinates; members >0 write only their
+        private tail block (every other position carries an out-of-bounds
+        block id). The pool write cost is therefore O(prompt + G·tail) —
+        the prompt lands once like any single admission and each member
+        adds at most one block — instead of the dense fork's O(G·max_seq)
+        row broadcast."""
+        st_rows = fork_decode_rows(st, slot_idx.shape[0])
+        return self._paged_scatter_impl(state, last_token, active, temps,
+                                        gen, max_new, st_rows, slot_idx,
+                                        toks, row_temps, row_max_new,
+                                        row_active, src_pos, blk_pos,
+                                        off_pos, new_tables)
 
     # -------------------------------------------- overridable execution ops
     # (HostReferenceEngine swaps these for the pre-fusion host path while
@@ -447,22 +656,30 @@ class InferenceEngine:
         return toks, lps, st
 
     def _fork_scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
-                           row_active) -> None:
+                           row_active, paged_coords=None) -> None:
+        fn = self._fork_scatter_fn if paged_coords is None \
+            else self._paged_fork_scatter_fn
+        extra = () if paged_coords is None \
+            else tuple(jnp.asarray(c) for c in paged_coords)
         (self.state, self._last_token, self._active, self._temps, self._gen,
-         self._max_new) = self._fork_scatter_fn(
+         self._max_new) = fn(
             self.state, self._last_token, self._active, self._temps,
             self._gen, self._max_new, st, jnp.asarray(slot_idx),
             jnp.asarray(toks), jnp.asarray(row_temps),
-            jnp.asarray(row_max_new), jnp.asarray(row_active))
+            jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
 
     def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
-                      row_active) -> None:
+                      row_active, paged_coords=None) -> None:
+        fn = self._scatter_fn if paged_coords is None \
+            else self._paged_scatter_fn
+        extra = () if paged_coords is None \
+            else tuple(jnp.asarray(c) for c in paged_coords)
         (self.state, self._last_token, self._active, self._temps, self._gen,
-         self._max_new) = self._scatter_fn(
+         self._max_new) = fn(
             self.state, self._last_token, self._active, self._temps,
             self._gen, self._max_new, st, jnp.asarray(slot_idx),
             jnp.asarray(toks), jnp.asarray(row_temps),
-            jnp.asarray(row_max_new), jnp.asarray(row_active))
+            jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
 
     def _decode_exec(self):
         """One fused decode tick; a single small host readback."""
@@ -477,6 +694,211 @@ class InferenceEngine:
     def _next_use(self) -> int:
         self._use_counter += 1
         return self._use_counter
+
+    # ------------------------------------------------- paged-KV bookkeeping
+
+    def _blocks_for(self, tokens: int) -> int:
+        """Blocks needed to hold ``tokens`` K/V entries."""
+        return -(-tokens // self.kv_block_size)
+
+    def _free_slot_blocks(self, slot: int, evicted: bool = False) -> None:
+        """Return a slot's block references to the allocator (shared blocks
+        only free when the last referencing member drops them)."""
+        n = self.allocator.free(self._slot_blocks[slot])
+        self._slot_blocks[slot] = []
+        self._slot_len[slot] = 0
+        if evicted:
+            self.stats.blocks_freed_on_evict += n
+
+    def _alloc_evicting(self, n: int, protect=()) -> Optional[List[int]]:
+        """Allocate ``n`` blocks, LRU-evicting parked sessions for their
+        blocks when the free list runs short (the eviction also frees the
+        slot — fine, eviction is eviction). ``protect`` names session ids
+        that must survive: the sessions an in-flight extend run is about
+        to re-activate. Returns None when the pool cannot satisfy the
+        request even with every unprotected parked session gone — the
+        caller leaves its work queued (admission backpressure) and the
+        queue drains as decoding frees blocks."""
+        while True:
+            ids = self.allocator.alloc(n)
+            if ids is not None:
+                return ids
+            if self._evict_lru_parked(protect) is None:
+                return None
+
+    def _cow_block(self, slot: int, li: int, protect=()) -> bool:
+        """Copy-on-write: give ``slot`` a private copy of its logical
+        block ``li`` before writing into it. Triggered when a write would
+        land in a block whose refcount is >1 (shared via a group fork).
+        Copies one block's K/V pool-to-pool (O(block_size), independent
+        of how long the shared prefix is), drops the shared reference,
+        and queues the device-table fixup."""
+        old = self._slot_blocks[slot][li]
+        ids = self._alloc_evicting(1, protect)
+        if ids is None:
+            return False
+        new = ids[0]
+        self.state["k"], self.state["v"] = self._copy_block_fn(
+            self.state["k"], self.state["v"], jnp.int32(new),
+            jnp.int32(old))
+        self.allocator.free([old])
+        self._slot_blocks[slot][li] = new
+        self._table_dirty.append((slot, li, new))
+        self.stats.cow_forks += 1
+        return True
+
+    def _flush_table_updates(self) -> None:
+        """Push queued host-table changes (decode-growth allocations, COW
+        swaps) to the device block table in one dispatch."""
+        if not self.paged or not self._table_dirty:
+            return
+        rows = np.array([t[0] for t in self._table_dirty], np.int32)
+        cols = np.array([t[1] for t in self._table_dirty], np.int32)
+        vals = np.array([t[2] for t in self._table_dirty], np.int32)
+        self.state["block_tables"] = self.state["block_tables"].at[
+            rows, cols].set(vals)
+        self._table_dirty.clear()
+
+    def _build_scatter_coords(self, slot_idx, S_write: int, row_starts):
+        """Host-side physical coordinates for a paged scatter: for bucket
+        row r and offset j, position ``row_starts[r] + j`` of the dense
+        row goes to ``(blk[r,j], off[r,j])`` per the slot's block table —
+        or to the out-of-bounds sentinel (dropped) for padded rows and
+        positions past the row's allocation."""
+        sent = self.allocator.num_blocks
+        R = len(slot_idx)
+        bs = self.kv_block_size
+        offsets = np.arange(S_write, dtype=np.int32)
+        src = np.asarray(row_starts, np.int32)[:, None] + offsets[None, :]
+        blk = np.full((R, S_write), sent, np.int32)
+        off = np.zeros((R, S_write), np.int32)
+        tables = np.zeros((R, self._blocks_per_row), np.int32)
+        for r in range(R):
+            s = int(slot_idx[r])
+            if s >= self.num_slots:
+                continue
+            blocks = self._slot_blocks[s]
+            tables[r, :len(blocks)] = blocks
+            # sentinel-padded lookup table: positions past the slot's
+            # allocation resolve to the out-of-bounds id and drop
+            lut = np.full((self._blocks_per_row + 1,), sent, np.int64)
+            lut[:len(blocks)] = blocks
+            li = np.minimum(src[r] // bs, self._blocks_per_row)
+            blk[r] = lut[li]
+            off[r] = src[r] % bs
+        return src, blk, off, tables
+
+    def _build_fork_coords(self, slot_idx, S_write: int, k: int,
+                           shared: List[int], tails: List[int]):
+        """Coordinates for the copy-on-write group fork: member 0 writes
+        the shared full blocks (once, for everyone — they are the same
+        physical blocks in every member's table) plus its tail; members
+        1..k-1 write *only* their private tail block."""
+        sent = self.allocator.num_blocks
+        R = len(slot_idx)
+        bs = self.kv_block_size
+        src = np.broadcast_to(np.arange(S_write, dtype=np.int32),
+                              (R, S_write)).copy()
+        blk = np.full((R, S_write), sent, np.int32)
+        off = src % bs
+        tables = np.zeros((R, self._blocks_per_row), np.int32)
+        li = src[0] // bs
+        for r in range(min(k, R)):
+            s = int(slot_idx[r])
+            blocks = self._slot_blocks[s]
+            tables[r, :len(blocks)] = blocks
+            lut = np.full((self._blocks_per_row + 1,), sent, np.int64)
+            if r == 0:
+                lut[:len(shared)] = shared        # prompt lands ONCE
+            if tails:
+                lut[len(shared)] = tails[r]       # private COW tail
+            blk[r] = lut[np.minimum(li, self._blocks_per_row)]
+        return src, blk, off, tables
+
+    def _ensure_decode_blocks(self) -> None:
+        """Pre-tick invariant: every active slot's next K/V write position
+        lands in an allocated block it owns exclusively. Crossing a block
+        boundary allocates (LRU-evicting parked sessions when the free
+        list is short); a shared block is copy-on-write'd. A slot the
+        pool genuinely cannot serve finishes gracefully with
+        ``finish_reason="overflow"`` instead of crashing the pump loop."""
+        if not self.paged:
+            return
+        bs = self.kv_block_size
+        starved = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            # _overflow_full_slots ran first, so the write is in range
+            li = int(self._slot_len[i]) // bs
+            blocks = self._slot_blocks[i]
+            if li == len(blocks):
+                ids = self._alloc_evicting(1)
+                if ids is None:
+                    starved.append(i)
+                    continue
+                blocks.append(ids[0])
+                self._table_dirty.append((i, li, ids[0]))
+            elif self.allocator.refcount(blocks[li]) > 1:
+                if not self._cow_block(i, li):
+                    starved.append(i)
+        for i in starved:
+            self._finish_starved(i)
+
+    def _overflow_full_slots(self) -> None:
+        """Cache-full guard, shared by paged AND dense engines: a slot
+        whose next K/V write position has reached ``max_seq`` finishes
+        with ``finish_reason="overflow"`` *before* the tick. Without
+        this the dense write clamps to position max_seq-1 and the paged
+        write would clamp to a different slot of the last block — both
+        silently corrupt the cache (and, post-fork, possibly a SHARED
+        block), and the two clamp targets differ, so the guard is also
+        what keeps the parity contract intact at the max_seq edge."""
+        for i, req in enumerate(self.slots):
+            if req is not None and int(self._slot_len[i]) >= self.max_seq:
+                self._finish_starved(i)
+
+    def _finish_starved(self, slot: int) -> None:
+        """Graceful overflow finish for an actively-decoding request whose
+        cache row is full or whose pool ran dry: bank what it generated,
+        release the slot, and reclaim its blocks unless a session parks
+        them."""
+        req = self.slots[slot]
+        req.finished = True
+        req.finish_reason = "overflow"
+        self.stats.overflows += 1
+        self._finish(req)
+        self.slots[slot] = None
+        sess = self._session_of(req)
+        if sess is None or sess.slot != slot:
+            self._slot_session[slot] = None
+            if self.paged:
+                self._free_slot_blocks(slot)
+        self._active = self._active.at[slot].set(False)
+
+    def _sync_kv_stats(self) -> None:
+        if self.paged:
+            self.stats.kv_blocks_in_use = self.allocator.in_use
+            self.stats.kv_blocks_peak = self.allocator.peak
+
+    def assert_kv_consistent(self) -> None:
+        """Block-leak gate (runs at every ``run_until_idle`` teardown):
+        each in-use pool block must be reachable from an occupied or
+        parked slot, and freed slots must hold no blocks — so with no
+        resident sessions, ``in_use == 0``."""
+        if not self.paged:
+            return
+        held = set()
+        for i in range(self.num_slots):
+            if self.slots[i] is not None or self._slot_session[i] is not None:
+                held.update(self._slot_blocks[i])
+            else:
+                assert not self._slot_blocks[i], \
+                    f"freed slot {i} still holds blocks {self._slot_blocks[i]}"
+        assert self.allocator.in_use == len(held), (
+            f"KV block leak: {self.allocator.in_use} blocks in use, "
+            f"{len(held)} reachable from slots/sessions")
+        self._sync_kv_stats()
 
     def _session_of(self, req: Request) -> Optional[EngineSession]:
         if req.session_id is None:
@@ -505,10 +927,17 @@ class InferenceEngine:
 
     def _overflow_head(self) -> bool:
         """Finish the head request with ``finish_reason="overflow"`` if its
-        conversation would not fit in ``max_seq`` (graceful: the pump loop
-        keeps running, the client surfaces a masked rollout)."""
+        conversation would not fit in ``max_seq`` — or, when paged, if its
+        prompt alone needs more blocks than the whole pool holds (it could
+        never be admitted; waiting would deadlock the queue). Graceful:
+        the pump loop keeps running, the client surfaces a masked
+        rollout."""
         req = self.pending[0]
-        if self._required_len(req) <= self.max_seq:
+        fits = self._required_len(req) <= self.max_seq
+        if fits and self.paged:
+            fits = (self._blocks_for(self._required_len(req))
+                    <= self.allocator.num_blocks)
+        if fits:
             return False
         self.pending.popleft()
         req.finished = True
@@ -519,18 +948,23 @@ class InferenceEngine:
         self.stats.overflows += 1
         return True
 
-    def _evict_lru_parked(self) -> Optional[int]:
-        """Reclaim the least-recently-used parked session's slot. The
-        evicted session keeps its host-side token history; its next turn
-        transparently falls back to a full re-prefill."""
+    def _evict_lru_parked(self, protect=()) -> Optional[int]:
+        """Reclaim the least-recently-used parked session's slot — and,
+        when paged, its KV blocks. The evicted session keeps its
+        host-side token history; its next turn transparently falls back
+        to a full re-prefill. ``protect`` shields sessions an in-flight
+        extend run is about to re-activate."""
         parked = [(sess.last_use, sid) for sid, sess in self.sessions.items()
-                  if sess.slot is not None and self.slots[sess.slot] is None]
+                  if sess.slot is not None and self.slots[sess.slot] is None
+                  and sid not in protect]
         if not parked:
             return None
         _, sid = min(parked)
         sess = self.sessions[sid]
         slot, sess.slot = sess.slot, None
         self._slot_session[slot] = None
+        if self.paged:
+            self._free_slot_blocks(slot, evicted=True)
         self.stats.session_evictions += 1
         return slot
 
@@ -562,7 +996,8 @@ class InferenceEngine:
             if self._overflow_head():
                 continue
             if self._is_resident_extend(self.pending[0]):
-                self._admit_extend_run()
+                if not self._admit_extend_run():
+                    return
                 continue
             if not self._admit_prefill_run():
                 return
@@ -578,12 +1013,15 @@ class InferenceEngine:
             if self._required_len(req) > self.max_seq:
                 continue              # overflow-doomed: never takes a slot
             # a session going the prefill path with a parked-but-unusable
-            # slot (stale cache version) releases that slot up front — the
-            # fallback re-prefill will claim a slot like any fresh prompt
+            # slot (stale cache version) releases that slot — and its now
+            # dead-policy KV blocks — up front; the fallback re-prefill
+            # will claim a slot and fresh blocks like any new prompt
             sess = self._session_of(req)
             if (sess is not None and sess.slot is not None
                     and self.slots[sess.slot] is None):
                 self._slot_session[sess.slot] = None
+                if self.paged:
+                    self._free_slot_blocks(sess.slot)
                 sess.slot = None
             want += 1
         free = [i for i in range(self.num_slots)
@@ -597,6 +1035,7 @@ class InferenceEngine:
             return False
         reqs: List[Request] = []
         prompts: List[np.ndarray] = []
+        block_lists: List[List[int]] = []
         progress = False
         while (self.pending and len(reqs) < len(free)
                and not isinstance(self.pending[0], GroupRequest)
@@ -609,37 +1048,77 @@ class InferenceEngine:
             if not self._pad_prompts and prompts \
                     and len(prompt) != len(prompts[0]):
                 break
+            if self.paged:
+                # admission is gated on real KV capacity, not slot count:
+                # the prompt's blocks are claimed here (evicting parked
+                # LRU sessions if the free list is short) and the request
+                # WAITS at the queue head when the pool cannot serve it
+                # yet — backpressure, not a crash
+                blocks = self._alloc_evicting(self._blocks_for(len(prompt)))
+                if blocks is None:
+                    break
+                block_lists.append(blocks)
             reqs.append(self.pending.popleft())
             prompts.append(prompt)
         if reqs:
-            self._admit_batch(reqs, prompts, free[:len(reqs)])
+            self._admit_batch(reqs, prompts, free[:len(reqs)], block_lists)
             progress = True
         return progress
 
-    def _admit_extend_run(self) -> None:
+    def _admit_extend_run(self) -> bool:
         """Admit the head run of resident-session extend turns that share
-        one length bucket, as a single fused extend dispatch."""
+        one length bucket, as a single fused extend dispatch. Returns
+        False when no turn could be admitted (paged pool exhausted — the
+        head waits for blocks; backpressure, not a crash)."""
         head = self.pending[0]
         head_sess = self.sessions[head.session_id]
         S_b = self._extend_bucket(1 + len(head.prompt_tokens),
                                   len(head_sess.tokens) - 1)
         reqs: List[Request] = []
         seen = set()
+        progress = False
         while self.pending and len(reqs) < self.num_slots:
             req = self.pending[0]
             if not self._is_resident_extend(req) or req.session_id in seen:
                 break
             if self._overflow_head():
+                progress = True
                 continue
             sess = self.sessions[req.session_id]
             pos = len(sess.tokens) - 1
             if 1 + len(req.prompt_tokens) > S_b or pos + S_b > self.max_seq:
+                break
+            if self.paged and not self._reserve_extend_blocks(
+                    sess, pos, 1 + len(req.prompt_tokens),
+                    protect=seen | {req.session_id}):
                 break
             self.pending.popleft()
             reqs.append(req)
             seen.add(req.session_id)
         if reqs:
             self._admit_extend(reqs, S_b)
+        return bool(reqs) or progress
+
+    def _reserve_extend_blocks(self, sess: EngineSession, start: int,
+                               ext_len: int, protect=()) -> bool:
+        """Grow a resident session's block list to cover the extend write
+        region [start, start+ext_len) and copy-on-write the boundary block
+        if it is shared (a group-forked member whose first write lands in
+        a block its siblings still reference). ``protect`` keeps this
+        run's own sessions out of the eviction pool."""
+        slot = sess.slot
+        blocks = self._slot_blocks[slot]
+        need = self._blocks_for(start + ext_len) - len(blocks)
+        if need > 0:
+            ids = self._alloc_evicting(need, protect)
+            if ids is None:
+                return False
+            blocks.extend(ids)
+        li = start // self.kv_block_size
+        if li < len(blocks) and self.allocator.refcount(blocks[li]) > 1:
+            if not self._cow_block(slot, li, protect):
+                return False
+        return True
 
     def _extend_bucket(self, ext_len: int, pos: int) -> int:
         """Power-of-two extend bucket, capped so the block write at ``pos``
@@ -658,7 +1137,15 @@ class InferenceEngine:
         slots free up — first-token finishes can free slots within this
         same ``_admit`` pass."""
         greq = self.pending[0]
-        if len(greq.prompt_tokens) > self.max_seq:
+        plen = len(greq.prompt_tokens)
+        full, tail = divmod(plen, self.kv_block_size)
+        doomed = plen > self.max_seq
+        if not doomed and self.paged:
+            # one member needs the shared full blocks plus (maybe) a tail
+            # block; if even that exceeds the whole pool, waiting would
+            # deadlock the queue
+            doomed = full + (1 if tail else 0) > self.allocator.num_blocks
+        if doomed:
             # shared prompt can never fit: every member overflows, exactly
             # as each would have independently
             self.pending.popleft()
@@ -679,21 +1166,49 @@ class InferenceEngine:
         if not free:
             return False
         k = min(len(free), len(greq.members))
+        shared: List[int] = []
+        tails: List[int] = []
+        if self.paged:
+            # claim the shared prompt blocks once, then one private tail
+            # block per member (copy-on-write: members share the full
+            # blocks via refcounts and own only the partial tail they
+            # will immediately write into). Under block pressure the
+            # member count shrinks — partial admission by capacity, same
+            # re-fork contract as partial admission by slots.
+            shared = self._alloc_evicting(full)
+            if shared is None:
+                return False
+            while k > 0 and tail:
+                tails = self._alloc_evicting(k)
+                if tails is not None:
+                    break
+                k -= 1
+            if k == 0 or (tail and tails is None):
+                self.allocator.free(shared)
+                return False
         if k < len(greq.members):
             self.stats.group_partial_admissions += 1
         members, greq.members = greq.members[:k], greq.members[k:]
         if not greq.members:
             self.pending.popleft()
-        self._admit_group_fork(greq, members, free[:k])
+        self._admit_group_fork(greq, members, free[:k], shared, tails)
         return True
 
     def _admit_group_fork(self, greq: "GroupRequest", members: List[Request],
-                          slot_ids: List[int]) -> None:
+                          slot_ids: List[int], shared: List[int],
+                          tails: List[int]) -> None:
         """One shared-prefill fork dispatch: prefill the group prompt as a
         single bucketed row, sample every member's first token from the
         broadcast logits (byte-identical to a per-member prefill batch —
         see ``models.prefill_fork_sample``), and fork the cache row into
-        the member slots with one jitted broadcast→scatter."""
+        the member slots with one jitted broadcast→scatter.
+
+        Paged engines fork **copy-on-write**: every member's block table
+        references the same physical ``shared`` full blocks (refcounted),
+        and only the partial tail block — the one a member's first decode
+        write lands in — is materialized per member. Fork cost is
+        O(prompt + G·block_size) pool writes instead of the dense fork's
+        G× row broadcast: independent of prompt length per member."""
         k = len(members)
         prompt = np.asarray(greq.prompt_tokens, np.int32)
         plen = len(prompt)
@@ -710,6 +1225,16 @@ class InferenceEngine:
         for r, req in enumerate(members):
             temps[r] = req.temperature
             maxnew[r] = max(1, req.max_new_tokens)
+        for r in range(k):
+            self._slot_len[slot_ids[r]] = plen
+        if self.paged:
+            for r in range(k):
+                if r:
+                    self.allocator.incref(shared)
+                self._slot_blocks[slot_ids[r]] = \
+                    shared + ([tails[r]] if tails else [])
+            if tails:
+                self.stats.cow_forks += k
         toks, lps, st = self._group_prefill_exec(tokens, plens, temps)
         toks_h, lps_h = jax.device_get((toks, lps))
 
@@ -735,15 +1260,29 @@ class InferenceEngine:
             else:
                 self.slots[slot_ids[r]] = req
                 row_active[r] = True
-        self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
-                                row_active)
+        if self.paged:
+            coords = self._build_fork_coords(slot_idx, S_b, k, shared, tails)
+            self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
+                                    row_active, paged_coords=coords)
+            # first-token finishes with no session to park for release
+            # their blocks right after the scatter wrote them (write then
+            # free keeps dispatch order sound: a later admission can only
+            # recycle the block after this scatter is enqueued)
+            for r, req in enumerate(members):
+                if req.finished and self.slots[slot_ids[r]] is None \
+                        and self._slot_session[slot_ids[r]] is None:
+                    self._free_slot_blocks(slot_ids[r])
+        else:
+            self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
+                                    row_active)
         self.stats.group_prefills += 1
         self.stats.group_fork_requests += k
         self.stats.prefill_tokens += plen               # prefilled ONCE
         self.stats.group_prefill_tokens_saved += (k - 1) * plen
 
     def _admit_batch(self, reqs: List[Request], prompts: List[np.ndarray],
-                     slot_ids: List[int]) -> None:
+                     slot_ids: List[int],
+                     block_lists: Optional[List[List[int]]] = None) -> None:
         n = len(reqs)
         lens = [len(p) for p in prompts]
         maxlen = max(lens)
@@ -764,6 +1303,11 @@ class InferenceEngine:
             plens[r] = len(p)
             temps[r] = req.temperature
             maxnew[r] = max(1, req.max_new_tokens)
+            self._slot_len[slot_ids[r]] = len(p)
+            if self.paged:
+                assert not self._slot_blocks[slot_ids[r]], \
+                    f"slot {slot_ids[r]} re-admitted while holding blocks"
+                self._slot_blocks[slot_ids[r]] = block_lists[r]
         toks, lps, st = self._prefill_exec(tokens, plens, temps)
         toks_h, lps_h = jax.device_get((toks, lps))
 
@@ -787,7 +1331,20 @@ class InferenceEngine:
             else:
                 self.slots[slot_ids[r]] = req
                 row_active[r] = True
-        self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
+        if self.paged:
+            coords = self._build_scatter_coords(slot_idx, S_b,
+                                                np.zeros((R,), np.int32))
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
+                               row_active, paged_coords=coords)
+            # first-token finishes with no session to park for: reclaim
+            # (after the scatter — write-then-free keeps dispatch order
+            # sound for any admission that recycles the block)
+            for r, req in enumerate(reqs):
+                if req.finished and self.slots[slot_ids[r]] is None \
+                        and self._slot_session[slot_ids[r]] is None:
+                    self._free_slot_blocks(slot_ids[r])
+        else:
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
         self.stats.prefills += 1
         self.stats.prefill_requests += n
         self.stats.prefill_tokens += int(sum(lens))
@@ -818,6 +1375,7 @@ class InferenceEngine:
             gather_idx[r] = sess.slot
             slot_idx[r] = sess.slot
             sess.last_use = self._next_use()
+            self._slot_len[sess.slot] = int(start_pos[r] + ext_lens[r])
         toks, lps, st = self._extend_exec(gather_idx, tokens, ext_lens,
                                           start_pos, temps)
         toks_h, lps_h = jax.device_get((toks, lps))
@@ -835,7 +1393,12 @@ class InferenceEngine:
             # a full re-prefill would have re-processed the whole cached
             # prefix on top of the block
             self.stats.prefill_tokens_saved += int(start_pos[r])
-        self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
+        if self.paged:
+            coords = self._build_scatter_coords(slot_idx, S_b, start_pos)
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
+                               row_active, paged_coords=coords)
+        else:
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
         self.stats.extends += 1
         self.stats.extend_requests += n
         self.stats.prefill_tokens += int(ext_lens[:n].sum())
@@ -865,31 +1428,44 @@ class InferenceEngine:
     # ----------------------------------------------------------------- step
 
     def step(self) -> int:
-        """One engine iteration: admit pending, decode one token for every
-        occupied slot in a single fused dispatch. Returns tokens generated
-        by the decode tick."""
+        """One engine iteration: admit pending, ensure every active slot's
+        next K/V write has an exclusively-owned block (paged), decode one
+        token for every occupied slot in a single fused dispatch. Returns
+        tokens generated by the decode tick."""
         self._admit()
+        self._overflow_full_slots()
+        self._ensure_decode_blocks()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         self.stats.occupancy_trace.append(len(active))
         if not active:
+            self._sync_kv_stats()
             return 0
+        self._flush_table_updates()
         toks_h, lps_h, fin_h = self._decode_exec()
         for i in active:
             req = self.slots[i]
+            self._slot_len[i] += 1          # this tick wrote K/V at wpos
             self._record(req, int(toks_h[i]), float(lps_h[i]), bool(fin_h[i]))
             if req.finished:
                 self._finish(req)
                 self.slots[i] = None
                 sess = self._session_of(req)
                 if sess is None or sess.slot != i:
-                    # no live session to park for -> free the slot
+                    # no live session to park for -> free the slot (and,
+                    # when paged, return its KV blocks to the pool)
                     self._slot_session[i] = None
+                    if self.paged:
+                        self._free_slot_blocks(i)
         self.stats.decode_steps += 1
+        self._sync_kv_stats()
         return len(active)
 
     def run_until_idle(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
             if self.idle:
+                # engine teardown gate shared by every test/benchmark
+                # drain: no block may leak past the work that owned it
+                self.assert_kv_consistent()
                 return
             self.step()
         raise RuntimeError("engine did not drain")

@@ -35,6 +35,12 @@ from .engine import InferenceEngine
 class HostReferenceEngine(InferenceEngine):
     """Pre-fusion host-side sampling engine (parity oracle / baseline)."""
 
+    def _supports_paging(self) -> bool:
+        # the reference stays *unpaged* on dense per-slot rows: it is the
+        # oracle the paged engine's block-table reads, COW forks and
+        # scatter paths must stream-match byte-for-byte
+        return False
+
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         cfg, pcfg, max_seq = self.cfg, self.pcfg, self.max_seq

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import grouped_matmul as _gmm
+from . import paged_attention as _pa
 from . import ssd_scan as _ssd
 
 
@@ -28,6 +29,12 @@ def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
                                interpret=not _on_tpu())
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *, window=0):
+    """One-token decode attention through a block table (paged KV cache)."""
+    return _pa.paged_attention(q, k_pool, v_pool, block_tables, pos,
+                               window=window, interpret=not _on_tpu())
 
 
 def grouped_matmul(x, w, group_sizes, *, block_c=128, block_f=128,

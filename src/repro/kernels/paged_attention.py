@@ -1,0 +1,139 @@
+"""Pallas TPU paged decode attention (vLLM-style block-table KV reads).
+
+The serving engine keeps K/V in a shared block pool
+``[num_blocks, block_size, kv_heads, head_dim]``; each decode slot owns a
+*block table* mapping its logical block index to a physical pool block.
+This kernel computes one-token decode attention reading K/V **through the
+block table**, so the dense per-slot ``[B, max_seq, ...]`` cache never
+exists — neither persistently nor as a gather temporary (the XLA fallback
+in ``repro.models.attention.attention_paged_decode`` materializes exactly
+that temporary, which is why the kernel is the TPU hot path).
+
+Grid layout: ``(batch, max_blocks_per_seq)`` — the logical-block dimension
+is innermost, so per batch row it executes sequentially and the running
+online-softmax state (m, l, acc) lives in VMEM scratch across those grid
+steps, exactly like the flash kernel. The *physical* K/V block for grid
+step ``(b, i)`` is selected in the BlockSpec index map from the
+scalar-prefetched block table (``pltpu.PrefetchScalarGridSpec``): the DMA
+for block ``tables[b, i]`` is issued before the kernel body runs. GQA is
+handled in-kernel by reshaping Q to ``[Hkv, group, hd]`` — repeated KV
+heads are never materialized.
+
+Logical blocks past the row's position (``i*block_size > pos[b]``) are
+skipped with ``pl.when`` (no MXU work), so decode FLOPs scale with the
+tokens actually resident, not with ``max_blocks_per_seq``. Sliding-window
+masking additionally skips blocks entirely below the window.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref,
+                  *, scale, window, block_size, num_logical_blocks,
+                  kv_heads, group):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+    k_start = i * block_size
+    # a logical block is relevant iff it intersects the valid key range
+    # [max(0, pos - window + 1), pos]
+    relevant = k_start <= pos
+    if window > 0:
+        relevant &= (k_start + block_size - 1) > (pos - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # [Hq, hd]
+        qg = q.reshape(kv_heads, group, q.shape[-1])      # [Hkv, G, hd]
+        k = k_ref[0].astype(jnp.float32)                  # [bs, Hkv, hd]
+        v = v_ref[0].astype(jnp.float32)                  # [bs, Hkv, hd]
+        s = jnp.einsum("hgd,khd->hgk", qg, k) * scale     # [Hkv, G, bs]
+        k_idx = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        mask = k_idx <= pos
+        if window > 0:
+            mask &= k_idx > pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # [Hkv, G]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])                 # [Hkv, G, bs]
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("hgk,khd->hgd", p, v)             # [Hkv, G, hd]
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(i == num_logical_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        out = acc_ref[...] / l[..., None]                 # [Hkv, G, hd]
+        o_ref[0] = out.reshape(kv_heads * group,
+                               out.shape[-1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *, window=0,
+                    interpret=True):
+    """One-token decode attention through a block table.
+
+    q: [B, 1, Hq, hd]; k_pool/v_pool: [num_blocks, block_size, Hkv, hd];
+    block_tables: [B, max_blocks] int32 physical block ids (entries past a
+    row's allocation may be arbitrary valid ids — they are masked);
+    pos: [B] int32 position of the query token (its K/V must already be
+    written at ``(tables[b, pos//bs], pos % bs)``). Returns [B, 1, Hq, hd].
+    """
+    B, _, Hq, hd = q.shape
+    num_blocks, bs, Hkv, _ = k_pool.shape
+    group = Hq // Hkv
+    max_blocks = block_tables.shape[1]
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, window=window, block_size=bs,
+        num_logical_blocks=max_blocks, kv_heads=Hkv, group=group)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # block_tables, pos
+        grid=(B, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, Hq, hd), lambda b, i, t, p: (b, 0, 0)),
+            # physical block selected from the prefetched table
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, i, t, p: (t[b, i], 0, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd),
+                         lambda b, i, t, p: (t[b, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, hd), lambda b, i, t, p: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, group), jnp.float32),
+            pltpu.VMEM((Hkv, group), jnp.float32),
+            pltpu.VMEM((Hkv, group, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos.astype(jnp.int32),
+      q[:, 0], k_pool, v_pool)
+    return out[:, None]

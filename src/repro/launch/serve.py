@@ -71,6 +71,13 @@ def main():
               f"{stats['prefill_tokens_saved']} prefill tokens saved, "
               f"{stats['session_evictions']} evictions / "
               f"{stats['session_fallbacks']} fallbacks)")
+    if stats["kv_blocks_total"]:
+        print(f"paged KV: peak {stats['kv_blocks_peak']}"
+              f"/{stats['kv_blocks_total']} blocks "
+              f"({stats['kv_bytes']} pool bytes, "
+              f"{stats['cow_forks']} COW copies, "
+              f"{stats['blocks_freed_on_evict']} blocks evicted, "
+              f"{stats['kv_blocks_in_use']} still in use)")
     print(f"mean slot occupancy: {np.mean(occ):.2f}/{args.slots} "
           f"(continuous batching keeps slots saturated)")
     for r in done[:3]:

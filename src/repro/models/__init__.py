@@ -2,14 +2,17 @@
 from .model import (DEFAULT_PARALLEL, chunked_token_nll, embed_inputs, encode,
                     extend, extend_sample, fork_decode_rows, forward,
                     forward_hidden, head_weights, init_decode_state,
-                    init_params, lm_loss, prefill, prefill_fork_sample,
-                    prefill_sample, sample_logits, sample_step, serve_step,
-                    token_logprobs)
+                    init_paged_state, init_params, lm_loss, paged_gather_rows,
+                    paged_sample_step, paged_serve_step, paged_write_rows,
+                    prefill, prefill_fork_sample, prefill_sample,
+                    sample_logits, sample_step, serve_step, token_logprobs)
 
 __all__ = [
     "DEFAULT_PARALLEL", "chunked_token_nll", "embed_inputs", "encode",
     "extend", "extend_sample", "fork_decode_rows", "forward",
-    "forward_hidden", "head_weights", "init_decode_state", "init_params",
-    "lm_loss", "prefill", "prefill_fork_sample", "prefill_sample",
-    "sample_logits", "sample_step", "serve_step", "token_logprobs",
+    "forward_hidden", "head_weights", "init_decode_state",
+    "init_paged_state", "init_params", "lm_loss", "paged_gather_rows",
+    "paged_sample_step", "paged_serve_step", "paged_write_rows", "prefill",
+    "prefill_fork_sample", "prefill_sample", "sample_logits", "sample_step",
+    "serve_step", "token_logprobs",
 ]

@@ -264,6 +264,69 @@ def attention_decode(q, k_cache, v_cache, pos, *, window=0, scale=None):
     return out.reshape(B, 1, Hq, hd).astype(q.dtype)
 
 
+def attention_paged_decode(q, k_pool, v_pool, block_tables, pos, *,
+                           window=0, scale=None):
+    """One-token decode against a *paged* KV cache — XLA gather fallback.
+
+    q: [B, 1, Hq, hd]; pools: [num_blocks, block_size, Hkv, hd];
+    block_tables: [B, max_blocks] physical block ids per logical block
+    (entries past a row's allocation may be any valid id — every position
+    they cover is masked by ``k_idx <= pos``); pos: [B].
+
+    Linearizes each row's blocks with one gather —
+    ``pool[table] -> [B, max_blocks·bs, Hkv, hd]`` — and defers to the
+    dense ``attention_decode``. When ``max_blocks·bs`` equals the dense
+    engine's ``max_seq`` the result is *bitwise* identical to the dense
+    path (same shapes, same values at unmasked positions, exact-zero
+    contributions from masked garbage), which is what the paged engine's
+    stream-parity contract rests on. The Pallas kernel
+    (``repro.kernels.paged_attention``) computes the same thing without
+    ever materializing the gathered temporary.
+    """
+    B = q.shape[0]
+    nb, bs, Hkv, hd = k_pool.shape
+    S = block_tables.shape[1] * bs
+    k = k_pool[block_tables].reshape(B, S, Hkv, hd)
+    v = v_pool[block_tables].reshape(B, S, Hkv, hd)
+    return attention_decode(q, k, v, pos, window=window, scale=scale)
+
+
+def attn_paged_decode_apply(params, x, k_pool, v_pool, block_tables, pos,
+                            write_block, write_off, cfg, *,
+                            use_pallas=False):
+    """One-token decode attention over the shared block pool.
+
+    The paged sibling of ``attn_decode_apply``: inserts the new token's
+    K/V at physical ``(write_block[b], write_off[b])`` — the caller maps
+    ``pos`` through the block table and masks inactive rows to an
+    out-of-bounds block id, so their writes drop instead of corrupting
+    blocks owned (or shared, post-fork) by other rows — then attends
+    through the block table. Returns (out [B,1,d], k_pool, v_pool).
+
+    Ring (window-sized) caches are excluded by the engine's paging gate:
+    the linear block table is the only slot→position mapping here, and
+    sliding windows are handled by masking, not wraparound.
+    """
+    B = x.shape[0]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    q, k, v = _project_qkv(params, x, pos[:, None], cfg)
+    k_pool = k_pool.at[write_block, write_off].set(
+        k[:, 0].astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[write_block, write_off].set(
+        v[:, 0].astype(v_pool.dtype), mode="drop")
+    if use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(q, k_pool, v_pool, block_tables, pos,
+                                   window=cfg.sliding_window)
+    else:
+        out = attention_paged_decode(q, k_pool, v_pool, block_tables, pos,
+                                     window=cfg.sliding_window)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return out, k_pool, v_pool
+
+
 # ---------------------------------------------------------------------------
 # Attention block (projections + path dispatch)
 # ---------------------------------------------------------------------------

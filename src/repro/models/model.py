@@ -24,7 +24,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from .attention import (attn_apply, attn_decode_apply, attn_extend_apply,
-                        attn_init, cross_attn_apply, cross_attn_kv)
+                        attn_init, attn_paged_decode_apply, cross_attn_apply,
+                        cross_attn_kv)
 from .layers import (embed_init, mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
                      sinusoidal_positions)
 from .moe import moe_apply, moe_decode_apply, moe_init
@@ -686,6 +687,174 @@ def prefill_fork_sample(params, batch, temps, rng, cfg: ModelConfig,
     logits_b = jnp.broadcast_to(logits[0], (R, logits.shape[-1]))
     toks, lps = sample_logits(k, logits_b, temps)
     return toks, lps, state, rng
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-pool decode state — the vLLM memory architecture)
+# ---------------------------------------------------------------------------
+
+
+_PAGED_POOL_KEYS = ("k", "v")
+
+
+def init_paged_state(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, blocks_per_row: int, dtype=None):
+    """Block-pool decode state: one shared K/V pool plus per-row block
+    tables, instead of a dense ``[L, batch, max_seq, ...]`` row per slot.
+
+    ``k``/``v`` are ``[L, num_blocks, block_size, kv_heads, hd]`` pools;
+    ``block_tables`` ``[batch, blocks_per_row]`` maps each row's logical
+    block index to a physical pool block (the allocator on the host is the
+    source of truth; unallocated entries hold 0 — a valid id whose reads
+    are always masked by ``k_idx <= pos``). Cross-attention caches stay
+    dense per-row: they are fixed ``encoder_seq_len`` length, so paging
+    buys nothing. Attention-only families (no recurrent state) — the
+    engine's paging gate enforces this.
+    """
+    assert cfg.uses_attention and cfg.ssm is None, \
+        "paged state requires an attention-only family"
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    L, hd = cfg.num_layers, cfg.resolved_head_dim
+    pool_shape = (L, num_blocks, block_size, cfg.num_kv_heads, hd)
+    state = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "k": jnp.zeros(pool_shape, dtype),
+        "v": jnp.zeros(pool_shape, dtype),
+        "block_tables": jnp.zeros((batch, blocks_per_row), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        T = cfg.encoder_seq_len
+        state["cross_k"] = jnp.zeros((L, batch, T, cfg.num_kv_heads, hd),
+                                     dtype)
+        state["cross_v"] = jnp.zeros((L, batch, T, cfg.num_kv_heads, hd),
+                                     dtype)
+    return state
+
+
+def paged_gather_rows(state, gather_idx):
+    """Linearize ``gather_idx`` rows of a paged state into dense decode
+    rows (caches ``[L, R, blocks_per_row·bs, ...]``) — the bridge that
+    lets the continuation ``extend`` path run its *unchanged* dense math
+    against a paged cache. Entries past a row's allocation gather block 0
+    garbage; the extend mask (``k_idx <= q_pos``) never reads it."""
+    table = state["block_tables"][gather_idx]          # [R, blocks_per_row]
+    R, mb = table.shape
+    rows = {"pos": state["pos"][gather_idx]}
+    for key in _PAGED_POOL_KEYS:
+        g = state[key][:, table]                       # [L, R, mb, bs, H, hd]
+        rows[key] = g.reshape(g.shape[0], R, mb * g.shape[3], *g.shape[4:])
+    for key in ("cross_k", "cross_v"):
+        if key in state:
+            rows[key] = state[key][:, gather_idx]
+    return rows
+
+
+def paged_write_rows(state, rows, slot_idx, src_pos, blk_pos, off_pos,
+                     new_tables):
+    """Scatter dense decode rows (a prefill/extend/fork product) into the
+    block pool. ``src_pos`` [R, S] names the row positions to copy;
+    ``blk_pos``/``off_pos`` [R, S] their physical destination (block id,
+    in-block offset) — an out-of-bounds block id drops the write, which
+    is how padded bucket rows, unallocated tails, and COW-shared blocks a
+    row must not touch are all expressed. ``new_tables`` [R, blocks_per
+    _row] replaces each admitted row's device block table (the host
+    allocator's view). Returns the updated state."""
+    new = dict(state)
+    new["pos"] = state["pos"].at[slot_idx].set(
+        rows["pos"].astype(state["pos"].dtype), mode="drop")
+    new["block_tables"] = state["block_tables"].at[slot_idx].set(
+        new_tables.astype(state["block_tables"].dtype), mode="drop")
+    idx = src_pos[None, :, :, None, None]
+    for key in _PAGED_POOL_KEYS:
+        vals = jnp.take_along_axis(rows[key], idx, axis=2)  # [L, R, S, H, hd]
+        new[key] = state[key].at[:, blk_pos, off_pos].set(
+            vals.astype(state[key].dtype), mode="drop")
+    for key in ("cross_k", "cross_v"):
+        if key in state:
+            new[key] = state[key].at[:, slot_idx].set(
+                rows[key].astype(state[key].dtype), mode="drop")
+    return new
+
+
+def _decoder_layer_paged_decode(lp, x, pos, caches, table, write_block,
+                                write_off, cfg, pcfg):
+    """One layer, one token, against the block pool. The paged sibling of
+    ``_decoder_layer_decode`` for attention-only families."""
+    new = dict(caches)
+    h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
+    attn_out, kp, vp = attn_paged_decode_apply(
+        lp["attn"], h, caches["k"], caches["v"], table, pos,
+        write_block, write_off, cfg, use_pallas=pcfg.use_pallas)
+    new["k"], new["v"] = kp, vp
+    x = x + attn_out
+    if cfg.is_encoder_decoder:
+        h = rmsnorm(x, lp["ln_cross"], cfg.rms_eps)
+        x = x + cross_attn_apply(lp["cross"], h, caches["cross_k"],
+                                 caches["cross_v"], cfg)
+    if cfg.moe is not None:
+        h = rmsnorm(x, lp["ln2"], cfg.rms_eps)
+        x = x + moe_decode_apply(lp["moe"], h, cfg)
+    elif cfg.d_ff:
+        x = x + mlp_apply(lp["mlp"], rmsnorm(x, lp["ln2"], cfg.rms_eps))
+    return x, new
+
+
+def paged_serve_step(params, state, token, active, cfg: ModelConfig,
+                     pcfg=DEFAULT_PARALLEL):
+    """One decode step against the paged state. token/active: [B].
+
+    ``active`` masks the K/V write: inactive rows (empty or parked slots)
+    route their write to an out-of-bounds block id so they can never
+    corrupt pool blocks owned — or, after a copy-on-write group fork,
+    *shared* — by live rows. (The dense path tolerates parked-row drift
+    writes because each row owns its cache exclusively; a shared pool
+    does not have that luxury.) ``pos`` still advances for every row,
+    mirroring the dense drift semantics."""
+    assert cfg.ssm is None, "paged decode requires an attention-only family"
+    B = token.shape[0]
+    pos = state["pos"]
+    table = state["block_tables"]
+    nb, bs = state["k"].shape[1], state["k"].shape[2]
+    blk_log = jnp.minimum(pos // bs, table.shape[1] - 1)
+    # rows past the table's capacity drop their write too (the engine
+    # overflow-finishes them before this can happen; the mask keeps a
+    # clamped write from ever corrupting the last — possibly shared —
+    # block even if a caller drives the state directly)
+    writable = active & (pos < table.shape[1] * bs)
+    write_block = jnp.where(writable, table[jnp.arange(B), blk_log], nb)
+    write_off = pos % bs
+    x = params["embed"][token][:, None, :]
+    if cfg.rope_theta == 0.0:
+        x = x + sinusoidal_positions(pos[:, None], cfg.d_model).astype(x.dtype)
+
+    per_layer = {k: state[k] for k in _CACHE_KEYS if k in state}
+
+    def body(x, inp):
+        lp, caches = inp
+        x, new = _decoder_layer_paged_decode(
+            lp, x, pos, caches, table, write_block, write_off, cfg, pcfg)
+        return x, new
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], per_layer))
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = (x[:, 0] @ head_weights(params, cfg)).astype(jnp.float32)
+    new_state = dict(state)
+    new_state.update(new_caches)
+    new_state["pos"] = pos + 1
+    return logits, new_state
+
+
+def paged_sample_step(params, state, token, active, temps, rng,
+                      cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Fused paged decode tick: ``paged_serve_step`` + on-device sampling.
+    Same one-split-per-tick RNG discipline as ``sample_step`` — which is
+    what keeps a paged engine and the unpaged reference oracle on
+    byte-identical token/logprob streams."""
+    rng, k = jax.random.split(rng)
+    logits, new_state = paged_serve_step(params, state, token, active, cfg,
+                                         pcfg)
+    toks, lps = sample_logits(k, logits, temps)
+    return toks, lps, new_state, rng
 
 
 def extend_sample(params, state, batch, start_pos, temps, rng,

@@ -1,0 +1,342 @@
+"""Paged KV cache: the refcounting block allocator + engine integration.
+
+The block pool replaces the dense per-slot cache as the engine's KV
+memory: admission claims ``ceil(tokens/block_size)`` blocks, group forks
+*share* the prompt's full blocks copy-on-write, parked sessions hold only
+the blocks they filled, and every early-exit path (finish, overflow,
+eviction, ``close_session``) must return its references. Stream parity
+with the unpaged ``HostReferenceEngine`` is covered by the existing
+engine/session/group suites (which now run the fused engine paged); this
+file tests the allocator semantics themselves.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import TOKENIZER
+from repro.inference import GroupRequest, InferenceEngine, Request
+from repro.inference.engine import BlockAllocator
+from repro.models import init_params
+
+BS = 8  # block size used throughout (divides every max_seq below)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
+                              vocab_size=TOKENIZER.vocab_size, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _req(i, prompt, max_new=4, sid=None):
+    return Request(request_id=i, problem_id=f"p{i}",
+                   prompt_tokens=np.asarray(prompt, np.int32),
+                   max_new_tokens=max_new, session_id=sid)
+
+
+def _prompt(n, seed=0):
+    return ((np.arange(n, dtype=np.int32) * (seed + 3)) % 50) + 10
+
+
+# ---------------------------------------------------------------- allocator
+
+
+def test_allocator_refcounts():
+    a = BlockAllocator(8)
+    ids = a.alloc(3)
+    assert ids is not None and a.in_use == 3
+    a.incref(ids)                      # shared by a second owner
+    assert a.free(ids) == 0            # first owner drops: nothing freed
+    assert a.in_use == 3
+    assert a.free(ids) == 3            # last owner drops: all freed
+    assert a.in_use == 0 and a.free_blocks == 8
+    assert a.alloc(9) is None          # all-or-nothing
+    assert a.peak == 3
+
+
+def test_allocator_double_free_asserts():
+    a = BlockAllocator(4)
+    ids = a.alloc(2)
+    a.free(ids)
+    with pytest.raises(AssertionError):
+        a.free(ids)
+
+
+# ------------------------------------------------------- COW fork + diverge
+
+
+def test_cow_fork_shares_prompt_blocks_then_diverges(setup):
+    """A group fork must leave the prompt's full blocks shared (refcount =
+    G) with one private tail block per member — and the members' decode
+    writes must never corrupt the shared prefix: every member stream must
+    match the per-member-admission baseline byte for byte."""
+    cfg, params = setup
+    plen = 20                                   # 2 full blocks + tail of 4
+    G = 4
+    prompt = _prompt(plen)
+
+    def run(use_group):
+        eng = InferenceEngine(params, cfg, num_slots=G, max_seq=64, seed=7,
+                              kv_block_size=BS)
+        members = [_req(i, prompt, max_new=6) for i in range(G)]
+        if use_group:
+            eng.submit_group(GroupRequest(0, "p0", prompt, members=members))
+            eng._admit()                        # fork, don't decode yet
+            shared_refs = [eng.allocator.refcount(b)
+                           for b in eng._slot_blocks[0][:plen // BS]]
+            tail_refs = [eng.allocator.refcount(eng._slot_blocks[s][-1])
+                         for s in range(G)]
+            assert shared_refs == [G] * (plen // BS)
+            assert tail_refs == [1] * G
+            # unique in-use blocks: shared fulls once + G private tails
+            assert eng.allocator.in_use == plen // BS + G
+        else:
+            for r in members:
+                eng.submit(r)
+        eng.run_until_idle()
+        done = {r.request_id: r for r in eng.drain_completed()}
+        return [(tuple(done[i].completion), tuple(done[i].logprobs))
+                for i in sorted(done)], eng
+
+    forked, eng_f = run(True)
+    baseline, _ = run(False)
+    assert forked == baseline
+    assert len({c for c, _ in forked}) > 1, "members should diverge"
+    assert eng_f.stats.cow_forks == G          # one private tail per member
+    assert eng_f.allocator.in_use == 0         # everything reclaimed
+
+
+def test_cow_fork_block_aligned_prompt_shares_everything(setup):
+    """Prompt length a multiple of block_size: no tail to privatize at
+    fork time — the first decode write crosses into a fresh block each
+    member allocates on demand."""
+    cfg, params = setup
+    G, plen = 3, 16                             # exactly 2 blocks
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=64, seed=3,
+                          kv_block_size=BS)
+    eng.submit_group(GroupRequest(0, "p0", _prompt(plen),
+                                  members=[_req(i, _prompt(plen), max_new=3)
+                                           for i in range(G)]))
+    eng._admit()
+    assert eng.stats.cow_forks == 0
+    assert eng.allocator.in_use == plen // BS   # all shared, zero copies
+    eng.run_until_idle()
+    assert eng.allocator.in_use == 0
+
+
+# -------------------------------------------------- refcount drop on finish
+
+
+def test_refcount_drops_as_members_finish(setup):
+    """Members finishing at different times must decref the shared blocks
+    one by one; the blocks free only when the LAST member drops them."""
+    cfg, params = setup
+    G, plen = 3, 20
+    eng = InferenceEngine(params, cfg, num_slots=G, max_seq=64, seed=1,
+                          kv_block_size=BS)
+    members = [_req(i, _prompt(plen), max_new=2 + 4 * i) for i in range(G)]
+    eng.submit_group(GroupRequest(0, "p0", _prompt(plen), members=members))
+    eng._admit()
+    shared = list(eng._slot_blocks[0][:plen // BS])
+    assert all(eng.allocator.refcount(b) == G for b in shared)
+    seen_refs = set()
+    while not eng.idle:
+        eng.step()
+        seen_refs.add(tuple(eng.allocator.refcount(b) for b in shared))
+    # refcounts stepped down as each member finished, and ended at zero
+    assert any(r and max(r) < G for r in seen_refs)
+    assert all(eng.allocator.refcount(b) == 0 for b in shared)
+    assert eng.allocator.in_use == 0
+
+
+# ------------------------------------------------- exhaustion backpressure
+
+
+def test_allocator_exhaustion_backpressure(setup):
+    """With slots for everyone but blocks for one request at a time, the
+    queue must WAIT (decode drains the pool) rather than crash — and all
+    requests must still complete."""
+    cfg, params = setup
+    # 5 blocks of 8 = 40 token capacity; each request needs 4 blocks
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=64, seed=5,
+                          kv_block_size=BS, num_kv_blocks=5)
+    for i in range(3):
+        eng.submit(_req(i, _prompt(28, seed=i), max_new=4))
+    eng.run_until_idle()
+    done = eng.drain_completed()
+    assert len(done) == 3
+    assert all(r.finish_reason in ("eos", "length") for r in done)
+    # never more than one resident request's worth of blocks
+    assert eng.stats.kv_blocks_peak <= 5
+    assert eng.allocator.in_use == 0
+    # occupancy never exceeded what the pool could hold (1 request)
+    assert max(eng.stats.occupancy_trace) == 1
+
+
+def test_pool_impossible_prompt_overflows_gracefully(setup):
+    """A prompt needing more blocks than the whole pool can never be
+    admitted — it must finish as an overflow instead of deadlocking the
+    queue behind it."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=64, seed=2,
+                          kv_block_size=BS, num_kv_blocks=3)
+    eng.submit(_req(0, _prompt(30), max_new=4))       # needs 4 of 3 blocks
+    eng.submit(_req(1, _prompt(10, seed=1), max_new=3))
+    eng.run_until_idle()
+    done = {r.request_id: r for r in eng.drain_completed()}
+    assert done[0].finish_reason == "overflow" and not done[0].completion
+    assert done[1].finish_reason in ("eos", "length")
+    assert eng.allocator.in_use == 0
+
+
+def test_decode_growth_exhaustion_finishes_overflow(setup):
+    """A request whose decode growth exhausts the pool mid-stream (nothing
+    parked left to evict) finishes gracefully with reason "overflow" and
+    returns every block."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=64, seed=4,
+                          kv_block_size=BS, num_kv_blocks=2)
+    # prompt fills block 0 partially; generation must cross into block 2
+    # eventually -> allocator runs dry at the third block
+    eng.submit(_req(0, _prompt(6), max_new=30))
+    eng.run_until_idle()
+    (r,) = eng.drain_completed()
+    assert r.finish_reason in ("overflow", "eos")
+    if r.finish_reason == "overflow":
+        assert len(r.completion) >= 1             # banked what it generated
+    assert eng.allocator.in_use == 0
+
+
+# -------------------------------------------------- eviction / reclamation
+
+
+def test_eviction_frees_exactly_the_parked_sessions_blocks(setup):
+    """LRU-evicting a parked session must return precisely the blocks that
+    session filled — no more (other parked sessions keep theirs), no
+    fewer (leak)."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=64, seed=9,
+                          kv_block_size=BS)
+    for sid, plen in ((0, 12), (1, 20)):
+        eng.open_session(sid)
+        eng.submit(_req(sid, _prompt(plen, seed=sid), max_new=3, sid=sid))
+        eng.run_until_idle()
+    eng.drain_completed()
+    held = {sid: len(eng._slot_blocks[eng.sessions[sid].slot])
+            for sid in (0, 1)}
+    in_use_before = eng.allocator.in_use
+    assert in_use_before == sum(held.values())
+    # two fresh prompts need both slots -> both sessions evict (LRU first)
+    before_evicted = eng.stats.blocks_freed_on_evict
+    eng.submit(_req(100, _prompt(10, seed=3), max_new=3))
+    eng.step()
+    assert eng.stats.session_evictions == 1
+    assert eng.stats.blocks_freed_on_evict - before_evicted == held[0]
+    assert eng.sessions[0].slot is None and eng.sessions[1].slot is not None
+    eng.run_until_idle()
+    eng.close_session(0)
+    eng.close_session(1)
+    assert eng.allocator.in_use == 0
+
+
+def test_close_session_returns_parked_blocks(setup):
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=64, seed=8,
+                          kv_block_size=BS)
+    eng.open_session(0)
+    eng.submit(_req(0, _prompt(12), max_new=3, sid=0))
+    eng.run_until_idle()
+    eng.drain_completed()
+    assert eng.allocator.in_use > 0               # parked residency
+    eng.close_session(0)
+    assert eng.allocator.in_use == 0
+
+
+def test_parked_session_capacity_exceeds_slot_count(setup):
+    """The capacity win: with the pool sized to the dense budget of
+    ``num_slots`` rows, short parked sessions are bounded by *blocks*,
+    not rows — more sessions than a dense engine could keep resident can
+    park simultaneously, and their second turns all extend (no
+    fallbacks)."""
+    cfg, params = setup
+    # 8 slots x 64 tokens of pool, but each conversation uses ~2 blocks
+    eng = InferenceEngine(params, cfg, num_slots=8, max_seq=64, seed=6,
+                          kv_block_size=BS)
+    n_sessions = 8
+    for sid in range(n_sessions):
+        eng.open_session(sid)
+        eng.submit(_req(sid, _prompt(9, seed=sid), max_new=3, sid=sid))
+    eng.run_until_idle()
+    eng.drain_completed()
+    parked = sum(1 for s in eng.sessions.values() if s.slot is not None)
+    assert parked == n_sessions
+    # dense residency cost would be n_sessions * max_seq tokens; paged
+    # residency is only the filled blocks
+    assert eng.allocator.in_use * BS <= n_sessions * 2 * BS
+    for sid in range(n_sessions):
+        eng.submit(_req(100 + sid, _prompt(5, seed=sid + 1), max_new=3,
+                        sid=sid))
+    eng.run_until_idle()
+    assert eng.stats.extend_requests == n_sessions   # all turns extended
+    assert eng.stats.session_fallbacks == 0
+    for sid in range(n_sessions):
+        eng.close_session(sid)
+    assert eng.allocator.in_use == 0
+
+
+def test_decode_to_cache_edge_overflows_in_parity(setup):
+    """Regression: a request whose generation reaches ``max_seq`` must
+    overflow-finish BEFORE the write would clamp — identically on the
+    paged engine and the dense reference (the two clamp targets differ,
+    so letting the write happen silently corrupts the cache AND breaks
+    stream parity)."""
+    from repro.inference import HostReferenceEngine
+    cfg, params = setup
+
+    def run(cls):
+        eng = cls(params, cfg, num_slots=2, max_seq=32, seed=21,
+                  kv_block_size=BS)
+        eng.submit(_req(0, _prompt(28), max_new=10))
+        eng.submit(_req(1, _prompt(5, seed=2), max_new=4))
+        eng.run_until_idle()
+        done = {r.request_id: r for r in eng.drain_completed()}
+        return [(i, tuple(done[i].completion), tuple(done[i].logprobs),
+                 done[i].finish_reason) for i in sorted(done)]
+
+    paged = run(InferenceEngine)
+    ref = run(HostReferenceEngine)
+    assert paged == ref
+    # prefill token + 4 decode writes (pos 28..31), then the row is full
+    assert paged[0][3] == "overflow" and len(paged[0][1]) == 5
+
+
+def test_group_overflow_and_unpaged_family_gating(setup):
+    """Overflowing group prompts allocate nothing; SSM families keep the
+    dense path (paging gated off) and still drain cleanly."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=32, seed=0,
+                          kv_block_size=BS)
+    eng.submit_group(GroupRequest(0, "p0", _prompt(40),
+                                  members=[_req(i, _prompt(40))
+                                           for i in range(2)]))
+    eng.run_until_idle()
+    done = eng.drain_completed()
+    assert [r.finish_reason for r in done] == ["overflow", "overflow"]
+    assert eng.allocator.in_use == 0
+
+    ssm_cfg = dataclasses.replace(get_config("mamba2-370m:reduced"),
+                                  vocab_size=TOKENIZER.vocab_size,
+                                  num_layers=2)
+    ssm_params = init_params(jax.random.PRNGKey(0), ssm_cfg,
+                             dtype=jnp.float32)
+    ssm_eng = InferenceEngine(ssm_params, ssm_cfg, num_slots=2, max_seq=32,
+                              seed=0)
+    assert not ssm_eng.paged and ssm_eng.allocator is None
+    ssm_eng.submit(_req(0, _prompt(6), max_new=3))
+    ssm_eng.run_until_idle()
+    assert len(ssm_eng.drain_completed()) == 1
