@@ -36,6 +36,7 @@ class InferencePool:
     def __init__(self, engines: Sequence[InferenceEngine]):
         assert engines, "need at least one engine"
         self.engines = list(engines)
+        self._policy_version = self.engines[0].policy_version
         self._next_request_id = 0
         self._next_group_id = 0
         self._next_session_id = 0
@@ -180,8 +181,19 @@ class InferencePool:
         return sum(eng.step() for eng in self.engines)
 
     def update_weights(self, params, version: int) -> None:
-        for eng in self.engines:
-            eng.update_weights(params, version)
+        """Push a policy update to every engine, relay-then-commit.
+
+        Phase 1 DISPATCHES every engine's reshard (``relay_weights`` is an
+        async device-to-device ``device_put`` into each engine's serving
+        layout — no host gather, no blocking), so the transfers overlap
+        instead of running as the old sequential per-engine loop. Phase 2
+        commits them all, then bumps ONE pool-level version counter: an
+        engine can never observe a torn pool version (some engines on v+1
+        while ``policy_version`` still reads an older engine's v)."""
+        placed = [eng.relay_weights(params) for eng in self.engines]
+        for eng, p in zip(self.engines, placed):
+            eng.commit_weights(p, version)
+        self._policy_version = version
 
     @property
     def idle(self) -> bool:
@@ -189,7 +201,7 @@ class InferencePool:
 
     @property
     def policy_version(self) -> int:
-        return self.engines[0].policy_version
+        return self._policy_version
 
     def drain_groups(self) -> List[RolloutGroup]:
         """Collect completed requests and return any fully-finished groups."""
@@ -241,6 +253,9 @@ class InferencePool:
             "kv_blocks_peak": sum(e.stats.kv_blocks_peak
                                   for e in self.engines),
             "kv_bytes": sum(e.stats.kv_bytes for e in self.engines),
+            "mesh_shapes": [e.stats.mesh_shape for e in self.engines],
+            "kv_bytes_per_shard": [e.stats.kv_bytes_per_shard
+                                   for e in self.engines],
             "cow_forks": sum(e.stats.cow_forks for e in self.engines),
             "blocks_freed_on_evict": sum(e.stats.blocks_freed_on_evict
                                          for e in self.engines),

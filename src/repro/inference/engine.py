@@ -100,6 +100,7 @@ fork (host-side row broadcast + eager scatter).
 """
 from __future__ import annotations
 
+import contextlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Union
@@ -107,12 +108,16 @@ from typing import Deque, Dict, List, Optional, Union
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import (extend_sample, fork_decode_rows, init_decode_state,
                           init_paged_state, paged_gather_rows,
                           paged_sample_step, paged_write_rows,
                           prefill_fork_sample, prefill_sample, sample_step)
+from repro.sharding.context import serve_mesh_context
+from repro.sharding.rules import (decode_state_specs, serve_param_specs,
+                                  token_spec)
 
 DEFAULT_PCFG = ParallelConfig(remat="none", loss_chunk=0)
 
@@ -208,6 +213,9 @@ class EngineStats:
     kv_blocks_in_use: int = 0    # unique blocks off the free list
     kv_blocks_peak: int = 0      # high-water mark of kv_blocks_in_use
     kv_bytes: int = 0            # persistent K/V cache bytes (pool or dense)
+    # sharded-engine accounting (empty/equal-to-kv_bytes when unsharded)
+    mesh_shape: str = ""         # "data=2,model=4" for a meshed engine
+    kv_bytes_per_shard: int = 0  # K/V bytes resident per device shard
     cow_forks: int = 0           # copy-on-write private-block materializations
     blocks_freed_on_evict: int = 0  # blocks reclaimed by parked-session eviction
     # per-step occupancy trace for the Fig. 4 / utilization benchmark
@@ -278,14 +286,32 @@ class BlockAllocator:
 
 
 class InferenceEngine:
-    """Slot-based continuous-batching engine over a single model replica."""
+    """Slot-based continuous-batching engine over one model *shard set*.
+
+    With ``mesh=None`` (default) the engine is single-device, exactly as
+    before. With a ``mesh`` the engine IS that mesh: params take the
+    bitwise-safe serving layout (``sharding.rules.serve_param_specs`` —
+    column-parallel q/k/v over "model", MoE expert stacks over
+    "expert"/"model"), the K/V pool (or dense cache) shards its KV-head
+    dim over "model", block tables and per-slot bookkeeping shard slots
+    over "data" (``decode_state_specs(paged=..., shard_heads=True)``), and
+    every jitted path — fused tick, bucketed prefill, extend, group fork,
+    scatters — dispatches as a sharded computation with donated state.
+    Token/logprob/version streams stay byte-identical to the unsharded
+    ``HostReferenceEngine`` on ANY mesh: the layout only uses sharding
+    that preserves float-reduction order (heads/experts are batch/gather
+    dims; the attention output is gathered before the ``wo`` contraction
+    — see ``models.attention._serve_gather_heads``).
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 8,
                  max_seq: int = 512, eos_id: int = 1,
                  pcfg: ParallelConfig = DEFAULT_PCFG, seed: int = 0,
                  policy_version: int = 0, min_prefill_bucket: int = 8,
                  kv_block_size: int = 16,
-                 num_kv_blocks: Optional[int] = None):
+                 num_kv_blocks: Optional[int] = None,
+                 mesh: Optional[Mesh] = None):
+        self.mesh = mesh
         self.params = params
         self.cfg = cfg
         self.pcfg = pcfg
@@ -378,6 +404,42 @@ class InferenceEngine:
         self._max_new = jnp.ones((num_slots,), jnp.int32)
         self._rng = jax.random.PRNGKey(seed)
 
+        # mesh placement: lay out params, cache state and slot bookkeeping
+        # across the engine's shard set. Donation through the jitted paths
+        # requires stable layouts, so the impls re-constrain their state
+        # outputs to these same shardings (_constrain_state).
+        self._state_shardings = None
+        self._param_shardings = None
+        self._slot_sharding = None
+        if mesh is not None:
+            specs = decode_state_specs(cfg, mesh, batch=num_slots,
+                                       paged=self.paged, shard_heads=True)
+            self._state_shardings = {k: NamedSharding(mesh, specs[k])
+                                     for k in self.state}
+            self.state = {k: jax.device_put(v, self._state_shardings[k])
+                          for k, v in self.state.items()}
+            self._param_shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                serve_param_specs(params, mesh, cfg))
+            self.params = jax.device_put(params, self._param_shardings)
+            self._slot_sharding = NamedSharding(
+                mesh, token_spec(mesh, num_slots))
+            (self._last_token, self._active, self._temps, self._gen,
+             self._max_new) = jax.device_put(
+                (self._last_token, self._active, self._temps, self._gen,
+                 self._max_new), self._slot_sharding)
+            self._rng = jax.device_put(self._rng, NamedSharding(mesh, P()))
+            self.stats.mesh_shape = ",".join(
+                f"{a}={n}" for a, n in mesh.shape.items())
+        if "k" in self.state:
+            per_shard = self.state["k"].nbytes + self.state["v"].nbytes
+            if mesh is not None:
+                shard = self._state_shardings["k"].shard_shape(
+                    self.state["k"].shape)
+                per_shard = 2 * int(np.prod(shard)
+                                    * self.state["k"].dtype.itemsize)
+            self.stats.kv_bytes_per_shard = per_shard
+
         # the slot state is donated through the tick/scatter so XLA updates
         # the decode caches in place instead of copying them every dispatch
         self._tick_fn = jax.jit(self._tick_impl, donate_argnums=(1,))
@@ -397,10 +459,31 @@ class InferenceEngine:
                 self._paged_fork_scatter_impl, donate_argnums=(0,))
             # COW block copy: donated in-place pool update (one block's
             # K/V moves, not a fresh O(pool) buffer pair per copy)
-            self._copy_block_fn = jax.jit(
-                lambda k, v, dst, src: (k.at[:, dst].set(k[:, src]),
-                                        v.at[:, dst].set(v[:, src])),
-                donate_argnums=(0, 1))
+            def _copy_block(k, v, dst, src):
+                out = (k.at[:, dst].set(k[:, src]),
+                       v.at[:, dst].set(v[:, src]))
+                if self._state_shardings is not None:
+                    out = tuple(jax.lax.with_sharding_constraint(
+                        x, self._state_shardings[n])
+                        for x, n in zip(out, ("k", "v")))
+                return out
+            self._copy_block_fn = jax.jit(_copy_block, donate_argnums=(0, 1))
+
+    def _dispatch_ctx(self):
+        """Context for every jitted dispatch: a meshed engine traces and
+        runs under its serve mesh (model code reads it to apply the
+        serving TP contract); an unsharded engine is a no-op."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return serve_mesh_context(self.mesh)
+
+    def _constrain_state(self, state: dict) -> dict:
+        """Re-pin a jit-produced slot state to the engine layout so donated
+        buffers keep stable shardings across dispatches."""
+        if self._state_shardings is None:
+            return state
+        return {k: jax.lax.with_sharding_constraint(
+            v, self._state_shardings[k]) for k, v in state.items()}
 
     def _supports_paging(self) -> bool:
         """Class-level paging opt-in. ``HostReferenceEngine`` returns
@@ -442,12 +525,30 @@ class InferenceEngine:
                 self._free_slot_blocks(sess.slot)
                 self._sync_kv_stats()
 
-    def update_weights(self, params, version: int) -> None:
-        """In-flight policy update: takes effect at the next decode tick;
-        occupied slots keep their caches and continue generating."""
-        self.params = params
+    def relay_weights(self, params):
+        """Stage an in-flight policy update: reshard trainer param shards
+        directly into this engine's serving layout. ``jax.device_put`` on
+        already-committed device arrays is a device-to-device transfer
+        dispatched asynchronously — the params are NEVER gathered to host
+        on this path (the relay the paper's trainer→inference weight
+        broadcast performs over NCCL). Returns the placed tree;
+        ``commit_weights`` installs it. Unsharded engines pass the tree
+        through untouched."""
+        if self.mesh is None:
+            return params
+        return jax.device_put(params, self._param_shardings)
+
+    def commit_weights(self, placed, version: int) -> None:
+        """Install a ``relay_weights`` result: takes effect at the next
+        decode tick; occupied slots keep their caches and continue
+        generating."""
+        self.params = placed
         self.policy_version = version
         self.stats.weight_updates += 1
+
+    def update_weights(self, params, version: int) -> None:
+        """In-flight policy update (relay + commit in one call)."""
+        self.commit_weights(self.relay_weights(params), version)
 
     @property
     def num_active(self) -> int:
@@ -560,7 +661,7 @@ class InferenceEngine:
         finished = active & ((toks == self.eos_id) | (count >= max_new))
         new_token = jnp.where(active, toks, token)
         return (toks, lps, finished, new_token, active & ~finished, count,
-                new_state, rng)
+                self._constrain_state(new_state), rng)
 
     def _scatter_impl(self, state, last_token, active, temps, gen, max_new,
                       st, slot_idx, toks, row_temps, row_max_new, row_active):
@@ -581,7 +682,8 @@ class InferenceEngine:
         temps = temps.at[slot_idx].set(row_temps, mode="drop")
         gen = gen.at[slot_idx].set(jnp.ones_like(slot_idx), mode="drop")
         max_new = max_new.at[slot_idx].set(row_max_new, mode="drop")
-        return new_state, last_token, active, temps, gen, max_new
+        return (self._constrain_state(new_state), last_token, active, temps,
+                gen, max_new)
 
     def _paged_scatter_impl(self, state, last_token, active, temps, gen,
                             max_new, st, slot_idx, toks, row_temps,
@@ -600,7 +702,8 @@ class InferenceEngine:
         temps = temps.at[slot_idx].set(row_temps, mode="drop")
         gen = gen.at[slot_idx].set(jnp.ones_like(slot_idx), mode="drop")
         max_new = max_new.at[slot_idx].set(row_max_new, mode="drop")
-        return new_state, last_token, active, temps, gen, max_new
+        return (self._constrain_state(new_state), last_token, active, temps,
+                gen, max_new)
 
     def _paged_fork_scatter_impl(self, state, last_token, active, temps,
                                  gen, max_new, st, slot_idx, toks,
@@ -628,9 +731,10 @@ class InferenceEngine:
     def _prefill_exec(self, tokens, prompt_lens, temps):
         """Run one bucketed prefill. Returns (tokens, logprobs, row state);
         consumes exactly one split of the engine RNG."""
-        toks, lps, st, self._rng = self._prefill_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(prompt_lens),
-            jnp.asarray(temps), self._rng)
+        with self._dispatch_ctx():
+            toks, lps, st, self._rng = self._prefill_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(prompt_lens),
+                jnp.asarray(temps), self._rng)
         return toks, lps, st
 
     def _extend_exec(self, gather_idx, tokens, ext_lens, start_pos, temps):
@@ -638,10 +742,11 @@ class InferenceEngine:
         state); consumes exactly one split of the engine RNG — the same
         discipline as a prefill batch, so an extend turn and a
         re-prefilled turn keep the RNG streams aligned."""
-        toks, lps, st, self._rng = self._extend_fn(
-            self.params, self.state, jnp.asarray(gather_idx),
-            jnp.asarray(tokens), jnp.asarray(ext_lens),
-            jnp.asarray(start_pos), jnp.asarray(temps), self._rng)
+        with self._dispatch_ctx():
+            toks, lps, st, self._rng = self._extend_fn(
+                self.params, self.state, jnp.asarray(gather_idx),
+                jnp.asarray(tokens), jnp.asarray(ext_lens),
+                jnp.asarray(start_pos), jnp.asarray(temps), self._rng)
         return toks, lps, st
 
     def _group_prefill_exec(self, tokens, prompt_lens, temps):
@@ -650,9 +755,10 @@ class InferenceEngine:
         consumes exactly one split of the engine RNG — the same discipline
         as a per-member prefill batch, which is what keeps fork and
         independent admission on identical RNG streams."""
-        toks, lps, st, self._rng = self._group_prefill_fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(prompt_lens),
-            jnp.asarray(temps), self._rng)
+        with self._dispatch_ctx():
+            toks, lps, st, self._rng = self._group_prefill_fn(
+                self.params, jnp.asarray(tokens), jnp.asarray(prompt_lens),
+                jnp.asarray(temps), self._rng)
         return toks, lps, st
 
     def _fork_scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
@@ -661,12 +767,13 @@ class InferenceEngine:
             else self._paged_fork_scatter_fn
         extra = () if paged_coords is None \
             else tuple(jnp.asarray(c) for c in paged_coords)
-        (self.state, self._last_token, self._active, self._temps, self._gen,
-         self._max_new) = fn(
-            self.state, self._last_token, self._active, self._temps,
-            self._gen, self._max_new, st, jnp.asarray(slot_idx),
-            jnp.asarray(toks), jnp.asarray(row_temps),
-            jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
+        with self._dispatch_ctx():
+            (self.state, self._last_token, self._active, self._temps,
+             self._gen, self._max_new) = fn(
+                self.state, self._last_token, self._active, self._temps,
+                self._gen, self._max_new, st, jnp.asarray(slot_idx),
+                jnp.asarray(toks), jnp.asarray(row_temps),
+                jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
 
     def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
                       row_active, paged_coords=None) -> None:
@@ -674,19 +781,21 @@ class InferenceEngine:
             else self._paged_scatter_fn
         extra = () if paged_coords is None \
             else tuple(jnp.asarray(c) for c in paged_coords)
-        (self.state, self._last_token, self._active, self._temps, self._gen,
-         self._max_new) = fn(
-            self.state, self._last_token, self._active, self._temps,
-            self._gen, self._max_new, st, jnp.asarray(slot_idx),
-            jnp.asarray(toks), jnp.asarray(row_temps),
-            jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
+        with self._dispatch_ctx():
+            (self.state, self._last_token, self._active, self._temps,
+             self._gen, self._max_new) = fn(
+                self.state, self._last_token, self._active, self._temps,
+                self._gen, self._max_new, st, jnp.asarray(slot_idx),
+                jnp.asarray(toks), jnp.asarray(row_temps),
+                jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
 
     def _decode_exec(self):
         """One fused decode tick; a single small host readback."""
-        (toks, lps, fin, self._last_token, self._active, self._gen,
-         self.state, self._rng) = self._tick_fn(
-            self.params, self.state, self._last_token, self._active,
-            self._temps, self._gen, self._max_new, self._rng)
+        with self._dispatch_ctx():
+            (toks, lps, fin, self._last_token, self._active, self._gen,
+             self.state, self._rng) = self._tick_fn(
+                self.params, self.state, self._last_token, self._active,
+                self._temps, self._gen, self._max_new, self._rng)
         return jax.device_get((toks, lps, fin))
 
     # ------------------------------------------------------------ internals
@@ -755,8 +864,13 @@ class InferenceEngine:
         rows = np.array([t[0] for t in self._table_dirty], np.int32)
         cols = np.array([t[1] for t in self._table_dirty], np.int32)
         vals = np.array([t[2] for t in self._table_dirty], np.int32)
-        self.state["block_tables"] = self.state["block_tables"].at[
-            rows, cols].set(vals)
+        tables = self.state["block_tables"].at[rows, cols].set(vals)
+        if self._state_shardings is not None:
+            # eager scatter output layout is XLA's choice; re-pin so the
+            # donated jit paths keep seeing the engine layout
+            tables = jax.device_put(
+                tables, self._state_shardings["block_tables"])
+        self.state["block_tables"] = tables
         self._table_dirty.clear()
 
     def _build_scatter_coords(self, slot_idx, S_write: int, row_starts):
@@ -875,6 +989,8 @@ class InferenceEngine:
             if self.paged:
                 self._free_slot_blocks(slot)
         self._active = self._active.at[slot].set(False)
+        if self._slot_sharding is not None:
+            self._active = jax.device_put(self._active, self._slot_sharding)
 
     def _sync_kv_stats(self) -> None:
         if self.paged:

@@ -42,6 +42,10 @@ class HostReferenceEngine(InferenceEngine):
         return False
 
     def __init__(self, *args, **kwargs):
+        # the oracle stays single-device by definition: sharded engines
+        # are validated AGAINST it, so it must never take a mesh layout
+        assert kwargs.get("mesh") is None, \
+            "HostReferenceEngine is the unsharded parity oracle"
         super().__init__(*args, **kwargs)
         cfg, pcfg, max_seq = self.cfg, self.pcfg, self.max_seq
         self._serve_logits = jax.jit(

@@ -23,6 +23,21 @@ Logical blocks past the row's position (``i*block_size > pos[b]``) are
 skipped with ``pl.when`` (no MXU work), so decode FLOPs scale with the
 tokens actually resident, not with ``max_blocks_per_seq``. Sliding-window
 masking additionally skips blocks entirely below the window.
+
+Sharded-serving contract (mesh-parallel engines): the engine lays the
+pool out with its ``kv_heads`` dim sharded over the mesh's "model" axis
+(``decode_state_specs(paged=True, shard_heads=True)``). The kernel body
+is already head-parallel — no cross-head reduction happens anywhere in
+the online softmax (m, l, acc are per-head) — so a per-shard invocation
+over the local ``kv_heads/n_model`` slice computes exactly the same
+values as the full-head invocation; heads are concatenated (never
+summed) downstream, and the engine gathers them before the ``wo``
+contraction. That per-element exactness is what lets the sharded engine
+hold byte-parity with the unsharded oracle while the pool's bytes are
+split ``n_model``-ways. GQA grouping survives sharding because Q heads
+shard with their KV head groups (``num_heads`` and ``num_kv_heads`` must
+both divide the axis — the same divisibility rule ``_kv_head_axis``
+enforces for the pool layout).
 """
 from __future__ import annotations
 

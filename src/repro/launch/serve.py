@@ -3,6 +3,18 @@
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch yi-9b:reduced \
       --requests 24 --slots 8
+
+Sharded serving (mesh-parallel engines): ``--mesh dp,tp[,ep]`` partitions
+the visible devices into ``dp`` disjoint engine shards of ``tp*ep``
+devices each — engines stay independent (the paper's multi-client
+topology: no inter-engine collectives), but each one lays its paged KV
+pool out head-sharded over "model" and its MoE expert stacks over
+"expert" (``decode_state_specs`` / ``serve_param_specs``). On CPU, test
+with XLA_FLAGS=--xla_force_host_platform_device_count=8:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-9b:reduced \
+      --requests 24 --slots 8 --mesh 2,4
 """
 from __future__ import annotations
 
@@ -21,6 +33,10 @@ def main():
     p.add_argument("--requests", type=int, default=24)
     p.add_argument("--slots", type=int, default=8)
     p.add_argument("--engines", type=int, default=1)
+    p.add_argument("--mesh", default=None,
+                   help="dp,tp[,ep]: engines as mesh shards — dp "
+                        "independent engines, each spanning tp (model) "
+                        "x ep (expert) devices. Overrides --engines.")
     p.add_argument("--max-new-tokens", type=int, default=24)
     p.add_argument("--max-seq", type=int, default=128)
     p.add_argument("--seed", type=int, default=0)
@@ -30,6 +46,7 @@ def main():
     from repro.configs.base import ParallelConfig
     from repro.data import TOKENIZER
     from repro.inference import InferenceEngine, InferencePool, Request
+    from repro.launch.mesh import make_engine_meshes
     from repro.models import init_params
 
     cfg = dataclasses.replace(get_config(args.arch),
@@ -37,9 +54,24 @@ def main():
     pcfg = ParallelConfig(remat="none", loss_chunk=0)
     params = init_params(jax.random.PRNGKey(args.seed), cfg,
                          dtype=jnp.float32)
-    engines = [InferenceEngine(params, cfg, num_slots=args.slots,
-                               max_seq=args.max_seq, pcfg=pcfg, seed=i)
-               for i in range(args.engines)]
+    if args.mesh is not None:
+        factors = [int(f) for f in args.mesh.split(",")]
+        if not 2 <= len(factors) <= 3:
+            raise SystemExit("--mesh expects dp,tp or dp,tp,ep")
+        dp, tp = factors[0], factors[1]
+        ep = factors[2] if len(factors) == 3 else 1
+        meshes = make_engine_meshes(dp, tp, ep)
+        engines = [InferenceEngine(params, cfg, num_slots=args.slots,
+                                   max_seq=args.max_seq, pcfg=pcfg,
+                                   seed=i, mesh=m)
+                   for i, m in enumerate(meshes)]
+        print(f"mesh serving: {dp} engine shard(s) x "
+              f"{tp * ep} device(s) each "
+              f"({len(jax.devices()) - dp * tp * ep} idle)")
+    else:
+        engines = [InferenceEngine(params, cfg, num_slots=args.slots,
+                                   max_seq=args.max_seq, pcfg=pcfg, seed=i)
+                   for i in range(args.engines)]
     pool = InferencePool(engines)
 
     rng = np.random.RandomState(args.seed)
@@ -78,6 +110,11 @@ def main():
               f"{stats['cow_forks']} COW copies, "
               f"{stats['blocks_freed_on_evict']} blocks evicted, "
               f"{stats['kv_blocks_in_use']} still in use)")
+    if any(stats["mesh_shapes"]):
+        for i, (shape, per_shard) in enumerate(zip(
+                stats["mesh_shapes"], stats["kv_bytes_per_shard"])):
+            print(f"engine {i} mesh [{shape}]: "
+                  f"{per_shard} KV bytes per device shard")
     print(f"mean slot occupancy: {np.mean(occ):.2f}/{args.slots} "
           f"(continuous batching keeps slots saturated)")
     for r in done[:3]:

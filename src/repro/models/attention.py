@@ -23,6 +23,29 @@ from .layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
 NEG_INF = -1e30
 
 
+def _serve_gather_heads(x):
+    """Serving tensor-parallel contract (sharded InferenceEngine only).
+
+    Under an engine mesh, q/k/v projections are column-parallel and the KV
+    cache is head-sharded over "model", so the attention output arrives
+    head-sharded. Its flattened q_dim is the CONTRACTION dim of the ``wo``
+    matmul: left sharded, GSPMD would partial-sum shard-local matmuls with
+    an all-reduce, reordering float additions and breaking the engine's
+    byte-identity parity gate. Constraining to replicated first makes the
+    resolution an all-gather (exact concatenation), keeping the contraction
+    unsharded and the dot products bitwise equal to the unsharded oracle.
+
+    No-op unless a serve mesh is active (training paths never see this).
+    """
+    from repro.sharding.context import current_serve_mesh
+    mesh = current_serve_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec()))
+
+
 def attn_init(key, cfg, dtype):
     d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.resolved_head_dim
     ks = jax.random.split(key, 4)
@@ -323,7 +346,7 @@ def attn_paged_decode_apply(params, x, k_pool, v_pool, block_tables, pos,
     else:
         out = attention_paged_decode(q, k_pool, v_pool, block_tables, pos,
                                      window=cfg.sliding_window)
-    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    out = _serve_gather_heads(out.reshape(B, 1, cfg.q_dim)) @ params["wo"]
     return out, k_pool, v_pool
 
 
@@ -350,7 +373,8 @@ def attn_apply(params, x, positions, cfg, *, use_pallas=False, causal=True,
                 and S % mesh.shape["model"] == 0:
             from repro.sharding.context_parallel import ring_attention
             out = ring_attention(q, k, v, mesh, causal=causal)
-            out = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+            out = _serve_gather_heads(out.reshape(B, S, cfg.q_dim)) \
+                @ params["wo"]
             return out, (k, v)
     if use_pallas:
         from repro.kernels import ops as kops
@@ -362,7 +386,7 @@ def attn_apply(params, x, positions, cfg, *, use_pallas=False, causal=True,
         out = attention_direct(q, k, v, causal=causal, window=window)
     else:
         out = attention_blockwise(q, k, v, causal=causal, window=window)
-    out = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+    out = _serve_gather_heads(out.reshape(B, S, cfg.q_dim)) @ params["wo"]
     return out, (k, v)
 
 
@@ -399,7 +423,7 @@ def attn_decode_apply(params, x, k_cache, v_cache, pos, cfg):
     else:
         out = attention_decode(q, k_cache, v_cache, pos,
                                window=cfg.sliding_window)
-    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    out = _serve_gather_heads(out.reshape(B, 1, cfg.q_dim)) @ params["wo"]
     return out, k_cache, v_cache
 
 
@@ -430,7 +454,8 @@ def attn_extend_apply(params, x, k_cache, v_cache, positions, cfg):
     v_cache = upd(v_cache, v.astype(v_cache.dtype))
     out = attention_extend(q, k_cache, v_cache, positions,
                            window=cfg.sliding_window)
-    out = out.reshape(B, S_new, cfg.q_dim) @ params["wo"]
+    out = _serve_gather_heads(out.reshape(B, S_new, cfg.q_dim)) \
+        @ params["wo"]
     return out, k_cache, v_cache
 
 
@@ -440,7 +465,7 @@ def cross_attn_apply(params, x, k_cache, v_cache, cfg):
     hd = cfg.resolved_head_dim
     q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
     out = attention_direct(q, k_cache, v_cache, causal=False)
-    return out.reshape(B, S, cfg.q_dim) @ params["wo"]
+    return _serve_gather_heads(out.reshape(B, S, cfg.q_dim)) @ params["wo"]
 
 
 def cross_attn_kv(params, enc_out, cfg):

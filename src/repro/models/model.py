@@ -591,18 +591,41 @@ def extend(params, state, batch, start_pos, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 
+def _sample_logits_core(key, logits, temps):
+    scaled = logits / jnp.maximum(temps[:, None], 1e-4)
+    toks = jax.random.categorical(key, scaled, axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    lps = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
+    return toks.astype(jnp.int32), lps
+
+
 def sample_logits(key, logits, temps):
     """Temperature-scaled categorical sampling + logprob gather, batched.
 
     logits: [B, V] f32; temps: [B]. Returns (tokens [B] i32, logprobs [B]
     f32) where logprobs are log-softmax of the *unscaled* logits at the
     sampled token (the trainer-consistency convention the engine records).
+
+    Under a serving mesh the draw runs inside a fully-replicated
+    ``shard_map``: the categorical's gumbel bits are NOT partition-
+    invariant (the threefry lowering emits different bits depending on how
+    GSPMD shards the [B, V] draw — measured on multi-axis meshes even a
+    replication *constraint* on the logits is not enough, because the
+    partitioner may still shard the bit-generator op itself). Inside the
+    shard_map every device runs the exact single-device sampling program
+    on a full copy, so token/logprob streams stay byte-identical to the
+    unsharded oracle.
     """
-    scaled = logits / jnp.maximum(temps[:, None], 1e-4)
-    toks = jax.random.categorical(key, scaled, axis=-1)
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    lps = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
-    return toks.astype(jnp.int32), lps
+    from repro.sharding.context import current_serve_mesh
+    mesh = current_serve_mesh()
+    if mesh is None:
+        return _sample_logits_core(key, logits, temps)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    fn = shard_map(_sample_logits_core, mesh=mesh,
+                   in_specs=(P(), P(), P()), out_specs=(P(), P()),
+                   check_rep=False)
+    return fn(key, logits, temps)
 
 
 def sample_step(params, state, token, temps, rng, cfg: ModelConfig,

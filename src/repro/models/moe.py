@@ -120,12 +120,25 @@ def moe_apply(params, x, cfg, *, use_pallas=False, capacity_factor=1.25,
     if expert_parallel:
         from repro.sharding.context import current_mesh
         mesh = current_mesh()
-        if mesh is not None and "model" in mesh.shape:
-            return _moe_apply_ep(params, x, weights, experts, probs, cfg,
-                                 mesh)
+        if mesh is not None:
+            # serving meshes carry a dedicated "expert" axis; training
+            # meshes reuse "model". Experts must divide the axis or the
+            # a2a dispatch degenerates — fall through to the dense path.
+            axis = next((a for a in ("expert", "model")
+                         if mesh.shape.get(a, 0) > 1
+                         and E % mesh.shape[a] == 0), None)
+            if axis is not None:
+                return _moe_apply_ep(params, x, weights, experts, probs,
+                                     cfg, mesh, axis=axis)
 
     cap = int(S * K / E * capacity_factor) + 8
     cap = -(-cap // 8) * 8
+
+    if not use_pallas:
+        from repro.sharding.context import current_serve_mesh
+        serve_mesh = current_serve_mesh()
+        if serve_mesh is not None:
+            return _moe_serve_apply(params, x, cfg, cap, serve_mesh)
 
     xe, info = jax.vmap(lambda xr, w, e: _dispatch_row(xr, w, e, E, K, cap))(
         x, weights, experts)
@@ -163,12 +176,113 @@ def moe_apply(params, x, cfg, *, use_pallas=False, capacity_factor=1.25,
     return y, aux
 
 
-def _moe_apply_ep(params, x, weights, experts, probs, cfg, mesh):
+def _serve_expert_axis(mesh, E):
+    """The serving layout's expert-dim mesh axis (serve_param_specs rule):
+    "expert" when the mesh has one, else "model", and only when the expert
+    count divides it — otherwise None (replicated)."""
+    axis = "expert" if "expert" in mesh.shape else \
+        ("model" if "model" in mesh.shape else None)
+    if axis is not None and E % mesh.shape[axis] != 0:
+        return None
+    return axis
+
+
+def _moe_serve_apply(params, x, cfg, cap, mesh):
+    """Prefill/extend MoE under a serving mesh, byte-identical to the
+    unsharded ``moe_apply`` body below it.
+
+    Same contract as ``_moe_decode_serve``: token-side ops (routing,
+    vmapped dispatch, scatter-add combine, shared experts, aux metrics)
+    run inside fully-replicated ``shard_map`` blocks — every device
+    executes the single-device program (routing must be inside too: a
+    re-blocked router matmul can drift a top-k near-tie onto a different
+    expert) — while the expert GEMM runs E-sharded (a batch dim:
+    per-element contractions untouched, parameter bytes stay
+    distributed). Without this, GSPMD re-blocks the dispatch/combine over
+    whatever axes it likes and prefill logits drift ~1e-6 — enough to flip
+    sampled tokens and break the engine's parity gate.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    rep = PartitionSpec()
+
+    def dispatch(x, router):
+        xf = x.reshape(B * S, d)
+        weights, experts, probs = _route({"router": router}, xf, m)
+        weights = weights.reshape(B, S, K)
+        experts = experts.reshape(B, S, K)
+        xe, info = jax.vmap(
+            lambda xr, wr, er: _dispatch_row(xr, wr, er, E, K, cap))(
+            x, weights, experts)
+        return xe, info, probs
+
+    xe, info, probs = shard_map(
+        dispatch, mesh=mesh, in_specs=(rep, rep),
+        out_specs=(rep, (rep,) * 5, rep), check_rep=False)(
+        x, params["router"])
+
+    e_axis = _serve_expert_axis(mesh, E)
+    xspec = PartitionSpec(None, e_axis, None, None)
+    wspec = PartitionSpec(e_axis, None, None)
+
+    def expert_mlp(xe, wg, wu, wd):
+        gate = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, wg))
+        up = jnp.einsum("becd,edf->becf", xe, wu)
+        return jnp.einsum("becf,efd->becd", gate * up, wd)
+
+    ye = shard_map(expert_mlp, mesh=mesh,
+                   in_specs=(xspec, wspec, wspec, wspec), out_specs=xspec,
+                   check_rep=False)(
+        xe, params["w_gate"], params["w_up"], params["w_down"])
+
+    shared = m.num_shared_experts
+
+    def combine(ye, info, x, probs, *sh):
+        y = jax.vmap(lambda yr, i: _combine_row(yr, i, S, x.dtype))(ye, info)
+        xf = x.reshape(B * S, d)
+        if shared:
+            wg, wu, wd, sg = sh
+            g = jax.nn.silu(xf @ wg) * (xf @ wu)
+            shared_out = (g @ wd).reshape(B, S, d)
+            sgate = jax.nn.sigmoid(xf @ sg).reshape(B, S, 1)
+            y = y + sgate * shared_out
+        # aux metrics: identical formulas to the unsharded path
+        group_sizes = info[4].sum(axis=0).astype(jnp.float32)
+        TK = B * S * K
+        load = group_sizes / TK
+        importance = probs.mean(axis=0)
+        aux_loss = E * jnp.sum(load * importance) * m.router_aux_loss_coef
+        mean_load = jnp.mean(group_sizes)
+        max_violation = (jnp.max(group_sizes) - mean_load) \
+            / jnp.maximum(mean_load, 1.0)
+        dropped = jnp.sum(~info[2]) / TK
+        return y, aux_loss, max_violation, dropped
+
+    sh_args = () if not shared else (
+        params["shared"]["w_gate"], params["shared"]["w_up"],
+        params["shared"]["w_down"], params["shared_gate"])
+    n_in = 4 + len(sh_args)
+    y, aux_loss, max_violation, dropped = shard_map(
+        combine, mesh=mesh,
+        in_specs=(rep, (rep,) * 5) + (rep,) * (n_in - 2),
+        out_specs=(rep, rep, rep, rep), check_rep=False)(
+        ye, info, x, probs, *sh_args)
+    aux = {"moe_aux_loss": aux_loss, "max_violation": max_violation,
+           "dropped_frac": dropped}
+    return y, aux
+
+
+def _moe_apply_ep(params, x, weights, experts, probs, cfg, mesh,
+                  axis="model"):
     """Expert-parallel branch: shard_map a2a dispatch (see ep_moe.py)."""
     from .ep_moe import ep_moe_dispatch
     m = cfg.moe
     B, S, d = x.shape
-    y, dropped = ep_moe_dispatch(params, x, weights, experts, cfg, mesh)
+    y, dropped = ep_moe_dispatch(params, x, weights, experts, cfg, mesh,
+                                 model_axis=axis)
 
     if m.num_shared_experts:
         xf = x.reshape(B * S, d)
@@ -203,10 +317,14 @@ def moe_decode_apply(params, x, cfg, *, capacity_factor=2.0):
     B, S, d = x.shape
     E, K = m.num_experts, m.top_k
     T = B * S
-    xf = x.reshape(T, d)
-    weights, experts, _ = _route(params, xf, m)          # [T,K]
     cap = max(8, int(T * K / E * capacity_factor) + 8)
     cap = -(-cap // 8) * 8
+    from repro.sharding.context import current_serve_mesh
+    mesh = current_serve_mesh()
+    if mesh is not None:
+        return _moe_decode_serve(params, x, cfg, cap, mesh)
+    xf = x.reshape(T, d)
+    weights, experts, _ = _route(params, xf, m)          # [T,K]
     xe, info = _dispatch_row(xf, weights, experts, E, K, cap)
     gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]))
     up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
@@ -217,4 +335,72 @@ def moe_decode_apply(params, x, cfg, *, capacity_factor=2.0):
         sp = params["shared"]
         g = jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])
         y = y + jax.nn.sigmoid(xf @ params["shared_gate"]) * (g @ sp["w_down"])
+    return y.reshape(B, S, d).astype(x.dtype)
+
+
+def _moe_decode_serve(params, x, cfg, cap, mesh):
+    """Decode MoE under a serving mesh, byte-identical to the unsharded
+    path above.
+
+    The token-side ops (router, sorted dispatch, scatter-add combine,
+    shared experts) are NOT partition-invariant — GSPMD re-blocks the
+    global argsort/scatter when the token dim is sharded over "data", and
+    a replication *constraint* is not enough on multi-axis meshes because
+    the partitioner may still re-block interior ops. They therefore run
+    inside fully-replicated ``shard_map`` blocks: every device executes
+    the exact single-device program on a full copy of the (tiny, one
+    token per slot) arrays. Only the expert GEMM runs outside, where the
+    expert dim — a batch dim of the einsum, never a contraction — carries
+    the serving layout's "expert"/"model" sharding, so the parameter
+    bytes stay distributed and each element's contraction is untouched.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    T = B * S
+    rep = PartitionSpec()
+    xf = x.reshape(T, d)
+
+    def dispatch(xf, router):
+        weights, experts, _ = _route({"router": router}, xf, m)
+        return _dispatch_row(xf, weights, experts, E, K, cap)
+
+    xe, info = shard_map(dispatch, mesh=mesh, in_specs=(rep, rep),
+                         out_specs=(rep, (rep,) * 5), check_rep=False)(
+        xf, params["router"])
+
+    # expert GEMM: explicitly pinned to the serving layout's expert-dim
+    # sharding (the same rule as serve_param_specs) so the partitioner
+    # cannot re-block it over the idle data axis — the expert dim is a
+    # batch dim, so per-shard compute is per-element exact.
+    espec = PartitionSpec(_serve_expert_axis(mesh, E))
+
+    def expert_mlp(xe, wg, wu, wd):
+        gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg))
+        up = jnp.einsum("ecd,edf->ecf", xe, wu)
+        return jnp.einsum("ecf,efd->ecd", gate * up, wd)
+
+    ye = shard_map(expert_mlp, mesh=mesh,
+                   in_specs=(espec, espec, espec, espec), out_specs=espec,
+                   check_rep=False)(
+        xe, params["w_gate"], params["w_up"], params["w_down"])
+
+    shared = m.num_shared_experts
+
+    def combine(ye, sort_t, sort_w, keep, dest, gsz, xf, *sh):
+        y = _combine_row(ye, (sort_t, sort_w, keep, dest, gsz), T, x.dtype)
+        if shared:
+            wg, wu, wd, sg = sh
+            g = jax.nn.silu(xf @ wg) * (xf @ wu)
+            y = y + jax.nn.sigmoid(xf @ sg) * (g @ wd)
+        return y
+
+    sh_args = () if not shared else (
+        params["shared"]["w_gate"], params["shared"]["w_up"],
+        params["shared"]["w_down"], params["shared_gate"])
+    y = shard_map(combine, mesh=mesh,
+                  in_specs=(rep,) * (7 + len(sh_args)), out_specs=rep,
+                  check_rep=False)(ye, *info, xf, *sh_args)
     return y.reshape(B, S, d).astype(x.dtype)

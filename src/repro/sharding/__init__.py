@@ -1,11 +1,16 @@
 """Distribution: FSDP partition rules, ring-attention context parallelism."""
 from .rules import (batch_axis_size, data_axes, decode_state_specs,
                     param_shardings, param_specs, rl_batch_specs,
-                    spec_for_param, token_spec, train_batch_specs)
+                    serve_param_specs, spec_for_param, token_spec,
+                    train_batch_specs)
+from .context import (current_mesh, current_serve_mesh, mesh_context,
+                      serve_mesh_context)
 from .context_parallel import ring_attention, ring_attention_body
 
 __all__ = [
-    "batch_axis_size", "data_axes", "decode_state_specs", "param_shardings",
-    "param_specs", "ring_attention", "ring_attention_body", "rl_batch_specs",
-    "spec_for_param", "token_spec", "train_batch_specs",
+    "batch_axis_size", "current_mesh", "current_serve_mesh", "data_axes",
+    "decode_state_specs", "mesh_context", "param_shardings", "param_specs",
+    "ring_attention", "ring_attention_body", "rl_batch_specs",
+    "serve_mesh_context", "serve_param_specs", "spec_for_param", "token_spec",
+    "train_batch_specs",
 ]

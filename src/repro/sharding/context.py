@@ -1,5 +1,18 @@
 """Process-level mesh context: model code that needs a shard_map (EP MoE)
-reads the mesh from here; launchers/tests set it around tracing."""
+reads the mesh from here; launchers/tests set it around tracing.
+
+Two slots, one mesh each:
+
+``mesh_context``        training / analysis mesh (dry-run, perf sweeps).
+``serve_mesh_context``  a SHARDED INFERENCE ENGINE's mesh. Set only by
+                        ``InferenceEngine`` around its jitted dispatches.
+                        Model code reads ``current_serve_mesh()`` to apply
+                        the serving tensor-parallel contract (gather head
+                        shards before the ``wo`` contraction so streams
+                        stay bitwise-identical to the unsharded oracle).
+                        Kept separate from ``current_mesh`` so training
+                        paths never pick up serving constraints.
+"""
 from __future__ import annotations
 
 import contextlib
@@ -8,6 +21,7 @@ from typing import Optional
 from jax.sharding import Mesh
 
 _CURRENT: list = [None]
+_SERVE: list = [None]
 
 
 def current_mesh() -> Optional[Mesh]:
@@ -23,3 +37,39 @@ def mesh_context(mesh: Mesh):
             yield mesh
     finally:
         _CURRENT[0] = prev
+
+
+def current_serve_mesh() -> Optional[Mesh]:
+    return _SERVE[0]
+
+
+@contextlib.contextmanager
+def serve_mesh_context(mesh: Mesh):
+    """Engine-scope mesh. Also fills the ``current_mesh`` slot so mesh-aware
+    model paths (EP MoE shard_map) see it during tracing."""
+    prev, prev_serve = _CURRENT[0], _SERVE[0]
+    _CURRENT[0] = mesh
+    _SERVE[0] = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CURRENT[0] = prev
+        _SERVE[0] = prev_serve
+
+
+def serve_replicate(x):
+    """Pin ``x`` fully replicated when a serving mesh is active (no-op
+    otherwise). This is the serving parity contract's workhorse: any value
+    whose downstream math is not partition-invariant — sampling RNG draws,
+    the global decode-MoE dispatch, pre-``wo`` head concatenation — gets
+    pinned here so GSPMD computes it exactly as the unsharded oracle would.
+    The replicated tensors are tiny (per-slot rows or [B, V] logits), so
+    the all-gather cost is noise next to the sharded cache/expert reads."""
+    mesh = _SERVE[0]
+    if mesh is None:
+        return x
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec()))

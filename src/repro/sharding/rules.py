@@ -186,33 +186,123 @@ def rl_batch_specs(mesh: Mesh, **kw) -> dict:
     return spec
 
 
-def decode_state_specs(cfg, mesh: Mesh, *, batch: int,
-                       shard_seq: bool = True) -> dict:
-    """Specs for the serve_step decode state.
+def _kv_head_axis(cfg, mesh: Mesh) -> Optional[str]:
+    """Serving TP axis for the KV-head dim, or None when it doesn't divide
+    (spec degrades to replicated — still correct, just not parallel)."""
+    if "model" in mesh.shape and cfg.num_kv_heads % mesh.shape["model"] == 0:
+        return "model"
+    return None
 
-    KV caches are [L, B, S, Hkv, hd]: batch over ("pod","data") when it
-    divides, cache sequence over "model" (sharded-softmax attention).
-    long_500k's batch=1 falls back to sequence-only sharding.
+
+def decode_state_specs(cfg, mesh: Mesh, *, batch: int,
+                       shard_seq: bool = True, paged: bool = False,
+                       shard_heads: bool = False) -> dict:
+    """Specs for the decode state (``init_decode_state``/``init_paged_state``).
+
+    Dense training/analysis layout (default): KV caches are
+    [L, B, S, Hkv, hd]: batch over ("pod","data") when it divides, cache
+    sequence over "model" (sharded-softmax attention). long_500k's batch=1
+    falls back to sequence-only sharding.
+
+    ``shard_heads=True`` (serving): shard the KV-HEAD dim over "model"
+    instead of the sequence. Head-sharded attention is batch-parallel over
+    heads — every float reduction stays shard-local — so sampled streams
+    remain bitwise-identical to the unsharded engine, which a sharded
+    softmax over the sequence cannot guarantee.
+
+    ``paged=True`` (serving, PR 5 layout): the K/V leaves are block POOLS
+    [L, num_blocks, block_size, Hkv, hd] shared by all slots, so only the
+    head dim shards; ``block_tables`` [B, blocks_per_row] shards its slot
+    dim over the data axes like every per-slot array.
     """
     da = data_axes(mesh)
     bsz = _axis_size(mesh, da)
     b_axis = (da if len(da) > 1 else da[0]) if (da and batch % bsz == 0) else None
-    s_axis = "model" if (shard_seq and "model" in mesh.shape) else None
+    if paged:
+        h_axis = _kv_head_axis(cfg, mesh)
+        specs = {
+            "pos": P(b_axis),
+            "k": P(None, None, None, h_axis, None),
+            "v": P(None, None, None, h_axis, None),
+            "block_tables": P(b_axis, None),
+        }
+        if cfg.is_encoder_decoder:   # cross caches stay dense per-row
+            specs["cross_k"] = P(None, b_axis, None, h_axis, None)
+            specs["cross_v"] = P(None, b_axis, None, h_axis, None)
+        return specs
+    if shard_heads:
+        s_axis, h_axis = None, _kv_head_axis(cfg, mesh)
+    else:
+        s_axis = "model" if (shard_seq and "model" in mesh.shape) else None
+        h_axis = None
     specs = {"pos": P(b_axis)}
     if cfg.uses_attention:
-        specs["k"] = P(None, b_axis, s_axis, None, None)
-        specs["v"] = P(None, b_axis, s_axis, None, None)
+        specs["k"] = P(None, b_axis, s_axis, h_axis, None)
+        specs["v"] = P(None, b_axis, s_axis, h_axis, None)
     if cfg.ssm is not None:
         # recurrent state [L, B, nh, hd, n]: shard heads over model
         nh = cfg.ssm.n_heads(cfg.d_model)
-        h_axis = "model" if ("model" in mesh.shape
-                             and nh % mesh.shape["model"] == 0) else None
+        nh_axis = "model" if ("model" in mesh.shape
+                              and nh % mesh.shape["model"] == 0) else None
         specs["ssm_conv"] = P(None, b_axis, None, None)
-        specs["ssm_h"] = P(None, b_axis, h_axis, None, None)
+        specs["ssm_h"] = P(None, b_axis, nh_axis, None, None)
     if cfg.is_encoder_decoder:
-        specs["cross_k"] = P(None, b_axis, None, None, None)
-        specs["cross_v"] = P(None, b_axis, None, None, None)
+        specs["cross_k"] = P(None, b_axis, None, h_axis, None)
+        specs["cross_v"] = P(None, b_axis, None, h_axis, None)
     return specs
+
+
+def serve_param_specs(params, mesh: Mesh, cfg,
+                      shard_projections: bool = False) -> dict:
+    """Bitwise-safe expert/tensor-parallel SERVING layout for a sharded
+    ``InferenceEngine`` (distinct from ``tp_param_specs``, whose row-parallel
+    wo/w_down layouts partial-sum the contraction — fast, but float-reorder
+    breaks the engine's byte-identity parity gate).
+
+      - MoE expert stacks [L?, E, d, f]: expert dim over "expert" when the
+        mesh has one, else "model". The expert dim is a GATHER dim, never a
+        contraction dim, so sharded storage resolves to exact values at use
+        — and for the paper's MoE serving case the expert stacks ARE the
+        parameter bytes, so this is where sharding pays.
+      - everything else (projections, wo, embeddings, norms, routers):
+        replicated. Tensor parallelism of the attention OPERATOR comes from
+        the head-sharded KV cache (``decode_state_specs(shard_heads=True)``)
+        — the einsums against the cache partition over heads, which is
+        where the decode FLOPs are — and the engine gathers head shards
+        before the ``wo`` contraction (see models/attention.py).
+
+    ``shard_projections=True`` additionally lays wq/wk/wv out column-
+    parallel on the head (output) dim. Mathematically each output element
+    keeps its full local contraction, but measured on the CPU backend the
+    surrounding GSPMD partitioning still reorders reductions by ~1e-6 —
+    enough to break byte-identity — so it is OFF by default and excluded
+    from the parity gate (a throughput-only layout for real TP meshes).
+    """
+    n_model = mesh.shape.get("model", 1)
+    heads_ok = (shard_projections and n_model > 1
+                and cfg.num_heads % n_model == 0
+                and cfg.num_kv_heads % n_model == 0)
+    e_axis = "expert" if "expert" in mesh.shape else \
+        ("model" if "model" in mesh.shape else None)
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        stacked = any(nm == "layers" for nm in names)
+        off = 1 if stacked else 0
+        name = names[-1]
+        if name in ("w_gate", "w_up", "w_down") and leaf.ndim - off == 3:
+            if e_axis is not None and leaf.shape[off] % mesh.shape[e_axis] == 0:
+                spec = [None] * leaf.ndim
+                spec[off] = e_axis
+                return P(*spec)
+            return P()
+        if name in ("wq", "wk", "wv") and leaf.ndim - off == 2 and heads_ok:
+            spec = [None] * leaf.ndim
+            spec[off + 1] = "model"
+            return P(*spec)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, params)
 
 
 def token_spec(mesh: Mesh, batch: int) -> P:

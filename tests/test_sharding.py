@@ -64,6 +64,40 @@ def test_assigned_arch_odd_dims_all_get_specs():
         spec_for_param(shape, mesh)   # must not raise
 
 
+def test_paged_decode_state_specs_cover_every_leaf():
+    """Regression: every leaf init_paged_state produces must get a spec
+    from decode_state_specs(paged=True) — an unspecced leaf would fall
+    back to default placement and silently break the donated sharded
+    dispatch. Covers decoder-only (pos/k/v/block_tables) and
+    encoder-decoder (cross_k/cross_v) families, and checks each sharded
+    dim divides its mesh axes."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import init_paged_state
+    from repro.sharding.rules import decode_state_specs
+
+    mesh = _mesh_stub({"data": 2, "model": 4})
+    for arch in ["qwen2-moe-a2.7b:reduced", "whisper-large-v3:reduced"]:
+        cfg = dataclasses.replace(get_config(arch), vocab_size=64,
+                                  num_layers=2)
+        state = init_paged_state(cfg, batch=4, num_blocks=8, block_size=8,
+                                 blocks_per_row=4)
+        specs = decode_state_specs(cfg, mesh, batch=4, paged=True,
+                                   shard_heads=True)
+        assert set(specs) == set(state), \
+            f"{arch}: spec keys {set(specs)} != state leaves {set(state)}"
+        for name, leaf in state.items():
+            spec = specs[name]
+            assert len(spec) <= leaf.ndim, (arch, name)
+            for dim, axis in zip(leaf.shape, spec):
+                if axis is None:
+                    continue
+                axes = axis if isinstance(axis, tuple) else (axis,)
+                size = math.prod(mesh.shape[a] for a in axes)
+                assert dim % size == 0, (arch, name, dim, axis)
+
+
 # -- ring attention (context parallelism, §2.1.6) ----------------------------
 
 
