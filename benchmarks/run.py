@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   sessions multi-turn KV reuse vs re-prefill on the real engine (§2.2.1)
   group  group-shared prefill: one prompt forked to a GRPO group (§2.1)
   paged  paged KV cache: block-pool capacity + COW forks vs dense rows
+  hybrid hybrid sessions: paged attention KV + pooled SSM state rows
   sharded mesh-parallel engine: per-shard KV bytes, stream parity (§2.1)
   fig5   grouped-GEMM saturation vs experts (§2.1.8)
   fig10  IcePop vs GSPO stability under staleness (§3.3)
@@ -27,6 +28,7 @@ MODULES = [
     ("fig_multiturn_sessions", "benchmarks.fig_multiturn_sessions"),
     ("fig_group_prefill", "benchmarks.fig_group_prefill"),
     ("fig_paged_kv", "benchmarks.fig_paged_kv"),
+    ("fig_hybrid_sessions", "benchmarks.fig_hybrid_sessions"),
     ("fig_sharded_engine", "benchmarks.fig_sharded_engine"),
     ("fig5_grouped_gemm", "benchmarks.fig5_grouped_gemm"),
     ("fig10_stability", "benchmarks.fig10_stability"),

@@ -1,0 +1,51 @@
+"""Family-gate guard (CI docs job).
+
+The serving stack composes per-layer-kind cache layouts through
+``repro.inference.cache_layout.CacheLayout`` — the ONE place allowed to
+inspect ``cfg.ssm`` to decide how a config's decode state is laid out.
+Engine admission, session, fork, park, and eviction code must branch on
+the layout object (``layout.paged``, ``layout.has_recurrent_state``,
+``layout.supports_sessions``, ...) instead of re-deriving family gates.
+
+This check fails the build if a family gate (``cfg.ssm is None`` /
+``cfg.ssm is not None`` / ``self.cfg.ssm``) reappears anywhere in
+``src/repro/inference`` outside the layout module, so the special-casing
+this refactor deleted cannot creep back in.
+
+Run:  python scripts_dev/check_family_gates.py   (from the repo root)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCOPE = ROOT / "src" / "repro" / "inference"
+ALLOWED = {SCOPE / "cache_layout.py"}
+GATE_RE = re.compile(r"(?:self\.)?cfg\.ssm\b")
+
+
+def main() -> int:
+    errors = []
+    for path in sorted(SCOPE.rglob("*.py")):
+        if path in ALLOWED:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if GATE_RE.search(line):
+                errors.append(
+                    f"{path.relative_to(ROOT)}:{lineno}: family gate "
+                    f"`cfg.ssm` outside cache_layout.py — branch on the "
+                    f"CacheLayout object instead: {line.strip()}")
+    for e in errors:
+        print(f"ERROR: {e}")
+    if errors:
+        return 1
+    n = len(list(SCOPE.rglob("*.py")))
+    print(f"family-gate check ok: {n} engine files, cfg.ssm confined to "
+          f"cache_layout.py")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,117 @@
+"""Cache-layout abstraction: per-layer-kind decode-state layouts.
+
+Every serving config is a composition of a few *layer state kinds*, each
+with its own layout needs:
+
+  attention_kv — a per-token K/V sequence that grows with the context.
+                 Pageable: it can live in a shared block pool behind
+                 per-slot block tables (the vLLM memory architecture).
+  ring_kv      — a window-sized K/V ring (SWA with ``max_seq`` inside the
+                 window). Slot writes wrap modulo the window, so a block
+                 table has nothing stable to point at: not pageable, and
+                 parking/resuming a ring is not supported.
+  ssm_state    — recurrent Mamba-2 state (conv window + scan state). A
+                 tiny *fixed-size* row per slot; paging buys nothing, so
+                 it stays a compact pooled state row. Fork = copy one
+                 small row; park = keep the row.
+  cross_kv     — encoder-decoder cross-attention K/V. Fixed
+                 ``encoder_seq_len`` length per slot: dense row.
+
+``CacheLayout.from_config`` is the ONE place the family inspection
+(``cfg.ssm``) happens; the engine, admission, fork, park, and eviction
+paths all compose off the layout object instead of re-deriving family
+gates. ``scripts_dev/check_family_gates.py`` enforces that no new
+``cfg.ssm is None`` branch appears outside this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.configs.base import ModelConfig
+
+# layer-kind names (also what `LayerStateKind.kind` holds)
+ATTENTION_KV = "attention_kv"
+RING_KV = "ring_kv"
+SSM_STATE = "ssm_state"
+CROSS_KV = "cross_kv"
+
+
+@dataclass(frozen=True)
+class LayerStateKind:
+    """One kind of per-layer decode state and how it may be laid out."""
+
+    kind: str                 # attention_kv | ring_kv | ssm_state | cross_kv
+    keys: Tuple[str, ...]     # decode-state dict keys this kind owns
+    pageable: bool            # may live in the shared block pool
+
+
+@dataclass(frozen=True)
+class CacheLayout:
+    """How a config's decode state is laid out at a given ``max_seq``.
+
+    ``paged`` / ``supports_sessions`` replace the engine's old scattered
+    gate predicates; ``kinds`` is the declarative per-layer-kind story the
+    stats and state plumbing compose over.
+    """
+
+    kinds: Tuple[LayerStateKind, ...]
+    paged: bool               # attention KV goes through the block pool
+    supports_sessions: bool   # caches can park/resume across turns
+    has_recurrent_state: bool
+    ring: bool                # window-sized ring KV (unpageable, no park)
+    n_prefix: int             # prepended meta-token cache entries
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, max_seq: int,
+                    allow_paging: bool = True) -> "CacheLayout":
+        ring = bool(cfg.sliding_window) and max_seq <= cfg.sliding_window
+        recurrent = cfg.ssm is not None  # the ONE family gate (see module doc)
+        kinds = []
+        if cfg.uses_attention:
+            if ring:
+                kinds.append(LayerStateKind(RING_KV, ("k", "v"), False))
+            else:
+                kinds.append(LayerStateKind(ATTENTION_KV, ("k", "v"), True))
+        if recurrent:
+            kinds.append(LayerStateKind(SSM_STATE, ("ssm_conv", "ssm_h"),
+                                        False))
+        if cfg.is_encoder_decoder:
+            kinds.append(LayerStateKind(CROSS_KV, ("cross_k", "cross_v"),
+                                        False))
+        paged = bool(allow_paging) and any(k.pageable for k in kinds)
+        return cls(kinds=tuple(kinds), paged=paged,
+                   supports_sessions=not ring,
+                   has_recurrent_state=recurrent, ring=ring,
+                   n_prefix=cfg.num_meta_tokens)
+
+    # -- key classification --------------------------------------------------
+    @property
+    def pageable_keys(self) -> Tuple[str, ...]:
+        """Decode-state keys living in the shared block pool (paged only)."""
+        if not self.paged:
+            return ()
+        return tuple(k for kind in self.kinds if kind.pageable
+                     for k in kind.keys)
+
+    @property
+    def state_row_keys(self) -> Tuple[str, ...]:
+        """Keys holding fixed-size per-slot state rows (SSM state,
+        cross-attention KV) — the compact pooled-row layout class."""
+        return tuple(k for kind in self.kinds
+                     if kind.kind in (SSM_STATE, CROSS_KV)
+                     for k in kind.keys)
+
+    # -- byte accounting (feeds EngineStats per-layout counters) -------------
+    def pageable_kv_bytes(self, state) -> int:
+        """Total bytes of block-pool K/V (0 for unpaged layouts)."""
+        return sum(state[k].nbytes for k in self.pageable_keys if k in state)
+
+    def state_row_bytes(self, state) -> int:
+        """Bytes of ONE slot's pooled state rows (row axis is dim 1)."""
+        total = 0
+        for key in self.state_row_keys:
+            if key in state:
+                arr = state[key]
+                total += arr.nbytes // max(1, arr.shape[1])
+        return total

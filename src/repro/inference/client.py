@@ -253,6 +253,12 @@ class InferencePool:
             "kv_blocks_peak": sum(e.stats.kv_blocks_peak
                                   for e in self.engines),
             "kv_bytes": sum(e.stats.kv_bytes for e in self.engines),
+            "pageable_kv_bytes": sum(e.stats.pageable_kv_bytes
+                                     for e in self.engines),
+            "pooled_state_bytes": sum(e.stats.pooled_state_bytes
+                                      for e in self.engines),
+            "parked_state_bytes": sum(e.stats.parked_state_bytes
+                                      for e in self.engines),
             "mesh_shapes": [e.stats.mesh_shape for e in self.engines],
             "kv_bytes_per_shard": [e.stats.kv_bytes_per_shard
                                    for e in self.engines],

@@ -28,9 +28,23 @@ power-of-two length buckets and prefilled up to ``num_slots`` at a time in
 one jitted call (``prefill_sample``), then scattered into the slot state in
 one more jitted call — so admission compiles O(num_length_buckets ×
 num_row_buckets) traces total instead of one trace per unique prompt
-length. Families with recurrent state (SSM/hybrid) fall back to
-exact-length row batches, because an SSM scan would fold pad tokens into
-its state.
+length. Recurrent-state (SSM/hybrid) rows bucket identically: the model's
+pad-masked scan (``models.ssm.ssm_apply`` with ``seq_lens``) passes the
+state through pad tokens exactly, so right padding is sound for every
+family.
+
+Cache layout (per-layer-kind state composition)
+-----------------------------------------------
+What the decode state looks like — and what the engine may do with it —
+is declared per layer kind by ``cache_layout.CacheLayout``: linear
+attention K/V is pageable through the block pool; a window-sized ring
+cache is not (and cannot park); recurrent SSM state is a tiny fixed-size
+per-slot *state row* (fork = copy one row, park = keep the row — never a
+pinned ``max_seq`` dense cache); cross-attention K/V is a fixed-length
+dense row. The engine composes these per config instead of branching on
+the family: a hybrid pages its attention layers through the shared
+``BlockAllocator`` while its SSM state rides the per-slot state rows
+through the same gather/scatter/fork dispatches.
 
 Engine sessions (multi-turn KV reuse)
 -------------------------------------
@@ -70,7 +84,8 @@ deadlock.
 
 Paged KV cache (block pool + block tables)
 ------------------------------------------
-For attention-only families the dense per-slot cache is replaced by the
+For layouts with pageable attention K/V (dense, MoE, hybrid — anything
+but a pure-SSM or ring cache) the dense per-slot cache is replaced by the
 vLLM memory architecture: one shared K/V pool of ``num_kv_blocks`` blocks
 (``kv_block_size`` tokens each) plus a per-slot block table. A
 refcounting ``BlockAllocator`` makes blocks the unit of admission
@@ -111,6 +126,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.inference.cache_layout import CacheLayout
 from repro.models import (extend_sample, fork_decode_rows, init_decode_state,
                           init_paged_state, paged_gather_rows,
                           paged_sample_step, paged_write_rows,
@@ -213,6 +229,10 @@ class EngineStats:
     kv_blocks_in_use: int = 0    # unique blocks off the free list
     kv_blocks_peak: int = 0      # high-water mark of kv_blocks_in_use
     kv_bytes: int = 0            # persistent K/V cache bytes (pool or dense)
+    # per-layout memory accounting (cache_layout.CacheLayout classes)
+    pageable_kv_bytes: int = 0   # K/V bytes in the shared block pool
+    pooled_state_bytes: int = 0  # per-slot state-row bytes (SSM/cross), total
+    parked_state_bytes: int = 0  # state-row bytes held by parked sessions
     # sharded-engine accounting (empty/equal-to-kv_bytes when unsharded)
     mesh_shape: str = ""         # "data=2,model=4" for a meshed engine
     kv_bytes_per_shard: int = 0  # K/V bytes resident per device shard
@@ -321,37 +341,27 @@ class InferenceEngine:
         self.policy_version = policy_version
         self.stats = EngineStats()
         self._min_bucket = min(min_prefill_bucket, max_seq)
-        # right-padding is unsound for recurrent-state families: the SSM
-        # scan would fold pad tokens into its state
-        self._pad_prompts = cfg.ssm is None
-        # sessions need a linear per-row cache the extend path can append
-        # to: recurrent state can't be continued per-row, a meta-token
-        # prefix offsets host position accounting, and a ring
-        # (window-sized) cache has a slot->position mapping the block
-        # write does not respect
-        self.supports_sessions = (self._pad_prompts
-                                  and cfg.num_meta_tokens == 0
-                                  and not (cfg.sliding_window
-                                           and max_seq <= cfg.sliding_window))
-        # paged KV cache: attention-only families with a linear cache.
-        # Recurrent state (SSM/hybrid) has nothing pageable and keeps the
-        # dense rows; a ring (window-sized) cache has a slot->position
-        # wraparound the linear block table does not express. The block
-        # size is rounded down to a power-of-two divisor of max_seq so
-        # blocks_per_row * block_size == max_seq exactly — the linearized
-        # (gathered) cache then has the dense cache's shape, which is what
-        # makes paged-vs-dense stream parity *bitwise*.
+        # per-layer-kind cache layout: what is pageable through the block
+        # pool, what stays a compact per-slot state row, and what the
+        # engine may therefore do (page, park sessions). This is the ONE
+        # place family structure is inspected — every admission / fork /
+        # park / evict path composes off the layout object.
+        self.layout = CacheLayout.from_config(
+            cfg, max_seq, allow_paging=self._supports_paging())
+        self.supports_sessions = self.layout.supports_sessions
+        self.paged = self.layout.paged
+        # meta-token prefix: cache entries (and _slot_len / block / bucket
+        # accounting) include the n_prefix prepended slots prefill writes
+        # before the text tokens
+        self.n_prefix = self.layout.n_prefix
+        # The block size is rounded down to a power-of-two divisor of
+        # max_seq so blocks_per_row * block_size == max_seq exactly — the
+        # linearized (gathered) cache then has the dense cache's shape,
+        # which is what makes paged-vs-dense stream parity *bitwise*.
         bs = max(1, min(int(kv_block_size), max_seq))
         while max_seq % bs:
             bs >>= 1
         self.kv_block_size = bs
-        # (meta tokens would offset every cache position by n_prefix,
-        # which the host-side block accounting does not model — same
-        # exclusion as supports_sessions)
-        self.paged = (self._supports_paging() and cfg.uses_attention
-                      and cfg.ssm is None and cfg.num_meta_tokens == 0
-                      and not (cfg.sliding_window
-                               and max_seq <= cfg.sliding_window))
 
         # cache dtype follows the served params dtype
         cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
@@ -386,6 +396,11 @@ class InferenceEngine:
         if "k" in self.state:
             self.stats.kv_bytes = int(self.state["k"].nbytes
                                       + self.state["v"].nbytes)
+        # per-layout byte accounting: pool bytes vs compact state-row bytes
+        self.stats.pageable_kv_bytes = self.layout.pageable_kv_bytes(
+            self.state)
+        self._state_row_bytes = self.layout.state_row_bytes(self.state)
+        self.stats.pooled_state_bytes = self._state_row_bytes * num_slots
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.pending: Deque[Union[Request, GroupRequest]] = deque()
         self.completed: List[Request] = []
@@ -647,8 +662,10 @@ class InferenceEngine:
         """Fused decode tick: serve + sample + finished-flag tracking.
         Paged engines read K/V through the block table and mask inactive
         rows' writes (a shared pool cannot tolerate parked-row drift
-        writes the way exclusively-owned dense rows can); the RNG split
-        and sampling math are identical either way."""
+        writes the way exclusively-owned dense rows can); both paths also
+        freeze inactive rows' recurrent SSM state, which — unlike dense
+        K/V drift — could never be overwritten back. The RNG split and
+        sampling math are identical either way."""
         self.stats.decode_traces += 1    # python side effect: trace-time only
         if self.paged:
             toks, lps, new_state, rng = paged_sample_step(
@@ -656,7 +673,8 @@ class InferenceEngine:
                 self.pcfg)
         else:
             toks, lps, new_state, rng = sample_step(
-                params, state, token, temps, rng, self.cfg, self.pcfg)
+                params, state, token, temps, rng, self.cfg, self.pcfg,
+                active=active)
         count = gen + active.astype(jnp.int32)
         finished = active & ((toks == self.eos_id) | (count >= max_new))
         new_token = jnp.where(active, toks, token)
@@ -996,6 +1014,11 @@ class InferenceEngine:
         if self.paged:
             self.stats.kv_blocks_in_use = self.allocator.in_use
             self.stats.kv_blocks_peak = self.allocator.peak
+        if self._state_row_bytes:
+            parked = sum(1 for i in range(self.num_slots)
+                         if self.slots[i] is None
+                         and self._slot_session[i] is not None)
+            self.stats.parked_state_bytes = parked * self._state_row_bytes
 
     def assert_kv_consistent(self) -> None:
         """Block-leak gate (runs at every ``run_until_idle`` teardown):
@@ -1022,12 +1045,12 @@ class InferenceEngine:
         return self.sessions.get(req.session_id)
 
     def _required_len(self, req: Request) -> int:
-        """Total conversation length this request implies (history + new
-        tokens) — the same bound a full re-prefill of the conversation
-        would have to satisfy."""
+        """Total cache entries this request implies (meta-token prefix +
+        history + new tokens) — the same bound a full re-prefill of the
+        conversation would have to satisfy."""
         sess = self._session_of(req)
         hist = len(sess.tokens) if sess is not None else 0
-        return hist + len(req.prompt_tokens)
+        return self.n_prefix + hist + len(req.prompt_tokens)
 
     def _is_resident_extend(self, req: Request) -> bool:
         """True when the request continues a session whose slot + KV cache
@@ -1160,17 +1183,14 @@ class InferenceEngine:
                 progress = True
                 continue
             prompt = self._effective_prompt(self.pending[0])
-            # exact-length rows for recurrent-state families
-            if not self._pad_prompts and prompts \
-                    and len(prompt) != len(prompts[0]):
-                break
             if self.paged:
                 # admission is gated on real KV capacity, not slot count:
                 # the prompt's blocks are claimed here (evicting parked
                 # LRU sessions if the free list is short) and the request
                 # WAITS at the queue head when the pool cannot serve it
                 # yet — backpressure, not a crash
-                blocks = self._alloc_evicting(self._blocks_for(len(prompt)))
+                blocks = self._alloc_evicting(
+                    self._blocks_for(self.n_prefix + len(prompt)))
                 if blocks is None:
                     break
                 block_lists.append(blocks)
@@ -1188,8 +1208,9 @@ class InferenceEngine:
         head waits for blocks; backpressure, not a crash)."""
         head = self.pending[0]
         head_sess = self.sessions[head.session_id]
+        # cache coordinates include the meta-token prefix
         S_b = self._extend_bucket(1 + len(head.prompt_tokens),
-                                  len(head_sess.tokens) - 1)
+                                  self.n_prefix + len(head_sess.tokens) - 1)
         reqs: List[Request] = []
         seen = set()
         progress = False
@@ -1201,7 +1222,7 @@ class InferenceEngine:
                 progress = True
                 continue
             sess = self.sessions[req.session_id]
-            pos = len(sess.tokens) - 1
+            pos = self.n_prefix + len(sess.tokens) - 1
             if 1 + len(req.prompt_tokens) > S_b or pos + S_b > self.max_seq:
                 break
             if self.paged and not self._reserve_extend_blocks(
@@ -1254,8 +1275,10 @@ class InferenceEngine:
         same ``_admit`` pass."""
         greq = self.pending[0]
         plen = len(greq.prompt_tokens)
-        full, tail = divmod(plen, self.kv_block_size)
-        doomed = plen > self.max_seq
+        # block math over cache entries: the meta prefix lands in the
+        # shared blocks ahead of the prompt tokens
+        full, tail = divmod(self.n_prefix + plen, self.kv_block_size)
+        doomed = self.n_prefix + plen > self.max_seq
         if not doomed and self.paged:
             # one member needs the shared full blocks plus (maybe) a tail
             # block; if even that exceeds the whole pool, waiting would
@@ -1328,10 +1351,8 @@ class InferenceEngine:
         k = len(members)
         prompt = np.asarray(greq.prompt_tokens, np.int32)
         plen = len(prompt)
-        if self._pad_prompts:
-            S_b = min(_pow2_bucket(plen, self._min_bucket), self.max_seq)
-        else:
-            S_b = plen
+        S_b = min(_pow2_bucket(plen, self._min_bucket),
+                  self.max_seq - self.n_prefix)
         tokens = np.zeros((1, S_b), np.int32)
         tokens[0, :plen] = prompt
         plens = np.full((1,), plen, np.int32)
@@ -1342,7 +1363,7 @@ class InferenceEngine:
             temps[r] = req.temperature
             maxnew[r] = max(1, req.max_new_tokens)
         for r in range(k):
-            self._slot_len[slot_ids[r]] = plen
+            self._slot_len[slot_ids[r]] = self.n_prefix + plen
         if self.paged:
             for r in range(k):
                 if r:
@@ -1377,7 +1398,8 @@ class InferenceEngine:
                 self.slots[slot_ids[r]] = req
                 row_active[r] = True
         if self.paged:
-            coords = self._build_fork_coords(slot_idx, S_b, k, shared, tails)
+            coords = self._build_fork_coords(slot_idx, self.n_prefix + S_b,
+                                             k, shared, tails)
             self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
                                     row_active, paged_coords=coords)
             # first-token finishes with no session to park for release
@@ -1402,12 +1424,13 @@ class InferenceEngine:
         n = len(reqs)
         lens = [len(p) for p in prompts]
         maxlen = max(lens)
-        assert maxlen <= self.max_seq, \
-            f"prompt ({maxlen} tokens) exceeds max_seq={self.max_seq}"
-        if self._pad_prompts:
-            S_b = min(_pow2_bucket(maxlen, self._min_bucket), self.max_seq)
-        else:
-            S_b = maxlen
+        assert self.n_prefix + maxlen <= self.max_seq, \
+            f"prompt ({maxlen} tokens + {self.n_prefix} prefix) exceeds " \
+            f"max_seq={self.max_seq}"
+        # bucket cap leaves room for the meta-token prefix the prefill
+        # prepends to every cache row
+        S_b = min(_pow2_bucket(maxlen, self._min_bucket),
+                  self.max_seq - self.n_prefix)
         R = _pow2_bucket(n)
         tokens = np.zeros((R, S_b), np.int32)
         plens = np.ones((R,), np.int32)
@@ -1419,7 +1442,7 @@ class InferenceEngine:
             plens[r] = len(p)
             temps[r] = req.temperature
             maxnew[r] = max(1, req.max_new_tokens)
-            self._slot_len[slot_ids[r]] = len(p)
+            self._slot_len[slot_ids[r]] = self.n_prefix + len(p)
             if self.paged:
                 assert not self._slot_blocks[slot_ids[r]], \
                     f"slot {slot_ids[r]} re-admitted while holding blocks"
@@ -1448,8 +1471,10 @@ class InferenceEngine:
                 self.slots[slot_ids[r]] = req
                 row_active[r] = True
         if self.paged:
-            coords = self._build_scatter_coords(slot_idx, S_b,
-                                                np.zeros((R,), np.int32))
+            # the dense prefill rows carry [0, n_prefix + plen) cache
+            # entries (meta prefix first): scatter the whole region
+            coords = self._build_scatter_coords(
+                slot_idx, self.n_prefix + S_b, np.zeros((R,), np.int32))
             self._scatter_exec(st, slot_idx, toks, temps, maxnew,
                                row_active, paged_coords=coords)
             # first-token finishes with no session to park for: reclaim
@@ -1485,7 +1510,7 @@ class InferenceEngine:
                 sess.tokens[-1:], np.asarray(req.prompt_tokens, np.int32)])
             tokens[r, :len(block)] = block
             ext_lens[r] = len(block)
-            start_pos[r] = len(sess.tokens) - 1
+            start_pos[r] = self.n_prefix + len(sess.tokens) - 1
             temps[r] = req.temperature
             maxnew[r] = max(1, req.max_new_tokens)
             gather_idx[r] = sess.slot
@@ -1507,8 +1532,10 @@ class InferenceEngine:
                 self.slots[self.sessions[req.session_id].slot] = req
                 row_active[r] = True
             # a full re-prefill would have re-processed the whole cached
-            # prefix on top of the block
-            self.stats.prefill_tokens_saved += int(start_pos[r])
+            # *text* prefix on top of the block (the meta-token prefix is
+            # not a prefilled token — exclude it from the savings)
+            self.stats.prefill_tokens_saved += \
+                int(start_pos[r]) - self.n_prefix
         if self.paged:
             coords = self._build_scatter_coords(slot_idx, S_b, start_pos)
             self._scatter_exec(st, slot_idx, toks, temps, maxnew,

@@ -49,7 +49,7 @@ class HostReferenceEngine(InferenceEngine):
         super().__init__(*args, **kwargs)
         cfg, pcfg, max_seq = self.cfg, self.pcfg, self.max_seq
         self._serve_logits = jax.jit(
-            lambda p, s, t: serve_step(p, s, t, cfg, pcfg),
+            lambda p, s, t, a: serve_step(p, s, t, cfg, pcfg, active=a),
             donate_argnums=(1,))
         self._prefill_logits = jax.jit(
             lambda p, b: prefill(p, b, cfg, max_seq=max_seq, pcfg=pcfg))
@@ -155,8 +155,10 @@ class HostReferenceEngine(InferenceEngine):
     def _decode_exec(self):
         self._rng, k = jax.random.split(self._rng)
         token = jnp.asarray(self._last_np)
+        active = jnp.asarray(
+            np.array([s is not None for s in self.slots], bool))
         logits, self.state = self._serve_logits(self.params, self.state,
-                                                token)
+                                                token, active)
         temps = np.array([s.temperature if s is not None else 1.0
                           for s in self.slots], np.float32)
         logits = jnp.asarray(logits, jnp.float32)

@@ -110,6 +110,10 @@ def main():
               f"{stats['cow_forks']} COW copies, "
               f"{stats['blocks_freed_on_evict']} blocks evicted, "
               f"{stats['kv_blocks_in_use']} still in use)")
+    if stats["pooled_state_bytes"]:
+        print(f"cache layout: {stats['pageable_kv_bytes']} pageable KV bytes, "
+              f"{stats['pooled_state_bytes']} pooled state-row bytes "
+              f"({stats['parked_state_bytes']} parked)")
     if any(stats["mesh_shapes"]):
         for i, (shape, per_shard) in enumerate(zip(
                 stats["mesh_shapes"], stats["kv_bytes_per_shard"])):

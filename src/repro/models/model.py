@@ -397,12 +397,42 @@ def _decoder_layer_decode(lp, x, pos, caches, cfg):
 
 _CACHE_KEYS = ("k", "v", "ssm_conv", "ssm_h", "cross_k", "cross_v")
 
+# recurrent per-row state: must be frozen (not drift-overwritten) for
+# inactive rows — see ``serve_step``'s ``active`` contract
+_RECURRENT_KEYS = ("ssm_conv", "ssm_h")
 
-def serve_step(params, state, token, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+
+def _freeze_inactive_recurrent(new_caches, old_caches, active):
+    """Keep inactive rows' recurrent state bitwise unchanged.
+
+    Caches are ``[L, B, ...]`` (row axis 1). ``jnp.where(True, a, b)``
+    selects ``a``'s bits exactly, so an all-active mask is an identity —
+    which is what keeps the masked path on the byte-parity contract."""
+    if active is None:
+        return new_caches
+    out = dict(new_caches)
+    for key in _RECURRENT_KEYS:
+        if key in out:
+            keep = active.reshape((1, -1) + (1,) * (out[key].ndim - 2))
+            out[key] = jnp.where(keep, out[key], old_caches[key])
+    return out
+
+
+def serve_step(params, state, token, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL,
+               active=None):
     """One decode step. token: [B] int32. Returns (logits [B,V], new state).
 
     `state["pos"]` is the *text* position (number of tokens already in the
-    cache, including any meta-token prefix handled by prefill)."""
+    cache, including any meta-token prefix handled by prefill).
+
+    ``active`` ([B] bool, optional) freezes the *recurrent* state of
+    inactive rows: a parked or empty slot keeps ticking garbage tokens,
+    which dense K/V tolerates (the decode mask never reads above ``pos``
+    and extend overwrites the drift) but a scan state folds in
+    irreversibly. With the mask, inactive rows keep their ssm_conv/ssm_h
+    bits unchanged; attention-only families have no such keys and the
+    mask is a no-op. ``pos`` still advances for every row, mirroring the
+    dense drift semantics."""
     B = token.shape[0]
     pos = state["pos"]
     x = params["embed"][token][:, None, :]
@@ -417,6 +447,7 @@ def serve_step(params, state, token, cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
         return x, new
 
     x, new_caches = jax.lax.scan(body, x, (params["layers"], per_layer))
+    new_caches = _freeze_inactive_recurrent(new_caches, per_layer, active)
     x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
     logits = (x[:, 0] @ head_weights(params, cfg)).astype(jnp.float32)
     new_state = dict(state)
@@ -435,9 +466,11 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: int,
     ``batch["prompt_lens"]`` [B]: the last-token logits are gathered per row
     at ``prompt_lens - 1`` and ``state["pos"]`` is set per row, so decode
     overwrites the padded cache tail and the decode attention mask
-    (``k_idx <= pos``) never reads it. Right padding is only sound for
-    families without recurrent state — an SSM scan would fold pad tokens
-    into its state — callers gate on ``cfg.ssm is None``.
+    (``k_idx <= pos``) never reads it. Recurrent (SSM/hybrid) layers are
+    pad-masked instead: ``ssm_apply`` receives the per-row valid lengths
+    and forces dt to 0 at pad positions, so pads pass the scan state
+    through exactly and the conv state window ends at each row's last
+    valid token — right padding is sound for every family.
     """
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -452,13 +485,17 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: int,
 
     layers = params["layers"]
     L = cfg.num_layers
+    # SSM valid lengths include the meta-token prefix (meta rows are real
+    # scan inputs; only right-pad tail positions must be masked out)
+    ssm_lens = None if prompt_lens is None else \
+        prompt_lens.astype(jnp.int32) + n_prefix
 
     def body(x, inp):
         lp, caches = inp
         new = dict(caches)
         h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
         if cfg.family == "ssm":
-            out, st = ssm_apply(lp["ssm"], h, cfg)
+            out, st = ssm_apply(lp["ssm"], h, cfg, seq_lens=ssm_lens)
             new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
             x = x + out
         else:
@@ -480,7 +517,7 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: int,
                 new["v"] = jax.lax.dynamic_update_slice_in_dim(
                     caches["v"], v.astype(caches["v"].dtype), 0, axis=1)
             if cfg.parallel_ssm:
-                ssm_out, st = ssm_apply(lp["ssm"], h, cfg)
+                ssm_out, st = ssm_apply(lp["ssm"], h, cfg, seq_lens=ssm_lens)
                 new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
                 attn_out = 0.5 * (
                     rmsnorm(attn_out, lp["attn_out_norm"], cfg.rms_eps)
@@ -517,21 +554,39 @@ def prefill(params, batch, cfg: ModelConfig, max_seq: int,
     return logits, state
 
 
-def _decoder_layer_extend(lp, x, positions, caches, cfg, pcfg):
+def _decoder_layer_extend(lp, x, positions, caches, cfg, pcfg, ext_lens=None):
     """One layer over a block of new tokens continuing an existing cache.
 
     The multi-token sibling of ``_decoder_layer_decode``: K/V for the block
     are written into the caches at ``positions`` and each token attends
-    over the full cache prefix. SSM/hybrid families are excluded by the
-    engine's session gate (their recurrent state cannot be right-padded or
-    continued per-row here).
+    over the full cache prefix. Recurrent (SSM/hybrid) layers continue
+    their per-row scan state through ``ssm_apply`` with ``ext_lens`` as the
+    pad mask — right-padded extend blocks pass the state through pads
+    exactly, same contract as prefill.
     """
     new = dict(caches)
     h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
-    attn_out, k_cache, v_cache = attn_extend_apply(
-        lp["attn"], h, caches["k"], caches["v"], positions, cfg)
-    new["k"], new["v"] = k_cache, v_cache
-    x = x + attn_out
+    if cfg.family == "ssm":
+        out, st = ssm_apply(lp["ssm"], h, cfg,
+                            state={"conv": caches["ssm_conv"],
+                                   "ssm": caches["ssm_h"]},
+                            seq_lens=ext_lens)
+        new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
+        x = x + out
+    else:
+        attn_out, k_cache, v_cache = attn_extend_apply(
+            lp["attn"], h, caches["k"], caches["v"], positions, cfg)
+        new["k"], new["v"] = k_cache, v_cache
+        if cfg.parallel_ssm:
+            ssm_out, st = ssm_apply(lp["ssm"], h, cfg,
+                                    state={"conv": caches["ssm_conv"],
+                                           "ssm": caches["ssm_h"]},
+                                    seq_lens=ext_lens)
+            new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
+            attn_out = 0.5 * (
+                rmsnorm(attn_out, lp["attn_out_norm"], cfg.rms_eps)
+                + rmsnorm(ssm_out, lp["ssm_out_norm"], cfg.rms_eps))
+        x = x + attn_out
     if cfg.is_encoder_decoder:
         h = rmsnorm(x, lp["ln_cross"], cfg.rms_eps)
         x = x + cross_attn_apply(lp["cross"], h, caches["cross_k"],
@@ -559,6 +614,8 @@ def extend(params, state, batch, start_pos, cfg: ModelConfig,
     contract as ``prefill``: logits gathered at ``prompt_lens - 1``,
     ``pos`` advanced by ``prompt_lens``, padded-tail cache writes land
     above ``pos`` and are never read before decode overwrites them.
+    Recurrent (SSM/hybrid) rows continue their scan state with pads
+    masked out, so the same bucketing is sound for every family.
     Callers must guarantee ``start_pos + S_b <= S_max``.
     """
     tokens = batch["tokens"]
@@ -572,7 +629,8 @@ def extend(params, state, batch, start_pos, cfg: ModelConfig,
 
     def body(x, inp):
         lp, caches = inp
-        return _decoder_layer_extend(lp, x, positions, caches, cfg, pcfg)
+        return _decoder_layer_extend(lp, x, positions, caches, cfg, pcfg,
+                                     ext_lens=ext_lens.astype(jnp.int32))
 
     per_layer = {k: state[k] for k in _CACHE_KEYS if k in state}
     x, new_caches = jax.lax.scan(body, x, (params["layers"], per_layer))
@@ -629,16 +687,18 @@ def sample_logits(key, logits, temps):
 
 
 def sample_step(params, state, token, temps, rng, cfg: ModelConfig,
-                pcfg=DEFAULT_PARALLEL):
+                pcfg=DEFAULT_PARALLEL, active=None):
     """One fused decode tick: serve_step + on-device sampling.
 
     Consumes one split of `rng` per call (the engine's RNG discipline —
     the host-path reference engine performs the identical split sequence,
-    which is what makes per-token parity checkable). Returns
+    which is what makes per-token parity checkable). ``active`` freezes
+    inactive rows' recurrent state (see ``serve_step``). Returns
     (tokens [B], logprobs [B], new_state, new_rng).
     """
     rng, k = jax.random.split(rng)
-    logits, new_state = serve_step(params, state, token, cfg, pcfg)
+    logits, new_state = serve_step(params, state, token, cfg, pcfg,
+                                   active=active)
     toks, lps = sample_logits(k, logits, temps)
     return toks, lps, new_state, rng
 
@@ -729,13 +789,14 @@ def init_paged_state(cfg: ModelConfig, batch: int, num_blocks: int,
     ``block_tables`` ``[batch, blocks_per_row]`` maps each row's logical
     block index to a physical pool block (the allocator on the host is the
     source of truth; unallocated entries hold 0 — a valid id whose reads
-    are always masked by ``k_idx <= pos``). Cross-attention caches stay
-    dense per-row: they are fixed ``encoder_seq_len`` length, so paging
-    buys nothing. Attention-only families (no recurrent state) — the
-    engine's paging gate enforces this.
+    are always masked by ``k_idx <= pos``). Per-layer state that is NOT a
+    growing KV sequence stays dense per-row: cross-attention caches are
+    fixed ``encoder_seq_len`` length, and recurrent SSM state (hybrid
+    families) is a tiny fixed-size row — paging buys neither anything.
+    Requires ``cfg.uses_attention`` (a pure-SSM family has no KV to page;
+    the engine's layout keeps it on dense state rows).
     """
-    assert cfg.uses_attention and cfg.ssm is None, \
-        "paged state requires an attention-only family"
+    assert cfg.uses_attention, "paged state requires attention layers"
     dtype = jnp.dtype(dtype or cfg.dtype)
     L, hd = cfg.num_layers, cfg.resolved_head_dim
     pool_shape = (L, num_blocks, block_size, cfg.num_kv_heads, hd)
@@ -745,6 +806,12 @@ def init_paged_state(cfg: ModelConfig, batch: int, num_blocks: int,
         "v": jnp.zeros(pool_shape, dtype),
         "block_tables": jnp.zeros((batch, blocks_per_row), jnp.int32),
     }
+    if cfg.ssm is not None:
+        one = init_ssm_state(cfg, batch, dtype)
+        state["ssm_conv"] = jnp.broadcast_to(one["conv"][None],
+                                             (L,) + one["conv"].shape).copy()
+        state["ssm_h"] = jnp.broadcast_to(one["ssm"][None],
+                                          (L,) + one["ssm"].shape).copy()
     if cfg.is_encoder_decoder:
         T = cfg.encoder_seq_len
         state["cross_k"] = jnp.zeros((L, batch, T, cfg.num_kv_heads, hd),
@@ -759,16 +826,19 @@ def paged_gather_rows(state, gather_idx):
     rows (caches ``[L, R, blocks_per_row·bs, ...]``) — the bridge that
     lets the continuation ``extend`` path run its *unchanged* dense math
     against a paged cache. Entries past a row's allocation gather block 0
-    garbage; the extend mask (``k_idx <= q_pos``) never reads it."""
+    garbage; the extend mask (``k_idx <= q_pos``) never reads it. Non-pool
+    per-row caches (SSM state rows, cross-attention KV) gather straight
+    through on the row axis."""
     table = state["block_tables"][gather_idx]          # [R, blocks_per_row]
     R, mb = table.shape
     rows = {"pos": state["pos"][gather_idx]}
     for key in _PAGED_POOL_KEYS:
         g = state[key][:, table]                       # [L, R, mb, bs, H, hd]
         rows[key] = g.reshape(g.shape[0], R, mb * g.shape[3], *g.shape[4:])
-    for key in ("cross_k", "cross_v"):
-        if key in state:
-            rows[key] = state[key][:, gather_idx]
+    for key in state:
+        if key in _PAGED_POOL_KEYS or key in ("pos", "block_tables"):
+            continue
+        rows[key] = state[key][:, gather_idx]
     return rows
 
 
@@ -792,23 +862,33 @@ def paged_write_rows(state, rows, slot_idx, src_pos, blk_pos, off_pos,
         vals = jnp.take_along_axis(rows[key], idx, axis=2)  # [L, R, S, H, hd]
         new[key] = state[key].at[:, blk_pos, off_pos].set(
             vals.astype(state[key].dtype), mode="drop")
-    for key in ("cross_k", "cross_v"):
-        if key in state:
-            new[key] = state[key].at[:, slot_idx].set(
-                rows[key].astype(state[key].dtype), mode="drop")
+    for key in state:
+        if key in _PAGED_POOL_KEYS or key in ("pos", "block_tables"):
+            continue
+        new[key] = state[key].at[:, slot_idx].set(
+            rows[key].astype(state[key].dtype), mode="drop")
     return new
 
 
 def _decoder_layer_paged_decode(lp, x, pos, caches, table, write_block,
                                 write_off, cfg, pcfg):
     """One layer, one token, against the block pool. The paged sibling of
-    ``_decoder_layer_decode`` for attention-only families."""
+    ``_decoder_layer_decode``; hybrid layers run their SSM mixer against
+    the dense per-row state rows alongside the paged attention."""
     new = dict(caches)
     h = rmsnorm(x, lp["ln1"], cfg.rms_eps)
     attn_out, kp, vp = attn_paged_decode_apply(
         lp["attn"], h, caches["k"], caches["v"], table, pos,
         write_block, write_off, cfg, use_pallas=pcfg.use_pallas)
     new["k"], new["v"] = kp, vp
+    if cfg.parallel_ssm:
+        ssm_out, st = ssm_decode_step(lp["ssm"], h,
+                                      {"conv": caches["ssm_conv"],
+                                       "ssm": caches["ssm_h"]}, cfg)
+        new["ssm_conv"], new["ssm_h"] = st["conv"], st["ssm"]
+        attn_out = 0.5 * (
+            rmsnorm(attn_out, lp["attn_out_norm"], cfg.rms_eps)
+            + rmsnorm(ssm_out, lp["ssm_out_norm"], cfg.rms_eps))
     x = x + attn_out
     if cfg.is_encoder_decoder:
         h = rmsnorm(x, lp["ln_cross"], cfg.rms_eps)
@@ -831,9 +911,9 @@ def paged_serve_step(params, state, token, active, cfg: ModelConfig,
     corrupt pool blocks owned — or, after a copy-on-write group fork,
     *shared* — by live rows. (The dense path tolerates parked-row drift
     writes because each row owns its cache exclusively; a shared pool
-    does not have that luxury.) ``pos`` still advances for every row,
-    mirroring the dense drift semantics."""
-    assert cfg.ssm is None, "paged decode requires an attention-only family"
+    does not have that luxury.) ``active`` also freezes inactive rows'
+    recurrent SSM state (hybrid families) — see ``serve_step``. ``pos``
+    still advances for every row, mirroring the dense drift semantics."""
     B = token.shape[0]
     pos = state["pos"]
     table = state["block_tables"]
@@ -859,6 +939,7 @@ def paged_serve_step(params, state, token, active, cfg: ModelConfig,
         return x, new
 
     x, new_caches = jax.lax.scan(body, x, (params["layers"], per_layer))
+    new_caches = _freeze_inactive_recurrent(new_caches, per_layer, active)
     x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
     logits = (x[:, 0] @ head_weights(params, cfg)).astype(jnp.float32)
     new_state = dict(state)

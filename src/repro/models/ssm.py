@@ -49,8 +49,12 @@ def _split_proj(proj, cfg):
     return z, xs, Bc, Cc, dt
 
 
-def _causal_conv(x, w, b, state=None):
+def _causal_conv(x, w, b, state=None, seq_lens=None):
     """Depthwise causal conv. x: [B,S,C]; w: [K,C]; state: [B,K-1,C] or None.
+
+    seq_lens: optional [B] int32 valid lengths for right-padded rows; the
+    returned state is then the window ending at each row's last *valid*
+    input rather than the tail of the (possibly padded) sequence.
 
     Returns (y [B,S,C], new_state [B,K-1,C]).
     """
@@ -59,7 +63,13 @@ def _causal_conv(x, w, b, state=None):
         state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([state, x], axis=1)
     y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
-    new_state = xp[:, xp.shape[1] - (K - 1):]
+    if seq_lens is None:
+        new_state = xp[:, xp.shape[1] - (K - 1):]
+    else:
+        # row p's last K-1 valid inputs live at xp[p : p + K-1] (xp carries
+        # the K-1 old state entries in front, so this also covers p < K-1)
+        idx = seq_lens[:, None] + jnp.arange(K - 1)[None, :]
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return y, new_state
 
 
@@ -110,8 +120,14 @@ def _ssd_chunk_scan(xh, dt, dA_log, Bc, Cc, h0, chunk):
     return y[:, :S], hT
 
 
-def ssm_apply(params, x, cfg, *, state=None, use_pallas=False):
+def ssm_apply(params, x, cfg, *, state=None, seq_lens=None, use_pallas=False):
     """Full-sequence (train/prefill) Mamba-2 mixer.
+
+    seq_lens: optional [B] int32 valid lengths for right-padded rows. Pad
+    positions get dt forced to 0, so their decay factor is exp(0) = 1 and
+    their input contribution dt*B*x is 0 — the recurrent state passes
+    through pads exactly, making bucketed (padded) prefill sound. Outputs
+    at pad positions are garbage and must be discarded by the caller.
 
     Returns (y [B,S,d], new_state dict) — state carried for decode.
     """
@@ -126,7 +142,7 @@ def ssm_apply(params, x, cfg, *, state=None, use_pallas=False):
     conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
     conv_state = state["conv"] if state else None
     conv_out, conv_state = _causal_conv(conv_in, params["conv_w"], params["conv_b"],
-                                        conv_state)
+                                        conv_state, seq_lens=seq_lens)
     conv_out = jax.nn.silu(conv_out)
     xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + g * n], axis=-1)
 
@@ -135,6 +151,9 @@ def ssm_apply(params, x, cfg, *, state=None, use_pallas=False):
     Bh = jnp.repeat(Bc.reshape(B, S, g, n), rep, axis=2).astype(jnp.float32)
     Ch = jnp.repeat(Cc.reshape(B, S, g, n), rep, axis=2).astype(jnp.float32)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,nh]
+    if seq_lens is not None:
+        valid = jnp.arange(S)[None, :] < seq_lens[:, None]            # [B,S]
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -jnp.exp(params["A_log"])                                     # [nh]
     dA_log = dt * A                                                   # [B,S,nh]
 

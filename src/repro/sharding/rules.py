@@ -226,6 +226,12 @@ def decode_state_specs(cfg, mesh: Mesh, *, batch: int,
             "v": P(None, None, None, h_axis, None),
             "block_tables": P(b_axis, None),
         }
+        if cfg.ssm is not None:      # hybrid: SSM state rows stay dense
+            nh = cfg.ssm.n_heads(cfg.d_model)
+            nh_axis = "model" if ("model" in mesh.shape
+                                  and nh % mesh.shape["model"] == 0) else None
+            specs["ssm_conv"] = P(None, b_axis, None, None)
+            specs["ssm_h"] = P(None, b_axis, nh_axis, None, None)
         if cfg.is_encoder_decoder:   # cross caches stay dense per-row
             specs["cross_k"] = P(None, b_axis, None, h_axis, None)
             specs["cross_v"] = P(None, b_axis, None, h_axis, None)

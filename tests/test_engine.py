@@ -158,6 +158,25 @@ def test_bucketed_prefill_bounds_traces(setup):
     assert eng.stats.prefill_requests == len(lengths)
 
 
+def test_bucketed_prefill_bounds_traces_ssm():
+    """Regression: SSM prefill used to bypass bucketing with exact-length
+    rows (one compiled trace per distinct prompt length). Pad-masked
+    recurrent prefill routes SSM admission through the same power-of-two
+    buckets as attention, so trace counts stay O(num_buckets)."""
+    cfg = dataclasses.replace(get_config("mamba2-370m:reduced"),
+                              vocab_size=TOKENIZER.vocab_size)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=64, seed=0)
+    lengths = [2, 3, 5, 7, 9, 11, 13, 17, 19, 23, 26, 29, 31, 33]
+    for i, L in enumerate(lengths):
+        eng.submit(_req(i, prompt_len=L, max_new=3 + i % 4))
+    eng.run_until_idle()
+    assert len(eng.drain_completed()) == len(lengths)
+    assert eng.stats.prefill_traces < len(set(lengths))
+    assert eng.stats.decode_traces == 1
+    assert eng.stats.prefills < len(lengths)
+
+
 def test_request_finishing_at_first_token(setup):
     """max_new_tokens=1 finishes at the prefill-sampled token and must
     release its slot without a stray decode token."""

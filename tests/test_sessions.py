@@ -37,6 +37,38 @@ def setup():
     return cfg, params
 
 
+# session lifecycle runs for every serving family: dense attention, pure
+# SSM (recurrent state rows, unpaged), and hybrid (paged attention KV +
+# pooled SSM state + meta-token prefix). hymba's reduced sliding window is
+# 64, so family tests use max_seq=128 to stay on the non-ring layout.
+FAMILIES = ["minitron-4b:reduced", "mamba2-370m:reduced", "hymba-1.5b:reduced"]
+
+
+@pytest.fixture(scope="module", params=FAMILIES)
+def fam_setup(request):
+    cfg = dataclasses.replace(get_config(request.param),
+                              vocab_size=TOKENIZER.vocab_size, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _assert_streams_match(a, b, *, exact_logprobs):
+    """Family-aware stream comparison. Tokens / versions / finish reasons
+    are always exact. Logprobs are bitwise for attention families; for
+    recurrent families the extend path re-enters the chunked scan from
+    carried state while re-prefill recomputes from scratch — same math,
+    different reassociation — so cross-mode logprobs get a float32
+    tolerance instead."""
+    assert len(a) == len(b)
+    for sa, sb in zip(a, b):
+        assert sa[0] == sb[0]            # completion tokens
+        assert sa[2:] == sb[2:]          # versions, finish reason
+        if exact_logprobs:
+            assert sa[1] == sb[1]
+        else:
+            np.testing.assert_allclose(sa[1], sb[1], rtol=2e-4, atol=2e-4)
+
+
 PROMPT = (np.arange(12, dtype=np.int32) % 40) + 10
 DELTAS = [(np.arange(7, dtype=np.int32) % 30) + 60,
           (np.arange(5, dtype=np.int32) % 30) + 80,
@@ -87,56 +119,68 @@ def _run_conversation(eng, *, use_session, prompt=PROMPT, deltas=DELTAS,
     return streams
 
 
-def test_session_extend_matches_full_reprefill(setup):
-    """Byte-identical streams, >=2x fewer prefilled tokens."""
-    cfg, params = setup
+def test_session_extend_matches_full_reprefill(fam_setup):
+    """Identical token streams, >=2x fewer prefilled tokens — for every
+    serving family (dense, SSM, hybrid)."""
+    cfg, params = fam_setup
     sess_eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=7)
     base_eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=7)
     s = _run_conversation(sess_eng, use_session=True)
     b = _run_conversation(base_eng, use_session=False)
-    assert s == b    # tokens, logprobs, versions, finish reasons — exact
+    _assert_streams_match(s, b, exact_logprobs=cfg.ssm is None)
     assert sess_eng.stats.extends == len(DELTAS)
     assert sess_eng.stats.prefill_tokens * 2 <= base_eng.stats.prefill_tokens
     assert sess_eng.stats.prefill_tokens_saved > 0
     assert sess_eng.stats.session_fallbacks == 0
 
 
-def test_session_parity_across_inflight_update(setup):
+def test_session_parity_across_inflight_update(fam_setup):
     """A weight update landing mid-conversation must stamp the same
-    version boundaries in both modes (one trajectory, multiple policies)."""
-    cfg, params = setup
+    version boundaries in both modes (one trajectory, multiple policies).
+    For every family this also exercises the stale-cache invalidation:
+    the parked cache was built under version 0, so the turn after the
+    update falls back to a full re-prefill in the session run."""
+    cfg, params = fam_setup
     p2 = jax.tree_util.tree_map(lambda x: x * 1.01, params)
     runs = []
     for use_session in (True, False):
         eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=3)
         runs.append(_run_conversation(eng, use_session=use_session,
                                       update_at=8, new_params=p2))
-    assert runs[0] == runs[1]
+    _assert_streams_match(runs[0], runs[1], exact_logprobs=cfg.ssm is None)
     versions = [v for turn in runs[0] for v in turn[2]]
     assert versions[0] == 0 and versions[-1] == 1, \
         "update must land mid-conversation for the test to mean anything"
 
 
-def test_session_matches_host_reference(setup):
+def test_session_matches_host_reference(fam_setup):
     """The pre-fusion host path drives the same extend scheduling: the
-    PR-1 parity oracle extends to sessions."""
-    cfg, params = setup
+    PR-1 parity oracle extends to sessions — for every family, including
+    the unpaged-oracle-vs-paged-hybrid pairing."""
+    cfg, params = fam_setup
+    p2 = jax.tree_util.tree_map(lambda x: x * 1.01, params)
     fused = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=11)
     host = HostReferenceEngine(params, cfg, num_slots=2, max_seq=128,
                                seed=11)
-    sf = _run_conversation(fused, use_session=True)
-    sh = _run_conversation(host, use_session=True)
+    sf = _run_conversation(fused, use_session=True, update_at=8,
+                           new_params=p2)
+    sh = _run_conversation(host, use_session=True, update_at=8,
+                           new_params=p2)
+    versions = set()
     for a, b in zip(sf, sh):
         assert a[0] == b[0] and a[2] == b[2] and a[3] == b[3]
         np.testing.assert_allclose(a[1], b[1], atol=1e-5)
-    assert host.stats.extends == fused.stats.extends == len(DELTAS)
+        versions.update(a[2])
+    assert versions == {0, 1}, "update must land mid-conversation"
+    assert host.stats.session_fallbacks == fused.stats.session_fallbacks
 
 
-def test_lru_eviction_fallback_parity(setup):
+def test_lru_eviction_fallback_parity(fam_setup):
     """Two sessions fighting over one slot: every turn evicts the other
     session, every follow-up turn falls back to full re-prefill — and the
-    streams still match the no-session baseline exactly."""
-    cfg, params = setup
+    streams still match the no-session baseline exactly. For recurrent
+    families the eviction path must also drop the parked SSM state row."""
+    cfg, params = fam_setup
 
     def interleaved(use_session):
         eng = InferenceEngine(params, cfg, num_slots=1, max_seq=160, seed=5)
@@ -166,7 +210,10 @@ def test_lru_eviction_fallback_parity(setup):
 
     s, st_s = interleaved(True)
     b, st_b = interleaved(False)
-    assert s == b
+    for sid in (0, 1):
+        _assert_streams_match([x + ("",) for x in s[sid]],
+                              [x + ("",) for x in b[sid]],
+                              exact_logprobs=cfg.ssm is None)
     # one slot, two live sessions: admissions must have evicted parked
     # sessions and their next turns re-prefilled in full
     assert st_s.session_evictions >= 2
@@ -196,6 +243,39 @@ def test_parked_cache_survives_unrelated_decode_traffic(setup):
     for t, (tok, lp) in enumerate(zip(r2.completion, r2.logprobs)):
         model_lp = float(logp[off - 1 + t, tok])
         assert abs(model_lp - lp) < 2e-3, (t, model_lp, lp)
+
+
+def test_parked_state_frozen_under_unrelated_traffic(fam_setup):
+    """While a session is parked, other slots keep decoding and the jitted
+    tick advances every row. For recurrent families the parked row's SSM
+    state must be FROZEN (the active mask gates the state write) — unlike
+    attention K/V, a drifted recurrent state can't be masked away at read
+    time. The parked turn's streams must match a no-session baseline that
+    saw the same unrelated traffic."""
+    cfg, params = fam_setup
+    other = (np.arange(6, dtype=np.int32) % 40) + 10
+
+    def run(use_session):
+        eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=9)
+        sid = 0 if use_session else None
+        if use_session:
+            eng.open_session(0)
+        r1 = _drain_one(eng, Request(0, "s", PROMPT, 5, session_id=sid))
+        # ~20 unrelated decode ticks while the session is parked
+        _drain_one(eng, Request(50, "other", other, 20))
+        toks2 = (DELTAS[0] if use_session else
+                 np.concatenate([PROMPT, np.asarray(r1.completion, np.int32),
+                                 DELTAS[0]]))
+        r2 = _drain_one(eng, Request(1, "s", toks2, 5, session_id=sid))
+        if use_session:
+            eng.close_session(0)
+        return [(tuple(r.completion), tuple(r.logprobs), tuple(r.versions),
+                 r.finish_reason) for r in (r1, r2)], eng.stats
+
+    s, st = run(True)
+    b, _ = run(False)
+    _assert_streams_match(s, b, exact_logprobs=cfg.ssm is None)
+    assert st.extends == 1 and st.session_fallbacks == 0
 
 
 def test_prompt_overflow_finishes_gracefully(setup):
