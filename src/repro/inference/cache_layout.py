@@ -85,6 +85,19 @@ class CacheLayout:
                    has_recurrent_state=recurrent, ring=ring,
                    n_prefix=cfg.num_meta_tokens)
 
+    @property
+    def supports_speculation(self) -> bool:
+        """Whether draft-and-verify multi-token decode can roll back.
+
+        Rejecting a speculative tail is a ``pos`` rewind plus (paged)
+        dropping tail block refs — sound only when all growing state is
+        positional K/V masked by ``k_idx <= pos``. Recurrent (SSM/hybrid)
+        scan state folds every token in irreversibly (no rewind without a
+        checkpoint copy), and a ring cache's wrapping writes may have
+        overwritten live window slots, so both disable speculation.
+        """
+        return not self.ring and not self.has_recurrent_state
+
     # -- key classification --------------------------------------------------
     @property
     def pageable_keys(self) -> Tuple[str, ...]:

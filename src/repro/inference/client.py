@@ -265,6 +265,18 @@ class InferencePool:
             "cow_forks": sum(e.stats.cow_forks for e in self.engines),
             "blocks_freed_on_evict": sum(e.stats.blocks_freed_on_evict
                                          for e in self.engines),
+            # speculative decoding (all zero when spec_draft=0)
+            "spec_rounds": sum(e.stats.spec_rounds for e in self.engines),
+            "spec_drafted_tokens": sum(e.stats.spec_drafted_tokens
+                                       for e in self.engines),
+            "spec_accepted_tokens": sum(e.stats.spec_accepted_tokens
+                                        for e in self.engines),
+            "spec_rejected_tokens": sum(e.stats.spec_rejected_tokens
+                                        for e in self.engines),
+            "spec_committed_tokens": sum(e.stats.spec_committed_tokens
+                                         for e in self.engines),
+            "spec_saved_ticks": sum(e.stats.spec_saved_ticks
+                                    for e in self.engines),
         }
 
 

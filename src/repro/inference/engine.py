@@ -103,6 +103,38 @@ drain. Decode reads K/V through the table (``models.paged_sample_step``
 ``use_pallas``); prefill/extend keep their dense math and convert at the
 scatter/gather boundary, which keeps the streams bitwise-comparable.
 
+Speculative decoding (self-drafting draft-and-verify)
+-----------------------------------------------------
+Decode is otherwise one token per fused dispatch; at small active-param
+counts the tick is memory-bound and the hardware idles between one-token
+readbacks. With ``spec_draft=k`` the engine adds a draft-and-verify round
+before each tick: a prompt-lookup drafter scans the slot's own token
+history (session history + prompt + completion so far) for the longest
+n-gram match ending at the current suffix — the *earliest* occurrence,
+so the continuation copied is long — and proposes up to k candidate
+tokens for free (no draft model; agentic multi-turn rollouts are full of
+repeated tool-output spans). Verification is ONE bucketed extend-path
+dispatch over the drafted slots: each row's block is ``[t0, d1..dk]``
+(the pending sampled token then the candidates, right-padded to a fixed
+power-of-two bucket so verify compiles O(row-bucket) traces), and the
+model samples at EVERY block offset — offset j's sample is the token the
+sequential decode would have produced at position ``start+j+1``, so the
+longest prefix of samples matching the drafts commits in bulk, plus the
+first mismatching sample as a free bonus/correction token. Rejected
+tails roll back by construction: dense rows just rewind ``pos`` (the
+``k_idx <= pos`` mask hides the dead K/V), paged rows additionally drop
+the tail block refs claimed for the round (claim-then-release on the
+``BlockAllocator``). Families whose state cannot rewind — recurrent SSM
+scan state, ring caches — gate speculation off via
+``CacheLayout.supports_speculation``. The RNG discipline extends
+unchanged: one split per verify dispatch, sampling on the identical
+[R, S, V] block shape in the fused and host-reference paths, and the
+draft/eligibility decisions are deterministic host logic — so the
+byte-identical-streams contract survives speculation. (One documented
+edge: under extreme pool pressure a paged engine may skip a slot's round
+that the unpaged oracle runs — default pool sizing makes reservation
+infallible, which is what the parity suites pin.)
+
 ``HostReferenceEngine`` (repro.inference.reference) keeps the pre-fusion
 host path alive as the parity oracle and Fig. 4 baseline: same scheduling
 and RNG discipline, but eager host-side sampling with per-token scalar
@@ -118,7 +150,7 @@ from __future__ import annotations
 import contextlib
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Union
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -127,7 +159,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.inference.cache_layout import CacheLayout
-from repro.models import (extend_sample, fork_decode_rows, init_decode_state,
+from repro.models import (extend_sample, extend_verify_sample,
+                          fork_decode_rows, init_decode_state,
                           init_paged_state, paged_gather_rows,
                           paged_sample_step, paged_write_rows,
                           prefill_fork_sample, prefill_sample, sample_step)
@@ -214,6 +247,14 @@ class EngineStats:
     extends: int = 0             # bucketed session-extend calls (batches)
     extend_requests: int = 0     # turns admitted via extend
     extend_traces: int = 0       # compiled (rows, bucket_len) extend shapes
+    # speculative decoding (self-drafting draft-and-verify; 0 when off)
+    spec_rounds: int = 0         # verify dispatches (one per spec round)
+    spec_drafted_tokens: int = 0  # candidate tokens the drafter proposed
+    spec_accepted_tokens: int = 0  # drafted tokens verify agreed with
+    spec_rejected_tokens: int = 0  # drafted tokens verify refuted
+    spec_committed_tokens: int = 0  # tokens committed by verify rounds
+    spec_saved_ticks: int = 0    # decode ticks skipped (round covered all)
+    spec_verify_traces: int = 0  # compiled verify shapes (O(row buckets))
     prefill_tokens: int = 0      # prompt tokens run through prefill+extend
     prefill_tokens_saved: int = 0  # cached tokens extends did NOT re-prefill
     session_evictions: int = 0   # parked sessions evicted under slot pressure
@@ -330,6 +371,7 @@ class InferenceEngine:
                  policy_version: int = 0, min_prefill_bucket: int = 8,
                  kv_block_size: int = 16,
                  num_kv_blocks: Optional[int] = None,
+                 spec_draft: int = 0, spec_ngram: int = 3,
                  mesh: Optional[Mesh] = None):
         self.mesh = mesh
         self.params = params
@@ -350,6 +392,17 @@ class InferenceEngine:
             cfg, max_seq, allow_paging=self._supports_paging())
         self.supports_sessions = self.layout.supports_sessions
         self.paged = self.layout.paged
+        # self-drafting speculative decoding (off at spec_draft=0). The
+        # layout gates it: families whose state cannot roll back a
+        # rejected tail (recurrent SSM scan state, ring caches) stay on
+        # plain one-token ticks regardless of the knob.
+        self.spec_draft = int(spec_draft)
+        self.spec_ngram = max(1, int(spec_ngram))
+        self._spec_enabled = (self.spec_draft > 0
+                              and self.layout.supports_speculation)
+        # fixed verify bucket [t0, d1..dk] -> one power-of-two length, so
+        # the verify path compiles O(row-bucket) traces total
+        self._spec_bucket = _pow2_bucket(1 + self.spec_draft, 2)
         # meta-token prefix: cache entries (and _slot_len / block / bucket
         # accounting) include the n_prefix prepended slots prefill writes
         # before the text tokens
@@ -463,6 +516,9 @@ class InferenceEngine:
         # copies; the follow-up scatter (which does donate) writes them
         # back
         self._extend_fn = jax.jit(self._extend_impl)
+        # verify reads row copies exactly like extend; the follow-up
+        # commit scatter (donated) writes the accepted prefix back
+        self._verify_fn = jax.jit(self._verify_impl)
         self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
         self._group_prefill_fn = jax.jit(self._group_prefill_impl)
         self._fork_scatter_fn = jax.jit(self._fork_scatter_impl,
@@ -635,6 +691,24 @@ class InferenceEngine:
         return extend_sample(params, rows, batch, start_pos, temps, rng,
                              self.cfg, self.pcfg)
 
+    def _verify_impl(self, params, state, gather_idx, tokens, ext_lens,
+                     start_pos, temps, rng):
+        """Fused speculative verification: the extend dispatch, but sampled
+        at EVERY block offset (``extend_verify_sample``) — offset j's
+        sample is what a sequential decode would have produced at position
+        ``start_pos + j + 1``, which is what accept/reject compares the
+        drafts against. One dispatch per speculation round; the verify
+        bucket length is fixed, so this compiles one trace per row bucket."""
+        self.stats.spec_verify_traces += 1  # python side effect: trace-time
+        if self.paged:
+            rows = paged_gather_rows(state, gather_idx)
+        else:
+            rows = {k: (v[gather_idx] if k == "pos" else v[:, gather_idx])
+                    for k, v in state.items()}
+        batch = {"tokens": tokens, "prompt_lens": ext_lens}
+        return extend_verify_sample(params, rows, batch, start_pos, temps,
+                                    rng, self.cfg, self.pcfg)
+
     def _group_prefill_impl(self, params, tokens, prompt_lens, temps, rng):
         """Fused group-shared prefill: run the ONE shared-prompt row through
         the bucketed prefill and sample every member's first token from the
@@ -647,7 +721,7 @@ class InferenceEngine:
 
     def _fork_scatter_impl(self, state, last_token, active, temps, gen,
                            max_new, st, slot_idx, toks, row_temps,
-                           row_max_new, row_active):
+                           row_max_new, row_active, row_gen):
         """Fork the single prefilled row into every member slot: broadcast
         the row (lazy under jit — a gather→broadcast, no materialized
         [L, R, S_max, ...] copy) and reuse the bucketed-prefill scatter.
@@ -655,7 +729,8 @@ class InferenceEngine:
         st_rows = fork_decode_rows(st, slot_idx.shape[0])
         return self._scatter_impl(state, last_token, active, temps, gen,
                                   max_new, st_rows, slot_idx, toks,
-                                  row_temps, row_max_new, row_active)
+                                  row_temps, row_max_new, row_active,
+                                  row_gen)
 
     def _tick_impl(self, params, state, token, active, temps, gen, max_new,
                    rng):
@@ -682,10 +757,13 @@ class InferenceEngine:
                 self._constrain_state(new_state), rng)
 
     def _scatter_impl(self, state, last_token, active, temps, gen, max_new,
-                      st, slot_idx, toks, row_temps, row_max_new, row_active):
+                      st, slot_idx, toks, row_temps, row_max_new, row_active,
+                      row_gen):
         """Scatter a prefilled row bucket into the slot state in one
         dispatch. Padded rows carry slot_idx == num_slots (out of bounds)
-        and are dropped by the scatter."""
+        and are dropped by the scatter. ``row_gen`` seeds the device
+        generated-token counter: 1 for admission scatters (the sampled
+        first token), ``len(completion)`` for a speculative commit."""
         new_state = dict(state)
         for key, val in st.items():
             if key == "pos":
@@ -698,15 +776,15 @@ class InferenceEngine:
         last_token = last_token.at[slot_idx].set(toks, mode="drop")
         active = active.at[slot_idx].set(row_active, mode="drop")
         temps = temps.at[slot_idx].set(row_temps, mode="drop")
-        gen = gen.at[slot_idx].set(jnp.ones_like(slot_idx), mode="drop")
+        gen = gen.at[slot_idx].set(row_gen, mode="drop")
         max_new = max_new.at[slot_idx].set(row_max_new, mode="drop")
         return (self._constrain_state(new_state), last_token, active, temps,
                 gen, max_new)
 
     def _paged_scatter_impl(self, state, last_token, active, temps, gen,
                             max_new, st, slot_idx, toks, row_temps,
-                            row_max_new, row_active, src_pos, blk_pos,
-                            off_pos, new_tables):
+                            row_max_new, row_active, row_gen, src_pos,
+                            blk_pos, off_pos, new_tables):
         """Paged scatter: copy row positions ``src_pos`` of the dense
         prefill/extend product into pool blocks ``(blk_pos, off_pos)``
         (host-computed from the allocator's tables; out-of-bounds block
@@ -718,7 +796,7 @@ class InferenceEngine:
         last_token = last_token.at[slot_idx].set(toks, mode="drop")
         active = active.at[slot_idx].set(row_active, mode="drop")
         temps = temps.at[slot_idx].set(row_temps, mode="drop")
-        gen = gen.at[slot_idx].set(jnp.ones_like(slot_idx), mode="drop")
+        gen = gen.at[slot_idx].set(row_gen, mode="drop")
         max_new = max_new.at[slot_idx].set(row_max_new, mode="drop")
         return (self._constrain_state(new_state), last_token, active, temps,
                 gen, max_new)
@@ -726,7 +804,8 @@ class InferenceEngine:
     def _paged_fork_scatter_impl(self, state, last_token, active, temps,
                                  gen, max_new, st, slot_idx, toks,
                                  row_temps, row_max_new, row_active,
-                                 src_pos, blk_pos, off_pos, new_tables):
+                                 row_gen, src_pos, blk_pos, off_pos,
+                                 new_tables):
         """Copy-on-write group fork: broadcast the single prefilled row
         (lazy under jit) and scatter it *once* into the shared prompt
         blocks via member 0's coordinates; members >0 write only their
@@ -739,8 +818,8 @@ class InferenceEngine:
         return self._paged_scatter_impl(state, last_token, active, temps,
                                         gen, max_new, st_rows, slot_idx,
                                         toks, row_temps, row_max_new,
-                                        row_active, src_pos, blk_pos,
-                                        off_pos, new_tables)
+                                        row_active, row_gen, src_pos,
+                                        blk_pos, off_pos, new_tables)
 
     # -------------------------------------------- overridable execution ops
     # (HostReferenceEngine swaps these for the pre-fusion host path while
@@ -767,6 +846,19 @@ class InferenceEngine:
                 jnp.asarray(start_pos), jnp.asarray(temps), self._rng)
         return toks, lps, st
 
+    def _verify_exec(self, gather_idx, tokens, ext_lens, start_pos, temps):
+        """Run one speculative verification round. Returns (tokens [R, S],
+        logprobs [R, S], row state); consumes exactly one split of the
+        engine RNG — and samples on the [R, S, V] block shape, which the
+        host reference mirrors exactly (categorical's gumbel bits depend
+        on the draw shape, so the shapes must agree for byte parity)."""
+        with self._dispatch_ctx():
+            toks, lps, st, self._rng = self._verify_fn(
+                self.params, self.state, jnp.asarray(gather_idx),
+                jnp.asarray(tokens), jnp.asarray(ext_lens),
+                jnp.asarray(start_pos), jnp.asarray(temps), self._rng)
+        return toks, lps, st
+
     def _group_prefill_exec(self, tokens, prompt_lens, temps):
         """Run one group-shared prefill (single prompt row, member-bucket
         ``temps``). Returns (tokens [R], logprobs [R], single-row state);
@@ -785,27 +877,32 @@ class InferenceEngine:
             else self._paged_fork_scatter_fn
         extra = () if paged_coords is None \
             else tuple(jnp.asarray(c) for c in paged_coords)
+        row_gen = np.ones((len(np.asarray(slot_idx)),), np.int32)
         with self._dispatch_ctx():
             (self.state, self._last_token, self._active, self._temps,
              self._gen, self._max_new) = fn(
                 self.state, self._last_token, self._active, self._temps,
                 self._gen, self._max_new, st, jnp.asarray(slot_idx),
                 jnp.asarray(toks), jnp.asarray(row_temps),
-                jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
+                jnp.asarray(row_max_new), jnp.asarray(row_active),
+                jnp.asarray(row_gen), *extra)
 
     def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
-                      row_active, paged_coords=None) -> None:
+                      row_active, paged_coords=None, row_gen=None) -> None:
         fn = self._scatter_fn if paged_coords is None \
             else self._paged_scatter_fn
         extra = () if paged_coords is None \
             else tuple(jnp.asarray(c) for c in paged_coords)
+        if row_gen is None:   # admission: the sampled first token counts 1
+            row_gen = np.ones((len(np.asarray(slot_idx)),), np.int32)
         with self._dispatch_ctx():
             (self.state, self._last_token, self._active, self._temps,
              self._gen, self._max_new) = fn(
                 self.state, self._last_token, self._active, self._temps,
                 self._gen, self._max_new, st, jnp.asarray(slot_idx),
                 jnp.asarray(toks), jnp.asarray(row_temps),
-                jnp.asarray(row_max_new), jnp.asarray(row_active), *extra)
+                jnp.asarray(row_max_new), jnp.asarray(row_active),
+                jnp.asarray(row_gen), *extra)
 
     def _decode_exec(self):
         """One fused decode tick; a single small host readback."""
@@ -1238,12 +1335,19 @@ class InferenceEngine:
 
     def _reserve_extend_blocks(self, sess: EngineSession, start: int,
                                ext_len: int, protect=()) -> bool:
-        """Grow a resident session's block list to cover the extend write
-        region [start, start+ext_len) and copy-on-write the boundary block
-        if it is shared (a group-forked member whose first write lands in
-        a block its siblings still reference). ``protect`` keeps this
-        run's own sessions out of the eviction pool."""
-        slot = sess.slot
+        """Session-extend wrapper over ``_reserve_slot_blocks``."""
+        return self._reserve_slot_blocks(sess.slot, start, ext_len, protect)
+
+    def _reserve_slot_blocks(self, slot: int, start: int, ext_len: int,
+                             protect=()) -> bool:
+        """Grow a slot's block list to cover a multi-token write region
+        [start, start+ext_len) — a session-extend block or a speculative
+        verify block — and copy-on-write the boundary block if it is
+        shared (a group-forked member whose first write lands in a block
+        its siblings still reference). ``protect`` keeps the caller's own
+        sessions out of the eviction pool. On failure blocks already
+        grown stay attached to the slot (owned, reachable, reused by the
+        next attempt — never leaked)."""
         blocks = self._slot_blocks[slot]
         need = self._blocks_for(start + ext_len) - len(blocks)
         if need > 0:
@@ -1568,21 +1672,237 @@ class InferenceEngine:
             req.finished = True
             req.finish_reason = "eos" if tok == self.eos_id else "length"
 
+    # ------------------------------------------- speculative decoding round
+
+    def _draft_tokens(self, req: Request, k: int) -> np.ndarray:
+        """Prompt-lookup drafter: propose up to ``k`` continuation tokens
+        from the request's own token history (session history + prompt +
+        completion so far). Finds the longest n-gram (n <= spec_ngram)
+        ending the history at its EARLIEST other occurrence — the earliest
+        match has the longest continuation ahead of it, where the most
+        recent match sits near the end of the history and proposes ~1
+        token. Pure deterministic host logic: the fused engine and the
+        host reference draft identically, which is half the speculative
+        parity contract (the shared verify RNG discipline is the other)."""
+        parts = [np.asarray(req.prompt_tokens, np.int32)]
+        sess = self._session_of(req)
+        if sess is not None and len(sess.tokens):
+            parts.insert(0, sess.tokens)
+        if req.completion:
+            parts.append(np.asarray(req.completion, np.int32))
+        hist = np.concatenate(parts)
+        L = len(hist)
+        for n in range(min(self.spec_ngram, L - 1), 0, -1):
+            pat = hist[-n:]
+            win = hist[:-1]              # exclude the trailing occurrence
+            if len(win) < n:
+                continue
+            view = np.lib.stride_tricks.sliding_window_view(win, n)
+            m = np.nonzero((view == pat).all(axis=1))[0]
+            if len(m):
+                p = int(m[0])
+                return hist[p + n:p + n + k].astype(np.int32)
+        return np.zeros((0,), np.int32)
+
+    def _speculate(self) -> Tuple[set, int]:
+        """One self-drafting speculation round before the decode tick:
+        draft candidates per active slot, verify them all in a single
+        bucketed extend dispatch sampled at every offset, commit the
+        longest accepted prefix (plus the mismatch sample as the free
+        bonus/correction token) in bulk, and roll the rejected tail back
+        — a ``pos`` rewind on dense rows, plus dropping the tail block
+        refs on paged rows (claim-then-release). Every decision feeding
+        the dispatch (eligibility, drafts, batch shape) is deterministic
+        host logic shared with ``HostReferenceEngine``, so both engines
+        consume the verify RNG split — or skip it — in lockstep.
+
+        Returns (slots that went through this round, tokens committed):
+        ``step`` skips the decode tick entirely when the round covered
+        every active slot — the bonus token already chains each stream
+        (the next dispatch feeds ``completion[-1]``), so the tick would
+        spend a whole dispatch on work the next round re-derives."""
+        if not self._spec_enabled:
+            return set(), 0
+        S_b = self._spec_bucket
+        rows = []                                     # (slot, req, draft)
+        pre_blocks: Dict[int, int] = {}
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            start = int(self._slot_len[i])
+            # the fixed bucket must respect the extend write contract
+            # (start + S_b <= max_seq for every row of the batch)
+            if start + S_b > self.max_seq:
+                continue
+            # never draft past max_new: room leaves space for the round's
+            # final (bonus/correction) token
+            room = max(1, req.max_new_tokens) - len(req.completion) - 1
+            k_r = min(self.spec_draft, room)
+            if k_r < 1:
+                continue
+            draft = self._draft_tokens(req, k_r)
+            if not len(draft):
+                continue
+            if self.paged:
+                pre = len(self._slot_blocks[i])
+                if not self._reserve_slot_blocks(i, start, 1 + len(draft)):
+                    # claim-then-release: restore the exact pre-round
+                    # block list and skip this slot's round (pool
+                    # backpressure — unreachable at default pool sizing,
+                    # where every table fits blocks_per_row)
+                    blocks = self._slot_blocks[i]
+                    if len(blocks) > pre:
+                        self.allocator.free(blocks[pre:])
+                        del blocks[pre:]
+                    continue
+                pre_blocks[i] = pre
+            rows.append((i, req, draft))
+        if not rows:
+            return set(), 0
+        n = len(rows)
+        R = _pow2_bucket(n)
+        tokens = np.zeros((R, S_b), np.int32)
+        ext_lens = np.ones((R,), np.int32)
+        start_pos = np.zeros((R,), np.int32)
+        temps = np.ones((R,), np.float32)
+        gather_idx = np.zeros((R,), np.int32)   # pad rows gather slot 0
+        slot_idx = np.full((R,), self.num_slots, np.int32)  # OOB rows drop
+        for r, (i, req, draft) in enumerate(rows):
+            # t0 = the pending last sampled token: recorded host-side in
+            # both engines but never yet fed through the model
+            tokens[r, 0] = req.completion[-1]
+            tokens[r, 1:1 + len(draft)] = draft
+            ext_lens[r] = 1 + len(draft)
+            start_pos[r] = self._slot_len[i]
+            temps[r] = req.temperature
+            gather_idx[r] = i
+            slot_idx[r] = i
+            self.stats.spec_drafted_tokens += len(draft)
+        toks, lps, st = self._verify_exec(gather_idx, tokens, ext_lens,
+                                          start_pos, temps)
+        toks_h, lps_h = jax.device_get((toks, lps))
+        self.stats.spec_rounds += 1
+
+        row_active = np.zeros((R,), bool)
+        row_last = np.zeros((R,), np.int32)
+        row_maxnew = np.ones((R,), np.int32)
+        row_gen = np.zeros((R,), np.int32)
+        row_pos = np.zeros((R,), np.int32)
+        deferred_free: List[int] = []
+        committed_total = 0
+        for r, (i, req, draft) in enumerate(rows):
+            start = int(start_pos[r])
+            k_r = len(draft)
+            samp = toks_h[r]
+            # the sample at offset j IS what a sequential decode would
+            # have produced at position start+j+1: draft j is accepted
+            # exactly when they agree
+            m = 0
+            while m < k_r and int(samp[m]) == int(draft[m]):
+                m += 1
+            committed = 0
+            for j in range(m + 1):
+                tok = int(samp[j])
+                finished = (tok == self.eos_id) or (
+                    len(req.completion) + 1 >= max(1, req.max_new_tokens))
+                self._record(req, tok, float(lps_h[r][j]), finished)
+                committed += 1
+                if finished:
+                    break
+            self.stats.spec_accepted_tokens += min(committed, m)
+            self.stats.spec_rejected_tokens += k_r - m
+            self.stats.spec_committed_tokens += committed
+            committed_total += committed
+            new_len = start + committed
+            self._slot_len[i] = new_len
+            row_pos[r] = new_len
+            row_last[r] = int(samp[committed - 1])
+            row_gen[r] = len(req.completion)
+            row_maxnew[r] = max(1, req.max_new_tokens)
+            row_active[r] = not req.finished
+            if self.paged:
+                # roll back the rejected tail BEFORE building scatter
+                # coords: positions past the kept blocks resolve to the
+                # out-of-bounds sentinel and their pool writes drop
+                keep = max(self._blocks_for(new_len), pre_blocks[i])
+                blocks = self._slot_blocks[i]
+                if keep < len(blocks):
+                    self.allocator.free(blocks[keep:])
+                    del blocks[keep:]
+            if req.finished:
+                self._finish(req)
+                self.slots[i] = None
+                sess = self._session_of(req)
+                if sess is None or sess.slot != i:
+                    self._slot_session[i] = None
+                    if self.paged:
+                        # write-then-free: the commit scatter below still
+                        # writes this slot's accepted K/V region
+                        deferred_free.append(i)
+        # the verify rows advanced pos to start + ext_lens; the commit
+        # rewinds it to start + committed. On dense rows this rewind IS
+        # the rollback: the k_idx <= pos mask hides the dead tail K/V
+        st = dict(st)
+        st["pos"] = jnp.asarray(row_pos)
+        covered = {i for i, _, _ in rows}
+        if self.paged:
+            coords = self._build_scatter_coords(slot_idx, S_b, start_pos)
+            self._scatter_exec(st, slot_idx, row_last, temps, row_maxnew,
+                               row_active, paged_coords=coords,
+                               row_gen=row_gen)
+            for i in deferred_free:
+                self._free_slot_blocks(i)
+            # the scatter installed each row's FULL table from host truth
+            # (post-rollback), so dirty entries queued for these slots
+            # during reservation/COW are redundant — and must not outlive
+            # the round: a skipped tick defers the next flush, by which
+            # time the slot may have been reassigned (stale-write hazard)
+            self._table_dirty = [t for t in self._table_dirty
+                                 if t[0] not in covered]
+        else:
+            self._scatter_exec(st, slot_idx, row_last, temps, row_maxnew,
+                               row_active, row_gen=row_gen)
+        return covered, committed_total
+
     # ----------------------------------------------------------------- step
 
     def step(self) -> int:
-        """One engine iteration: admit pending, ensure every active slot's
-        next K/V write has an exclusively-owned block (paged), decode one
-        token for every occupied slot in a single fused dispatch. Returns
-        tokens generated by the decode tick."""
+        """One engine iteration: admit pending, run one speculation round
+        (when enabled), ensure every active slot's next K/V write has an
+        exclusively-owned block (paged), decode one token for every
+        occupied slot in a single fused dispatch. When the speculation
+        round covered EVERY active slot, the decode tick is skipped — each
+        covered stream already advanced by the round's committed tokens
+        and chains through its bonus token, so the tick would burn a
+        dispatch re-deriving the next round's t0 sample. Returns tokens
+        generated this step (verify commits + decode tick)."""
         self._admit()
         self._overflow_full_slots()
-        self._ensure_decode_blocks()
+        covered, spec_tokens = self._speculate()
+        # a verify commit can land a slot exactly at max_seq: overflow it
+        # before the tick (same guard, same reason — the tick's write
+        # would clamp and corrupt the cache)
+        self._overflow_full_slots()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         self.stats.occupancy_trace.append(len(active))
         if not active:
             self._sync_kv_stats()
-            return 0
+            return spec_tokens
+        if covered and all(i in covered for i in active):
+            # multi-token step: every active stream committed through the
+            # verify round (the skip decision is shared deterministic
+            # host logic, so the reference engine skips — and preserves
+            # the RNG split sequence — in lockstep)
+            self.stats.spec_saved_ticks += 1
+            self._sync_kv_stats()
+            return spec_tokens
+        self._ensure_decode_blocks()
+        # pool starvation may have overflow-finished slots: re-derive the
+        # tick's participant list after the block guarantee
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            self._sync_kv_stats()
+            return spec_tokens
         self._flush_table_updates()
         toks_h, lps_h, fin_h = self._decode_exec()
         for i in active:
@@ -1601,7 +1921,7 @@ class InferenceEngine:
                         self._free_slot_blocks(i)
         self.stats.decode_steps += 1
         self._sync_kv_stats()
-        return len(active)
+        return spec_tokens + len(active)
 
     def run_until_idle(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

@@ -27,9 +27,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import extend, fork_decode_rows, prefill, serve_step
+from repro.models import (extend, extend_verify, fork_decode_rows, prefill,
+                          serve_step)
 
 from .engine import InferenceEngine
+
+
+def _host_sample(key, logits, temps):
+    """Eager host-path draw over [R, V] logits: temperature-clamped
+    categorical, with ``temps <= 0`` rows decoding exact greedy argmax —
+    the same contract as the fused ``sample_logits`` (greedy streams must
+    be RNG-schedule-independent so speculation cannot perturb them)."""
+    scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+    toks = jax.random.categorical(key, scaled, axis=-1)
+    return jnp.where(jnp.asarray(temps) <= 0,
+                     jnp.argmax(logits, axis=-1), toks)
 
 
 class HostReferenceEngine(InferenceEngine):
@@ -56,6 +68,9 @@ class HostReferenceEngine(InferenceEngine):
         self._extend_logits = jax.jit(
             lambda p, rows, t, el, sp: extend(
                 p, rows, {"tokens": t, "prompt_lens": el}, sp, cfg, pcfg))
+        self._verify_logits = jax.jit(
+            lambda p, rows, t, el, sp: extend_verify(
+                p, rows, {"tokens": t, "prompt_lens": el}, sp, cfg, pcfg))
         # host mirror of the last sampled token per slot
         self._last_np = np.zeros((self.num_slots,), np.int32)
 
@@ -69,8 +84,7 @@ class HostReferenceEngine(InferenceEngine):
         logits, st = self._prefill_logits(self.params, batch)
         # host-path sampling: eager dispatches + per-row scalar syncs
         logits = jnp.asarray(logits, jnp.float32)
-        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
-        toks = jax.random.categorical(k, scaled, axis=-1)
+        toks = _host_sample(k, logits, temps)
         logp = jax.nn.log_softmax(logits, axis=-1)
         toks_h = np.zeros((R,), np.int32)
         lps_h = np.zeros((R,), np.float32)
@@ -91,8 +105,7 @@ class HostReferenceEngine(InferenceEngine):
         logits, st = self._prefill_logits(self.params, batch)
         logits = jnp.broadcast_to(jnp.asarray(logits, jnp.float32)[0],
                                   (R, logits.shape[-1]))
-        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
-        toks = jax.random.categorical(k, scaled, axis=-1)
+        toks = _host_sample(k, logits, temps)
         logp = jax.nn.log_softmax(logits, axis=-1)
         toks_h = np.zeros((R,), np.int32)
         lps_h = np.zeros((R,), np.float32)
@@ -124,8 +137,7 @@ class HostReferenceEngine(InferenceEngine):
             self.params, rows, jnp.asarray(tokens), jnp.asarray(ext_lens),
             jnp.asarray(start_pos))
         logits = jnp.asarray(logits, jnp.float32)
-        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
-        toks = jax.random.categorical(k, scaled, axis=-1)
+        toks = _host_sample(k, logits, temps)
         logp = jax.nn.log_softmax(logits, axis=-1)
         toks_h = np.zeros((R,), np.int32)
         lps_h = np.zeros((R,), np.float32)
@@ -134,9 +146,44 @@ class HostReferenceEngine(InferenceEngine):
             lps_h[r] = float(logp[r, toks_h[r]])     # and per logprob
         return toks_h, lps_h, st
 
+    def _verify_exec(self, gather_idx, tokens, ext_lens, start_pos, temps):
+        """Host-path speculative verification: eager row gather + jitted
+        all-position logits + host-dispatched block sampling with
+        per-element scalar syncs. Same RNG split discipline and — the
+        load-bearing part — the same [R, S, V] categorical draw SHAPE as
+        the fused verify: the categorical's gumbel bits depend on the
+        draw shape, so sampling the block in one draw is what keeps the
+        two engines' accepted/bonus tokens byte-identical."""
+        self._rng, k = jax.random.split(self._rng)
+        R, S = tokens.shape
+        gi = jnp.asarray(gather_idx)
+        rows = {key: (val[gi] if key == "pos" else val[:, gi])
+                for key, val in self.state.items()}
+        logits, st = self._verify_logits(
+            self.params, rows, jnp.asarray(tokens), jnp.asarray(ext_lens),
+            jnp.asarray(start_pos))
+        logits = jnp.asarray(logits, jnp.float32)
+        scaled = logits / jnp.maximum(
+            jnp.asarray(temps)[:, None, None], 1e-4)
+        toks = jax.random.categorical(k, scaled, axis=-1)
+        toks = jnp.where(jnp.asarray(temps)[:, None] <= 0,
+                         jnp.argmax(logits, axis=-1), toks)  # greedy rows
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        toks_h = np.zeros((R, S), np.int32)
+        lps_h = np.zeros((R, S), np.float32)
+        for r in range(R):
+            for j in range(S):
+                toks_h[r, j] = int(toks[r, j])       # scalar sync per elem
+                lps_h[r, j] = float(logp[r, j, toks_h[r, j]])
+        return toks_h, lps_h, st
+
     def _scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
-                      row_active) -> None:
-        """Old-style slot writes: one eager dispatch per tensor per row."""
+                      row_active, paged_coords=None, row_gen=None) -> None:
+        """Old-style slot writes: one eager dispatch per tensor per row.
+        ``paged_coords``/``row_gen`` are accepted for signature parity
+        with the fused engine and ignored: the reference is unpaged, and
+        its finish checks run host-side off completion lengths (see
+        ``_decode_exec``), so it keeps no device ``gen`` counter."""
         for r, i in enumerate(np.asarray(slot_idx)):
             i = int(i)
             if i >= self.num_slots:
@@ -162,8 +209,7 @@ class HostReferenceEngine(InferenceEngine):
         temps = np.array([s.temperature if s is not None else 1.0
                           for s in self.slots], np.float32)
         logits = jnp.asarray(logits, jnp.float32)
-        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
-        toks = jax.random.categorical(k, scaled, axis=-1)
+        toks = _host_sample(k, logits, temps)
         logp = jax.nn.log_softmax(logits, axis=-1)
         S = self.num_slots
         toks_h = np.zeros((S,), np.int32)

@@ -40,6 +40,12 @@ def main():
     p.add_argument("--max-new-tokens", type=int, default=24)
     p.add_argument("--max-seq", type=int, default=128)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--spec-draft", type=int, default=0,
+                   help="self-drafting speculative decoding: draft up to "
+                        "k tokens per slot per round (0 = off; recurrent "
+                        "and ring-cache families stay off regardless)")
+    p.add_argument("--spec-ngram", type=int, default=3,
+                   help="longest n-gram the prompt-lookup drafter matches")
     args = p.parse_args()
 
     from repro.configs import get_config
@@ -63,14 +69,17 @@ def main():
         meshes = make_engine_meshes(dp, tp, ep)
         engines = [InferenceEngine(params, cfg, num_slots=args.slots,
                                    max_seq=args.max_seq, pcfg=pcfg,
-                                   seed=i, mesh=m)
+                                   seed=i, spec_draft=args.spec_draft,
+                                   spec_ngram=args.spec_ngram, mesh=m)
                    for i, m in enumerate(meshes)]
         print(f"mesh serving: {dp} engine shard(s) x "
               f"{tp * ep} device(s) each "
               f"({len(jax.devices()) - dp * tp * ep} idle)")
     else:
         engines = [InferenceEngine(params, cfg, num_slots=args.slots,
-                                   max_seq=args.max_seq, pcfg=pcfg, seed=i)
+                                   max_seq=args.max_seq, pcfg=pcfg, seed=i,
+                                   spec_draft=args.spec_draft,
+                                   spec_ngram=args.spec_ngram)
                    for i in range(args.engines)]
     pool = InferencePool(engines)
 
@@ -103,6 +112,14 @@ def main():
               f"{stats['prefill_tokens_saved']} prefill tokens saved, "
               f"{stats['session_evictions']} evictions / "
               f"{stats['session_fallbacks']} fallbacks)")
+    if stats["spec_rounds"]:
+        drafted = stats["spec_drafted_tokens"]
+        accepted = stats["spec_accepted_tokens"]
+        print(f"speculative decode: {stats['spec_rounds']} verify rounds, "
+              f"{stats['spec_committed_tokens']} tokens committed "
+              f"({accepted}/{drafted} drafts accepted, "
+              f"{accepted / max(1, drafted):.0%} acceptance, "
+              f"{stats['spec_saved_ticks']} decode ticks skipped)")
     if stats["kv_blocks_total"]:
         print(f"paged KV: peak {stats['kv_blocks_peak']}"
               f"/{stats['kv_blocks_total']} blocks "

@@ -1,18 +1,21 @@
 """Composable model definitions for all assigned architecture families."""
 from .model import (DEFAULT_PARALLEL, chunked_token_nll, embed_inputs, encode,
-                    extend, extend_sample, fork_decode_rows, forward,
+                    extend, extend_sample, extend_verify,
+                    extend_verify_sample, fork_decode_rows, forward,
                     forward_hidden, head_weights, init_decode_state,
                     init_paged_state, init_params, lm_loss, paged_gather_rows,
                     paged_sample_step, paged_serve_step, paged_write_rows,
                     prefill, prefill_fork_sample, prefill_sample,
-                    sample_logits, sample_step, serve_step, token_logprobs)
+                    sample_logits, sample_logits_block, sample_step,
+                    serve_step, token_logprobs)
 
 __all__ = [
     "DEFAULT_PARALLEL", "chunked_token_nll", "embed_inputs", "encode",
-    "extend", "extend_sample", "fork_decode_rows", "forward",
-    "forward_hidden", "head_weights", "init_decode_state",
-    "init_paged_state", "init_params", "lm_loss", "paged_gather_rows",
-    "paged_sample_step", "paged_serve_step", "paged_write_rows", "prefill",
-    "prefill_fork_sample", "prefill_sample", "sample_logits", "sample_step",
-    "serve_step", "token_logprobs",
+    "extend", "extend_sample", "extend_verify", "extend_verify_sample",
+    "fork_decode_rows", "forward", "forward_hidden", "head_weights",
+    "init_decode_state", "init_paged_state", "init_params", "lm_loss",
+    "paged_gather_rows", "paged_sample_step", "paged_serve_step",
+    "paged_write_rows", "prefill", "prefill_fork_sample", "prefill_sample",
+    "sample_logits", "sample_logits_block", "sample_step", "serve_step",
+    "token_logprobs",
 ]

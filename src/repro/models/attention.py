@@ -229,6 +229,15 @@ def attention_extend(q, k_cache, v_cache, q_pos, *, window=0, scale=None):
     causal triangle. Unwritten/padded cache tail slots sit above every
     valid q_pos, so the mask excludes them; masked lanes contribute exact
     zeros to the softmax, matching the full-prefill computation.
+
+    This is also the speculative-verification contract: a verify block of
+    k drafted candidates runs through this path, each candidate attending
+    only to the committed prefix plus earlier candidates (``k_idx <=
+    q_pos``), so the per-position logits are identical to what k
+    sequential decode ticks would compute (up to reduction-order float
+    noise). A rejected tail's cache writes sit above the rolled-back
+    ``pos`` and are never read before being overwritten (dense rows) or
+    dropped with their block refs (paged rows).
     """
     B, Sq, Hq, hd = q.shape
     S_max, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -253,10 +262,13 @@ def attention_decode(q, k_cache, v_cache, pos, *, window=0, scale=None):
 
     The validity mask ``k_idx <= pos`` is the load-bearing invariant for
     every cache-manipulation fast path in the engine: right-padded bucketed
-    prefill, session extend, and the group-shared-prefill cache fork all
-    leave garbage K/V *above* a row's logical position, and all are sound
-    because this mask never lets a query read it — decode then overwrites
-    the garbage in place before ``pos`` can reach it.
+    prefill, session extend, the group-shared-prefill cache fork, and
+    speculative-decode rollback all leave garbage K/V *above* a row's
+    logical position, and all are sound because this mask never lets a
+    query read it — decode then overwrites the garbage in place before
+    ``pos`` can reach it. Rolling back a rejected speculative tail on a
+    dense row is therefore a pure ``pos`` rewind; no cache bytes need
+    restoring.
     """
     B, _, Hq, hd = q.shape
     S_max, Hkv = k_cache.shape[1], k_cache.shape[2]

@@ -617,11 +617,44 @@ def extend(params, state, batch, start_pos, cfg: ModelConfig,
     Recurrent (SSM/hybrid) rows continue their scan state with pads
     masked out, so the same bucketing is sound for every family.
     Callers must guarantee ``start_pos + S_b <= S_max``.
+
+    A zero-length delta (``S_b == 0`` — e.g. ``max_new_tokens=0`` turns,
+    or a chunked-prefill boundary chunk) is a bit-exact no-op: caches are
+    returned untouched and ``pos`` stays at ``start_pos`` (``ext_lens``
+    must be all zeros). Both speculative verification and chunked prefill
+    lean on this guarantee.
     """
     tokens = batch["tokens"]
     ext_lens = batch["prompt_lens"]
     R, S = tokens.shape
     start = start_pos.astype(jnp.int32)
+    if S == 0:  # zero-length delta: bit-exact no-op on caches and pos
+        new_state = dict(state)
+        new_state["pos"] = start + ext_lens.astype(jnp.int32)
+        logits = jnp.zeros((R, head_weights(params, cfg).shape[-1]),
+                           dtype=jnp.float32)
+        return logits, new_state
+    x, new_caches = _extend_hidden(params, state, tokens, ext_lens, start,
+                                   cfg, pcfg)
+    last_idx = jnp.clip(ext_lens - 1, 0, S - 1)
+    x_last = x[jnp.arange(R), last_idx]
+    x_last = rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
+    logits = (x_last @ head_weights(params, cfg)).astype(jnp.float32)
+    new_state = dict(state)
+    new_state.update(new_caches)
+    new_state["pos"] = start + ext_lens.astype(jnp.int32)
+    return logits, new_state
+
+
+def _extend_hidden(params, state, tokens, ext_lens, start, cfg, pcfg):
+    """Shared extend trunk: embed + layer scan over a [R, S] token block.
+
+    Returns the final hidden states ``x`` [R, S, D] (pre final-norm) and
+    the updated per-layer caches. ``extend`` reads only the last valid
+    position; ``extend_verify`` reads every position (speculative
+    verification needs logits at each candidate offset).
+    """
+    R, S = tokens.shape
     positions = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
     x = params["embed"][tokens]
     if cfg.rope_theta == 0.0:  # whisper: sinusoidal absolute positions
@@ -634,10 +667,32 @@ def extend(params, state, batch, start_pos, cfg: ModelConfig,
 
     per_layer = {k: state[k] for k in _CACHE_KEYS if k in state}
     x, new_caches = jax.lax.scan(body, x, (params["layers"], per_layer))
-    last_idx = jnp.clip(ext_lens - 1, 0, S - 1)
-    x_last = x[jnp.arange(R), last_idx]
-    x_last = rmsnorm(x_last, params["final_norm"], cfg.rms_eps)
-    logits = (x_last @ head_weights(params, cfg)).astype(jnp.float32)
+    return x, new_caches
+
+
+def extend_verify(params, state, batch, start_pos, cfg: ModelConfig,
+                  pcfg=DEFAULT_PARALLEL):
+    """Multi-position verify forward: ``extend``, but with logits at EVERY
+    block offset instead of only the last valid one.
+
+    This is the speculative-decoding verification primitive: the block is
+    ``[t0, d1..dk]`` (the pending sampled token followed by drafted
+    candidates, right-padded to the bucket), and ``logits[:, j]`` predicts
+    the token at cache position ``start_pos + j + 1`` — so offset ``j``
+    verifies draft ``d_{j+1}`` and the first mismatch offset yields the
+    bonus/correction token for free. Cache writes at rejected offsets land
+    above the rolled-back ``pos`` and are masked by the decode/extend
+    ``k_idx <= pos`` invariant until overwritten (dense rows) or dropped
+    with their block refs (paged rows). Returns
+    (logits [R, S, V] f32, new state rows with ``pos = start + ext_lens``).
+    """
+    tokens = batch["tokens"]
+    ext_lens = batch["prompt_lens"]
+    start = start_pos.astype(jnp.int32)
+    x, new_caches = _extend_hidden(params, state, tokens, ext_lens, start,
+                                   cfg, pcfg)
+    x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = (x @ head_weights(params, cfg)).astype(jnp.float32)
     new_state = dict(state)
     new_state.update(new_caches)
     new_state["pos"] = start + ext_lens.astype(jnp.int32)
@@ -652,6 +707,12 @@ def extend(params, state, batch, start_pos, cfg: ModelConfig,
 def _sample_logits_core(key, logits, temps):
     scaled = logits / jnp.maximum(temps[:, None], 1e-4)
     toks = jax.random.categorical(key, scaled, axis=-1)
+    # temperature <= 0 is exact greedy decode: argmax is RNG-independent,
+    # so a greedy stream is invariant to HOW MANY dispatches consumed the
+    # key sequence (a speculating engine splits per verify round; sampling
+    # a near-tie through the clamped categorical would let those extra
+    # splits flip tokens the baseline tick would not)
+    toks = jnp.where(temps <= 0, jnp.argmax(logits, axis=-1), toks)
     logp = jax.nn.log_softmax(logits, axis=-1)
     lps = jnp.take_along_axis(logp, toks[:, None], axis=-1)[:, 0]
     return toks.astype(jnp.int32), lps
@@ -663,6 +724,9 @@ def sample_logits(key, logits, temps):
     logits: [B, V] f32; temps: [B]. Returns (tokens [B] i32, logprobs [B]
     f32) where logprobs are log-softmax of the *unscaled* logits at the
     sampled token (the trainer-consistency convention the engine records).
+    ``temps <= 0`` rows decode exact greedy (argmax, no RNG): the stream
+    is then independent of the dispatch/RNG-split schedule, which is what
+    lets a speculating engine match a plain one byte-for-byte at temp 0.
 
     Under a serving mesh the draw runs inside a fully-replicated
     ``shard_map``: the categorical's gumbel bits are NOT partition-
@@ -974,4 +1038,58 @@ def extend_sample(params, state, batch, start_pos, temps, rng,
     rng, k = jax.random.split(rng)
     logits, new_state = extend(params, state, batch, start_pos, cfg, pcfg)
     toks, lps = sample_logits(k, logits, temps)
+    return toks, lps, new_state, rng
+
+
+def _sample_logits_block_core(key, logits, temps):
+    scaled = logits / jnp.maximum(temps[:, None, None], 1e-4)
+    toks = jax.random.categorical(key, scaled, axis=-1)
+    # same greedy contract as _sample_logits_core, per row of the block
+    toks = jnp.where(temps[:, None] <= 0, jnp.argmax(logits, axis=-1), toks)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    lps = jnp.take_along_axis(logp, toks[..., None], axis=-1)[..., 0]
+    return toks.astype(jnp.int32), lps
+
+
+def sample_logits_block(key, logits, temps):
+    """``sample_logits`` over a [R, S, V] block of per-position logits.
+
+    One categorical draw covers the whole block (logits [R, S, V], temps
+    [R]); returns (tokens [R, S] i32, logprobs [R, S] f32) with the same
+    unscaled-log-softmax logprob convention. The gumbel bits depend on
+    the draw's array SHAPE, so fused and host-reference speculative
+    verification must both sample on the identical [R, S, V] block — and,
+    like ``sample_logits``, under a serving mesh the draw runs inside a
+    fully-replicated ``shard_map`` so the bits are partition-invariant.
+    """
+    from repro.sharding.context import current_serve_mesh
+    mesh = current_serve_mesh()
+    if mesh is None:
+        return _sample_logits_block_core(key, logits, temps)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    fn = shard_map(_sample_logits_block_core, mesh=mesh,
+                   in_specs=(P(), P(), P()), out_specs=(P(), P()),
+                   check_rep=False)
+    return fn(key, logits, temps)
+
+
+def extend_verify_sample(params, state, batch, start_pos, temps, rng,
+                         cfg: ModelConfig, pcfg=DEFAULT_PARALLEL):
+    """Speculative verification: ``extend_verify`` + one block draw.
+
+    One RNG split covers the whole [R, S] verify block — the same
+    one-split-per-dispatch discipline as every other fused entry point,
+    so a speculating engine and the host reference consume the RNG
+    identically. ``toks[:, j]`` is the token the model samples at cache
+    position ``start_pos + j + 1``: the acceptance rule commits the
+    longest prefix where ``toks[:, j]`` equals the drafted token at block
+    offset ``j + 1``, plus ``toks[:, m]`` at the first mismatch as the
+    bonus/correction token. Returns
+    (tokens [R, S], logprobs [R, S], new state rows, new_rng).
+    """
+    rng, k = jax.random.split(rng)
+    logits, new_state = extend_verify(params, state, batch, start_pos, cfg,
+                                      pcfg)
+    toks, lps = sample_logits_block(k, logits, temps)
     return toks, lps, new_state, rng

@@ -96,36 +96,56 @@ def test_in_flight_weight_update_spans_policies(setup):
     assert eng.stats.weight_updates == 1
 
 
-def test_fused_engine_matches_host_reference(setup):
+@pytest.mark.parametrize("temp_mode,spec", [
+    ("mixed", 0),   # varied temperatures, plain decode (the PR-1 oracle)
+    ("zero", 0),    # all-greedy streams through the argmax fast path
+    ("mixed", 4),   # speculation on: verify rounds + rollback in the mix
+    ("zero", 4),    # greedy + speculation: the benchmark's parity regime
+])
+def test_fused_engine_matches_host_reference(setup, temp_mode, spec):
     """Per-token parity: the fused on-device sampler must reproduce the
     host-path reference engine exactly — tokens, logprobs, policy-version
     stamps — under a fixed seed, INCLUDING across an in-flight
     update_weights (both engines share scheduling and RNG discipline; the
-    only difference is where sampling/bookkeeping executes)."""
+    only difference is where sampling/bookkeeping executes). Parametrized
+    over temperature-0 rows (exact-argmax greedy contract) and self-
+    drafting speculation (verify rounds, bulk commits, claim-then-release
+    rollback — all of which must leave the streams byte-identical)."""
     cfg, params = setup
 
     def run(engine_cls):
-        eng = engine_cls(params, cfg, num_slots=4, max_seq=64, seed=11)
+        eng = engine_cls(params, cfg, num_slots=4, max_seq=64, seed=11,
+                         spec_draft=spec)
         rng = np.random.default_rng(2)
         for i in range(10):
             L = int(rng.integers(2, 14))
+            # period-3 prompts give the n-gram drafter material to match
+            prompt = np.tile(rng.integers(5, 50, 3), 5)[:L].astype(np.int32)
+            temp = 0.0 if temp_mode == "zero" else 0.7 + 0.15 * (i % 3)
             eng.submit(Request(
-                request_id=i, problem_id=f"p{i}",
-                prompt_tokens=rng.integers(5, 50, L).astype(np.int32),
-                max_new_tokens=int(rng.integers(3, 9)),
-                temperature=0.7 + 0.15 * (i % 3)))
+                request_id=i, problem_id=f"p{i}", prompt_tokens=prompt,
+                max_new_tokens=int(rng.integers(3, 9)), temperature=temp))
         pushed = False
         while not eng.idle:
             eng.step()
-            if eng.stats.decode_steps == 3 and not pushed:
+            # count verify rounds too: with speculation most steps skip
+            # the decode tick, so decode_steps alone may never reach 3
+            # (>=: a non-skipped step bumps both counters at once)
+            if (eng.stats.decode_steps + eng.stats.spec_rounds >= 3
+                    and not pushed):
                 p2 = jax.tree_util.tree_map(lambda x: x * 1.01, params)
                 eng.update_weights(p2, version=1)   # in-flight
                 pushed = True
-        return {r.request_id: r for r in eng.drain_completed()}
+        assert pushed
+        return eng, {r.request_id: r for r in eng.drain_completed()}
 
-    fused = run(InferenceEngine)
-    host = run(HostReferenceEngine)
+    eng_f, fused = run(InferenceEngine)
+    eng_h, host = run(HostReferenceEngine)
     assert fused.keys() == host.keys()
+    if spec:
+        assert eng_f.stats.spec_rounds > 0, "speculation must exercise"
+        assert eng_f.stats.spec_rounds == eng_h.stats.spec_rounds
+        assert eng_f.stats.kv_blocks_in_use == 0
     spanning = 0
     for rid in fused:
         a, b = fused[rid], host[rid]
@@ -135,6 +155,33 @@ def test_fused_engine_matches_host_reference(setup):
         np.testing.assert_allclose(a.logprobs, b.logprobs, atol=1e-5)
         spanning += len(set(a.versions)) > 1
     assert spanning > 0, "parity must be exercised across the update"
+
+
+def test_speculative_verify_bounds_traces(setup):
+    """Speculative verification rides the bucketed extend path with a
+    FIXED token bucket (pow2 of 1 + spec_draft): many rounds with varying
+    draft/accept lengths must compile O(row-buckets) verify traces — not
+    one per (rows, draft-length) pair — while decode stays one shape
+    (mirrors test_bucketed_prefill_bounds_traces_ssm for the spec path)."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=128, seed=0,
+                          spec_draft=4)
+    assert eng._spec_enabled
+    rng = np.random.default_rng(5)
+    for i in range(9):
+        base = rng.integers(5, 30, 3).astype(np.int32)
+        eng.submit(Request(
+            request_id=i, problem_id=f"p{i}",
+            prompt_tokens=np.tile(base, 6),   # periodic: drafts always hit
+            max_new_tokens=6 + i % 5, temperature=0.0))
+    eng.run_until_idle()
+    assert len(eng.drain_completed()) == 9
+    st = eng.stats
+    assert st.spec_rounds > 0 and st.spec_committed_tokens > 0
+    num_row_buckets = int(math.log2(4)) + 1          # rows in {1, 2, 4}
+    assert st.spec_verify_traces <= num_row_buckets
+    assert st.decode_traces == 1
+    assert st.kv_blocks_in_use == 0
 
 
 def test_bucketed_prefill_bounds_traces(setup):

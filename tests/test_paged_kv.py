@@ -21,6 +21,7 @@ from repro.data import TOKENIZER
 from repro.inference import GroupRequest, InferenceEngine, Request
 from repro.inference.engine import BlockAllocator
 from repro.models import init_params
+from tests.utils import given, settings, st
 
 BS = 8  # block size used throughout (divides every max_seq below)
 
@@ -57,10 +58,10 @@ def _cache_len(cfg, plen):
     return cfg.num_meta_tokens + plen
 
 
-def _req(i, prompt, max_new=4, sid=None):
+def _req(i, prompt, max_new=4, sid=None, temp=1.0):
     return Request(request_id=i, problem_id=f"p{i}",
                    prompt_tokens=np.asarray(prompt, np.int32),
-                   max_new_tokens=max_new, session_id=sid)
+                   max_new_tokens=max_new, session_id=sid, temperature=temp)
 
 
 def _prompt(n, seed=0):
@@ -379,3 +380,81 @@ def test_group_overflow_and_unpaged_family_gating(setup):
     ssm_eng.submit(_req(0, _prompt(6), max_new=3))
     ssm_eng.run_until_idle()
     assert len(ssm_eng.drain_completed()) == 1
+
+
+# ------------------------------------------- speculative claim-then-release
+
+
+def _allocator_snapshot(a):
+    """The observable allocator state a rolled-back claim must restore:
+    the free-list SET (claim/release may reorder the list — the ids are
+    interchangeable), every block's refcount, and the in-use count."""
+    return (frozenset(a._free), tuple(int(a._ref[b])
+                                      for b in range(a.num_blocks)), a.in_use)
+
+
+@settings(max_examples=10, deadline=None)
+@given(ops=st.lists(st.sampled_from(
+    [(k, j) for k in range(1, 6) for j in range(k + 1)]),
+    min_size=1, max_size=12),
+    shared=st.integers(0, 3))
+def test_allocator_spec_claim_release_property(ops, shared):
+    """Property: a speculative round claims the worst case (1 + k blocks)
+    up front and releases the rejected tail (j blocks) after verification.
+    Any interleaving of such rounds — on a pool that also holds COW-shared
+    blocks — must keep refcounts exact, never double-free, and a full
+    release must restore the allocator to its pre-claim state (free-list
+    set + refcounts + in_use)."""
+    a = BlockAllocator(16)
+    base = a.alloc(shared)          # long-lived blocks, shared once (COW)
+    if base:
+        a.incref(base)
+    committed = []
+    for k, j in ops:
+        before = _allocator_snapshot(a)
+        ids = a.alloc(k)
+        if ids is None:             # backpressure must leave state intact
+            assert k > a.free_blocks
+            assert _allocator_snapshot(a) == before
+            continue
+        assert all(a.refcount(b) == 1 for b in ids)
+        a.free(ids[k - j:])         # reject the tail: j blocks roll back
+        del ids[k - j:]
+        if not ids:                 # fully-rejected round: exact restore
+            assert _allocator_snapshot(a) == before
+        committed.append(ids)
+    # teardown: every committed prefix and both shared refs must drain
+    for ids in committed:
+        a.free(ids)
+    if base:
+        assert a.free(base) == 0 and a.free(base) == shared
+    assert a.in_use == 0 and a.free_blocks == a.num_blocks
+    assert all(a.refcount(b) == 0 for b in range(a.num_blocks))
+    with pytest.raises(AssertionError):     # rolled-back ids are dead
+        a.free([0])
+
+
+@settings(max_examples=4, deadline=None)
+@given(plen=st.integers(6, 18), max_new=st.integers(4, 14),
+       draft=st.sampled_from([2, 4, 7]))
+def test_spec_workload_never_leaks_blocks(setup, plen, max_new, draft):
+    """Engine-level leak gate: randomized speculative workloads (looping
+    prompts -> high draft acceptance, varying rollback lengths) must end
+    every drain with zero blocks in use — ``run_until_idle`` asserts pool
+    consistency on every idle transition."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=3, max_seq=128, seed=13,
+                          kv_block_size=BS, spec_draft=draft)
+    assert eng._spec_enabled
+    for i in range(5):
+        prompt = np.tile(_prompt(4, seed=i), 6)[:plen]   # n-gram loops
+        # greedy: random-init argmax streams repeat heavily, so the
+        # drafter reliably finds matches (temp-1.0 draws over a 50k
+        # vocab rarely repeat a token, leaving nothing to draft)
+        eng.submit(_req(i, prompt, max_new=max_new + i % 3, temp=0.0))
+    eng.run_until_idle()
+    done = eng.drain_completed()
+    assert len(done) == 5
+    assert eng.stats.spec_rounds > 0, "workload must actually speculate"
+    assert eng.allocator.in_use == 0
+    assert eng.stats.kv_blocks_in_use == 0

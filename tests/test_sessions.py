@@ -456,3 +456,25 @@ def test_async_client_cancelled_rollout_frees_future(setup):
         assert client.in_flight == 0
 
     run_async(run())
+
+
+def test_extend_zero_length_delta_is_noop(fam_setup):
+    """Regression: an ``extend`` with a zero-length delta ([R, 0] token
+    block, all-zero ``ext_lens``) must be a bit-exact no-op — every cache
+    leaf unchanged, ``pos`` unchanged — for every serving family. Both
+    speculative verification and chunked-prefill boundary chunks lean on
+    this guarantee; it used to crash on the empty-axis layer scan."""
+    from repro.models import extend, prefill
+
+    cfg, params = fam_setup
+    R, max_seq = 2, 64
+    tokens = jnp.asarray(np.tile(np.arange(7, 13, dtype=np.int32), (R, 2)))
+    _, state = prefill(params, {"tokens": tokens}, cfg, max_seq, PCFG)
+    batch = {"tokens": jnp.zeros((R, 0), jnp.int32),
+             "prompt_lens": jnp.zeros((R,), jnp.int32)}
+    logits, new_state = extend(params, state, batch, state["pos"], cfg, PCFG)
+    assert logits.shape == (R, cfg.vocab_size)
+    assert set(new_state) == set(state)
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(new_state[k]),
+                                      np.asarray(state[k]), err_msg=k)
