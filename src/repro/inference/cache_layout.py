@@ -61,6 +61,17 @@ class CacheLayout:
     has_recurrent_state: bool
     ring: bool                # window-sized ring KV (unpageable, no park)
     n_prefix: int             # prepended meta-token cache entries
+    # whether a prompt may be streamed in as no-sample extend chunks
+    # instead of one monolithic prefill dispatch (chunked prefill).
+    # Recurrent (SSM/hybrid) families ARE chunkable: the pad-masked
+    # extend scan passes state through pad tokens exactly, so a chunk
+    # boundary is just another right-padded extend. What disqualifies a
+    # layout is state the extend path cannot (re)build positionally: a
+    # ring cache's wrapping writes, an encoder-decoder's cross-KV (built
+    # only by prefill from the encoder frames), prefill-injected stub
+    # modalities (VLM patch embeds), or a meta-token prefix (only
+    # prefill prepends it).
+    supports_chunked_prefill: bool
 
     @classmethod
     def from_config(cls, cfg: ModelConfig, max_seq: int,
@@ -80,10 +91,13 @@ class CacheLayout:
             kinds.append(LayerStateKind(CROSS_KV, ("cross_k", "cross_v"),
                                         False))
         paged = bool(allow_paging) and any(k.pageable for k in kinds)
+        chunkable = (not ring and not cfg.is_encoder_decoder
+                     and cfg.family != "vlm" and cfg.num_meta_tokens == 0)
         return cls(kinds=tuple(kinds), paged=paged,
                    supports_sessions=not ring,
                    has_recurrent_state=recurrent, ring=ring,
-                   n_prefix=cfg.num_meta_tokens)
+                   n_prefix=cfg.num_meta_tokens,
+                   supports_chunked_prefill=chunkable)
 
     @property
     def supports_speculation(self) -> bool:

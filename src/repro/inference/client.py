@@ -27,7 +27,8 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.rollouts import Rollout, RolloutGroup
-from .engine import GroupRequest, InferenceEngine, Request
+from .engine import (GroupRequest, InferenceEngine, Request,
+                     latency_snapshot)
 
 
 class InferencePool:
@@ -52,8 +53,8 @@ class InferencePool:
     def _make_group_request(self, prompt_tokens: np.ndarray, group_size: int,
                             *, problem_id: str, group_id: int,
                             max_new_tokens: int, temperature: float,
-                            sessions: Optional[Sequence[int]] = None
-                            ) -> GroupRequest:
+                            sessions: Optional[Sequence[int]] = None,
+                            sched_class: str = "rollout") -> GroupRequest:
         prompt = np.asarray(prompt_tokens, np.int32)
         members = []
         for i in range(group_size):
@@ -61,7 +62,8 @@ class InferencePool:
                 request_id=self._next_request_id, problem_id=problem_id,
                 prompt_tokens=prompt, max_new_tokens=max_new_tokens,
                 temperature=temperature, group_id=group_id,
-                session_id=sessions[i] if sessions else None))
+                session_id=sessions[i] if sessions else None,
+                sched_class=sched_class))
             self._next_request_id += 1
         return GroupRequest(group_req_id=group_id, problem_id=problem_id,
                             prompt_tokens=prompt, members=members)
@@ -70,7 +72,8 @@ class InferencePool:
 
     def submit_group(self, problem_id: str, prompt_tokens: np.ndarray,
                      group_size: int, *, max_new_tokens: int = 64,
-                     temperature: float = 1.0) -> int:
+                     temperature: float = 1.0,
+                     sched_class: str = "rollout") -> int:
         """Submit one prompt × group_size rollouts to a single engine
         (least-loaded across groups). The group is admitted as a
         ``GroupRequest``: the shared prompt is prefilled once and the KV
@@ -80,7 +83,8 @@ class InferencePool:
         self._next_group_id += 1
         greq = self._make_group_request(
             prompt_tokens, group_size, problem_id=problem_id, group_id=gid,
-            max_new_tokens=max_new_tokens, temperature=temperature)
+            max_new_tokens=max_new_tokens, temperature=temperature,
+            sched_class=sched_class)
         self._pick_engine().submit_group(greq)
         self._groups[gid] = (problem_id, group_size, [])
         return gid
@@ -88,7 +92,8 @@ class InferencePool:
     def submit_group_request(self, prompt_tokens: np.ndarray,
                              group_size: int, *, max_new_tokens: int = 64,
                              temperature: float = 1.0, problem_id: str = "",
-                             sessions: Optional[Sequence[int]] = None
+                             sessions: Optional[Sequence[int]] = None,
+                             sched_class: str = "rollout"
                              ) -> List[Request]:
         """Group-shared-prefill variant of ``submit_request``: one
         GroupRequest whose members surface individually via
@@ -104,7 +109,7 @@ class InferencePool:
         greq = self._make_group_request(
             prompt_tokens, group_size, problem_id=problem_id, group_id=-1,
             max_new_tokens=max_new_tokens, temperature=temperature,
-            sessions=sessions)
+            sessions=sessions, sched_class=sched_class)
         eng.submit_group(greq)
         return list(greq.members)
 
@@ -147,20 +152,42 @@ class InferencePool:
     def submit_request(self, prompt_tokens: np.ndarray, *,
                        max_new_tokens: int = 64, temperature: float = 1.0,
                        problem_id: str = "",
-                       session: Optional[int] = None) -> Request:
+                       session: Optional[int] = None,
+                       sched_class: str = "rollout") -> Request:
         """Submit a single ungrouped request (least-loaded, or pinned to
         its session's engine). Used by the asyncio rollout client;
-        completion surfaces via drain_requests."""
+        completion surfaces via drain_requests. ``sched_class``
+        ("interactive" | "rollout") feeds the engines' SLO scheduler:
+        interactive work is admitted and chunk-scheduled ahead of
+        unpromoted rollout work."""
         req = Request(
             request_id=self._next_request_id, problem_id=problem_id,
             prompt_tokens=np.asarray(prompt_tokens, np.int32),
             max_new_tokens=max_new_tokens, temperature=temperature,
-            group_id=-1, session_id=session)
+            group_id=-1, session_id=session, sched_class=sched_class)
         self._next_request_id += 1
         eng = (self._session_engine[session] if session is not None
                else self._pick_engine())
         eng.submit(req)
         return req
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel an ungrouped request wherever it lives (queued, mid
+        chunked-prefill, or decoding). True when some engine found it."""
+        return any(eng.cancel(request_id) for eng in self.engines)
+
+    def latency_snapshot(self) -> dict:
+        """Pool-level TTFT/ITL percentiles over the engines' current
+        measurement windows (seconds; since the last reset)."""
+        ttft = [x for e in self.engines for x in e.stats.ttft_window]
+        itl = [x for e in self.engines for x in e.stats.itl_window]
+        return latency_snapshot(ttft, itl)
+
+    def reset_latency_windows(self) -> None:
+        """Start a fresh steady-state measurement window on every engine
+        (drop warmup/compile-skewed samples)."""
+        for eng in self.engines:
+            eng.stats.reset_window()
 
     def _collect(self) -> None:
         for eng in self.engines:
@@ -277,6 +304,18 @@ class InferencePool:
                                          for e in self.engines),
             "spec_saved_ticks": sum(e.stats.spec_saved_ticks
                                     for e in self.engines),
+            # chunked prefill + SLO scheduler (zero when chunk_prefill=0)
+            "chunked_admissions": sum(e.stats.chunked_admissions
+                                      for e in self.engines),
+            "prefill_chunks": sum(e.stats.prefill_chunks
+                                  for e in self.engines),
+            "chunk_tokens": sum(e.stats.chunk_tokens for e in self.engines),
+            "sched_promotions": sum(e.stats.sched_promotions
+                                    for e in self.engines),
+            "sched_budget_deferrals": sum(e.stats.sched_budget_deferrals
+                                          for e in self.engines),
+            "cancelled": sum(e.stats.cancelled for e in self.engines),
+            "latency": self.latency_snapshot(),
         }
 
 

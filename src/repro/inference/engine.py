@@ -135,6 +135,50 @@ edge: under extreme pool pressure a paged engine may skip a slot's round
 that the unpaged oracle runs — default pool sizing makes reservation
 infallible, which is what the parity suites pin.)
 
+Chunked prefill + SLO-aware scheduler
+-------------------------------------
+A monolithic long-prompt prefill dispatch stalls every decoding slot
+behind it — the dominant p99 inter-token-latency failure mode under the
+paper's mixed agentic traffic (long tool-output prompts interleaved with
+short continuations). With ``chunk_prefill=c`` a prompt longer than ``c``
+is admitted *chunked*: the slot is claimed up front, but the prompt
+streams in as ``c``-token **no-sample extend chunks** across successive
+``step()`` calls — a chunk is an extend with ``max_new_tokens=0`` (the
+``models.extend`` S==0/pad-masked machinery), so it consumes no RNG and
+discards its logits; only the FINAL chunk goes through the normal
+sampling extend and consumes the admission's single RNG split. Decode
+ticks run between chunks, so resident streams keep their inter-token
+cadence while the long prompt trickles in. Long resident-session deltas
+chunk the same way. ``CacheLayout.supports_chunked_prefill`` gates the
+path: recurrent families ride the pad-masked extend; rings,
+encoder-decoder cross-KV, VLM patch injection and meta-token prefixes
+cannot be rebuilt positionally by extend and stay monolithic.
+
+Scheduling is SLO-aware: every request carries a ``sched_class``
+(``"interactive"`` outranks ``"rollout"``), the pending queue is a
+stable two-class partition (FIFO within class — single-class traffic is
+byte-identical to plain FIFO), and a rollout older than
+``promote_after`` steps is promoted so interactive floods cannot starve
+batch work. ``prefill_token_budget`` caps the *ride-along* tokens per
+step — chunk writes first, then speculative drafts (a spec round that
+commits k tokens counts k against the budget) — which bounds how much
+prefill work any one tick can stall decode by. Admission control under
+block-pool pressure reserves only the blocks the CURRENT chunk covers
+(not the whole prompt up front); a chunked admission the pool cannot
+feed waits, and a provable mutual-starvation cycle (nothing decoding,
+nothing evictable, every chunking slot starved) sacrifices the youngest
+chunked admission with ``finish_reason="overflow"`` instead of
+deadlocking. Every chunking/scheduling decision is deterministic host
+logic in this class, so ``HostReferenceEngine`` inherits it and the
+byte-identical-streams contract survives chunking — and at temperature
+<= 0 (greedy is RNG-schedule-invariant by the sampling contract) a
+chunked run must also reproduce the unchunked run's token streams.
+``EngineStats`` additionally keeps per-request latency windows (TTFT =
+submit to first token, ITL = gaps between tokens) with a
+``snapshot()/reset_window()`` pair for steady-state SLO measurement
+(``launch/loadgen.py`` is the open-loop traffic harness that reads
+them).
+
 ``HostReferenceEngine`` (repro.inference.reference) keeps the pre-fusion
 host path alive as the parity oracle and Fig. 4 baseline: same scheduling
 and RNG discipline, but eager host-side sampling with per-token scalar
@@ -148,6 +192,7 @@ fork (host-side row broadcast + eager scatter).
 from __future__ import annotations
 
 import contextlib
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple, Union
@@ -159,7 +204,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.inference.cache_layout import CacheLayout
-from repro.models import (extend_sample, extend_verify_sample,
+from repro.models import (extend, extend_sample, extend_verify_sample,
                           fork_decode_rows, init_decode_state,
                           init_paged_state, paged_gather_rows,
                           paged_sample_step, paged_write_rows,
@@ -185,12 +230,25 @@ class Request:
     # first turn prompt_tokens is the full prompt; for later turns it is
     # only the *delta* (tool result + turn delimiters).
     session_id: Optional[int] = None
+    # SLO scheduler class: "interactive" admits/advances ahead of
+    # "rollout" batch work; an aged rollout is promoted (deadline
+    # promotion) so the interactive class can never starve it out
+    sched_class: str = "rollout"
     # filled during generation
     completion: List[int] = field(default_factory=list)
     logprobs: List[float] = field(default_factory=list)
     versions: List[int] = field(default_factory=list)
     finished: bool = False
     finish_reason: str = ""
+    # latency accounting (engine-stamped perf_counter seconds): submit
+    # time, first-token time, and one stamp per generated token
+    submit_ts: float = 0.0
+    first_token_ts: float = 0.0
+    last_token_ts: float = 0.0
+    token_ts: List[float] = field(default_factory=list)
+    # engine step at submission — the deadline-promotion age reference
+    submit_step: int = 0
+    promoted: bool = False
 
 
 @dataclass
@@ -279,8 +337,67 @@ class EngineStats:
     kv_bytes_per_shard: int = 0  # K/V bytes resident per device shard
     cow_forks: int = 0           # copy-on-write private-block materializations
     blocks_freed_on_evict: int = 0  # blocks reclaimed by parked-session eviction
+    # chunked prefill + SLO scheduler (all zero when chunk_prefill=0)
+    chunked_admissions: int = 0  # requests admitted via chunked prefill
+    prefill_chunks: int = 0      # no-sample chunk-write dispatches
+    chunk_tokens: int = 0        # prompt tokens streamed through chunk writes
+    chunk_traces: int = 0        # compiled (rows, bucket) chunk-write shapes
+    sched_promotions: int = 0    # rollout -> interactive deadline promotions
+    sched_budget_deferrals: int = 0  # chunk advances deferred by the budget
+    cancelled: int = 0           # requests finished with reason "cancelled"
     # per-step occupancy trace for the Fig. 4 / utilization benchmark
     occupancy_trace: List[int] = field(default_factory=list)
+    # latency measurement windows (seconds): TTFT = submit -> first token,
+    # ITL = gap between consecutive tokens of one request. Windowed so
+    # steady-state SLO measurement can drop warmup/compile samples.
+    ttft_window: List[float] = field(default_factory=list)
+    itl_window: List[float] = field(default_factory=list)
+
+    def snapshot(self) -> dict:
+        """p50/p99 latency summary over the current measurement window."""
+        return latency_snapshot(self.ttft_window, self.itl_window)
+
+    def reset_window(self) -> None:
+        """Start a fresh measurement window (counters are untouched —
+        only the TTFT/ITL sample windows clear)."""
+        self.ttft_window.clear()
+        self.itl_window.clear()
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def latency_snapshot(ttft: List[float], itl: List[float]) -> dict:
+    """p50/p99 TTFT and inter-token-latency summary of raw sample windows
+    (shared by ``EngineStats.snapshot`` and the pool-level aggregation)."""
+    return {
+        "ttft_n": len(ttft), "itl_n": len(itl),
+        "ttft_p50": _percentile(ttft, 50),
+        "ttft_p99": _percentile(ttft, 99),
+        "itl_p50": _percentile(itl, 50),
+        "itl_p99": _percentile(itl, 99),
+    }
+
+
+@dataclass
+class _ChunkedPrefill:
+    """An in-flight chunked admission: one claimed slot streaming its
+    prompt in through no-sample extend chunks across successive steps.
+    While chunking, ``slots[slot]`` stays None — the decode tick, the
+    overflow guards and fresh admission all ignore the slot — and the
+    engine's ``_chunking`` map is the residency truth (free-slot scans,
+    eviction, ``idle`` and the KV leak gate all consult it)."""
+
+    req: Request
+    tokens: np.ndarray       # full block to stream: prompt, or [last]+delta
+    base: int                # cache position tokens[0] writes at
+    written: int = 0         # tokens of the block already in the cache
+    resident: bool = False   # continues a resident session (extend-style)
+    submit_step: int = 0     # scheduler age / FIFO key
+    start_version: int = 0   # policy version when the admission began
 
 
 def _pow2_bucket(n: int, floor: int = 1) -> int:
@@ -372,6 +489,8 @@ class InferenceEngine:
                  kv_block_size: int = 16,
                  num_kv_blocks: Optional[int] = None,
                  spec_draft: int = 0, spec_ngram: int = 3,
+                 chunk_prefill: int = 0, prefill_token_budget: int = 0,
+                 promote_after: int = 64,
                  mesh: Optional[Mesh] = None):
         self.mesh = mesh
         self.params = params
@@ -403,6 +522,19 @@ class InferenceEngine:
         # fixed verify bucket [t0, d1..dk] -> one power-of-two length, so
         # the verify path compiles O(row-bucket) traces total
         self._spec_bucket = _pow2_bucket(1 + self.spec_draft, 2)
+        # chunked prefill + SLO scheduler (off at chunk_prefill=0). The
+        # layout gates chunkability; the knobs are deterministic host
+        # state shared with the reference engine, so chunking decisions
+        # cannot perturb the parity contract.
+        self.chunk_prefill = max(0, int(chunk_prefill))
+        self.prefill_token_budget = max(0, int(prefill_token_budget))
+        self.promote_after = max(0, int(promote_after))
+        self._chunk_enabled = (self.chunk_prefill > 0
+                               and self.layout.supports_chunked_prefill)
+        # slot -> in-flight chunked admission (see _ChunkedPrefill)
+        self._chunking: Dict[int, _ChunkedPrefill] = {}
+        self._budget_left: Optional[int] = None   # per-step, set in step()
+        self._step_count = 0
         # meta-token prefix: cache entries (and _slot_len / block / bucket
         # accounting) include the n_prefix prepended slots prefill writes
         # before the text tokens
@@ -519,6 +651,9 @@ class InferenceEngine:
         # verify reads row copies exactly like extend; the follow-up
         # commit scatter (donated) writes the accepted prefix back
         self._verify_fn = jax.jit(self._verify_impl)
+        # chunk writes read row copies exactly like extend (no sampling,
+        # no RNG); the follow-up scatter writes the advanced rows back
+        self._chunk_fn = jax.jit(self._chunk_impl)
         self._scatter_fn = jax.jit(self._scatter_impl, donate_argnums=(0,))
         self._group_prefill_fn = jax.jit(self._group_prefill_impl)
         self._fork_scatter_fn = jax.jit(self._fork_scatter_impl,
@@ -565,6 +700,8 @@ class InferenceEngine:
     # ------------------------------------------------------------------ api
 
     def submit(self, req: Request) -> None:
+        req.submit_ts = time.perf_counter()
+        req.submit_step = self._step_count
         self.pending.append(req)
 
     def submit_group(self, greq: GroupRequest) -> None:
@@ -572,7 +709,57 @@ class InferenceEngine:
         once and the KV cache forked to every member slot (partial
         admission under slot pressure — see ``_admit_group``)."""
         assert greq.members, "group must have at least one member"
+        now = time.perf_counter()
+        for m in greq.members:
+            m.submit_ts = now
+            m.submit_step = self._step_count
         self.pending.append(greq)
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a plain (ungrouped) request on whichever path it is on:
+        still queued (removed), mid-chunk (chunk state and every reserved
+        block reclaimed), or actively decoding (slot freed; tokens already
+        generated stay banked on the request). A session turn cancelled
+        after its cache was touched drops the session's residency — the
+        partial-turn K/V is inconsistent with the un-updated history, so
+        the next turn transparently re-prefills. Group members are not
+        cancellable (the fork shares their admission). Returns True when
+        the request was found; it then surfaces via ``drain_completed``
+        with ``finish_reason="cancelled"``."""
+        for g in list(self.pending):
+            if isinstance(g, GroupRequest) or g.request_id != request_id:
+                continue
+            self.pending.remove(g)
+            g.finished = True
+            g.finish_reason = "cancelled"
+            self.completed.append(g)
+            self.stats.cancelled += 1
+            return True
+        for slot, cs in list(self._chunking.items()):
+            if cs.req.request_id == request_id:
+                self._abort_chunk(slot, "cancelled")
+                return True
+        for i, req in enumerate(self.slots):
+            if req is None or req.request_id != request_id:
+                continue
+            req.finished = True
+            req.finish_reason = "cancelled"
+            self.completed.append(req)
+            self.stats.cancelled += 1
+            self.slots[i] = None
+            sess = self._session_of(req)
+            if sess is not None and sess.slot == i:
+                sess.slot = None   # partial-turn KV: drop residency
+            self._slot_session[i] = None
+            if self.paged:
+                self._free_slot_blocks(i)
+                self._sync_kv_stats()
+            self._active = self._active.at[i].set(False)
+            if self._slot_sharding is not None:
+                self._active = jax.device_put(self._active,
+                                              self._slot_sharding)
+            return True
+        return False
 
     def open_session(self, session_id: int) -> None:
         """Register a multi-turn session. Turns are submitted as Requests
@@ -590,7 +777,8 @@ class InferenceEngine:
         (the session is gone from the table, so it will not re-park)."""
         sess = self.sessions.pop(session_id, None)
         if sess is not None and sess.slot is not None \
-                and self.slots[sess.slot] is None:
+                and self.slots[sess.slot] is None \
+                and sess.slot not in self._chunking:
             self._slot_session[sess.slot] = None
             if self.paged:
                 self._free_slot_blocks(sess.slot)
@@ -640,11 +828,13 @@ class InferenceEngine:
         turns are all pinned here, and parked slots are otherwise invisible
         (slots[i] is None), so without this term a session-saturated engine
         reports load 0 and keeps winning ``open_session`` ties."""
-        return self.num_active + self.pending_units + len(self.sessions)
+        return (self.num_active + self.pending_units + len(self.sessions)
+                + len(self._chunking))
 
     @property
     def idle(self) -> bool:
-        return self.num_active == 0 and not self.pending
+        return (self.num_active == 0 and not self.pending
+                and not self._chunking)
 
     def drain_completed(self) -> List[Request]:
         done, self.completed = self.completed, []
@@ -708,6 +898,23 @@ class InferenceEngine:
         batch = {"tokens": tokens, "prompt_lens": ext_lens}
         return extend_verify_sample(params, rows, batch, start_pos, temps,
                                     rng, self.cfg, self.pcfg)
+
+    def _chunk_impl(self, params, state, gather_idx, tokens, ext_lens,
+                    start_pos):
+        """One mid-prompt chunk of a chunked prefill: the bucketed extend
+        dispatch with NO sampling — the chunk's logits are discarded, only
+        the K/V (and recurrent state) writes matter. Takes no RNG, so the
+        per-request RNG schedule is identical to monolithic admission: the
+        one sampling split happens at the final chunk (``_extend_exec``)."""
+        self.stats.chunk_traces += 1   # python side effect: trace-time only
+        if self.paged:
+            rows = paged_gather_rows(state, gather_idx)
+        else:
+            rows = {k: (v[gather_idx] if k == "pos" else v[:, gather_idx])
+                    for k, v in state.items()}
+        batch = {"tokens": tokens, "prompt_lens": ext_lens}
+        _, st = extend(params, rows, batch, start_pos, self.cfg, self.pcfg)
+        return st
 
     def _group_prefill_impl(self, params, tokens, prompt_lens, temps, rng):
         """Fused group-shared prefill: run the ONE shared-prompt row through
@@ -858,6 +1065,18 @@ class InferenceEngine:
                 jnp.asarray(tokens), jnp.asarray(ext_lens),
                 jnp.asarray(start_pos), jnp.asarray(temps), self._rng)
         return toks, lps, st
+
+    def _chunk_exec(self, gather_idx, tokens, ext_lens, start_pos):
+        """Run one no-sample prefill chunk. Returns the row state for the
+        follow-up scatter; consumes NO engine RNG — mid chunks are pure
+        cache writes, keeping the sampling RNG schedule identical to an
+        unchunked admission of the same request sequence."""
+        with self._dispatch_ctx():
+            st = self._chunk_fn(
+                self.params, self.state, jnp.asarray(gather_idx),
+                jnp.asarray(tokens), jnp.asarray(ext_lens),
+                jnp.asarray(start_pos))
+        return st
 
     def _group_prefill_exec(self, tokens, prompt_lens, temps):
         """Run one group-shared prefill (single prompt row, member-bucket
@@ -1126,7 +1345,9 @@ class InferenceEngine:
             return
         held = set()
         for i in range(self.num_slots):
-            if self.slots[i] is not None or self._slot_session[i] is not None:
+            if (self.slots[i] is not None
+                    or self._slot_session[i] is not None
+                    or i in self._chunking):
                 held.update(self._slot_blocks[i])
             else:
                 assert not self._slot_blocks[i], \
@@ -1159,6 +1380,7 @@ class InferenceEngine:
         return (sess is not None and len(sess.tokens) > 0
                 and sess.slot is not None
                 and self.slots[sess.slot] is None
+                and sess.slot not in self._chunking
                 and sess.cache_version == self.policy_version)
 
     def _overflow_head(self) -> bool:
@@ -1192,6 +1414,7 @@ class InferenceEngine:
         extend run is about to re-activate."""
         parked = [(sess.last_use, sid) for sid, sess in self.sessions.items()
                   if sess.slot is not None and self.slots[sess.slot] is None
+                  and sess.slot not in self._chunking   # mid-chunk resident
                   and sid not in protect]
         if not parked:
             return None
@@ -1223,7 +1446,11 @@ class InferenceEngine:
         fallbacks — goes through the bucketed batched prefill, evicting
         LRU parked sessions when free slots run out. Requests that finish
         at their first token free their slot immediately, so keep
-        admitting until slots or queue run out."""
+        admitting until slots or queue run out. Under the SLO scheduler,
+        the queue is first stably partitioned by request class
+        (``_schedule_pending``); long prompts — fresh or resident-delta —
+        divert to the chunked-prefill path when chunking is enabled."""
+        self._schedule_pending()
         while self.pending:
             if isinstance(self.pending[0], GroupRequest):
                 if not self._admit_group():
@@ -1232,11 +1459,48 @@ class InferenceEngine:
             if self._overflow_head():
                 continue
             if self._is_resident_extend(self.pending[0]):
+                head = self.pending[0]
+                if (self._chunk_enabled
+                        and 1 + len(head.prompt_tokens) > self.chunk_prefill):
+                    # long resident delta: stream it in chunks instead of
+                    # one monolithic extend dispatch
+                    if not self._admit_chunked_resident(head):
+                        return
+                    continue
                 if not self._admit_extend_run():
                     return
                 continue
             if not self._admit_prefill_run():
                 return
+
+    def _sched_priority(self, req: Request) -> int:
+        """0 = high (interactive, or a rollout promoted past its deadline),
+        1 = normal. Promotion is sticky and counted once per request."""
+        if req.sched_class == "interactive" or req.promoted:
+            return 0
+        if (self.promote_after > 0
+                and self._step_count - req.submit_step >= self.promote_after):
+            req.promoted = True
+            self.stats.sched_promotions += 1
+            return 0
+        return 1
+
+    def _schedule_pending(self) -> None:
+        """Stable two-class partition of the pending queue: interactive
+        (and deadline-promoted rollout) work moves ahead of unpromoted
+        rollout work, FIFO *within* each class. Identity when every
+        queued unit shares one class — the single-tenant RL rollout path
+        keeps its exact FIFO order (and admission-run batching)."""
+        if len(self.pending) < 2:
+            return
+        pri = [(g, self._sched_priority(
+                    g.members[0] if isinstance(g, GroupRequest) else g))
+               for g in self.pending]
+        if all(p == pri[0][1] for _, p in pri):
+            return
+        hi = [g for g, p in pri if p == 0]
+        lo = [g for g, p in pri if p == 1]
+        self.pending = deque(hi + lo)
 
     def _admit_prefill_run(self) -> bool:
         """Admit the head run of prefill-type requests. Returns False when
@@ -1254,14 +1518,16 @@ class InferenceEngine:
             # will claim a slot and fresh blocks like any new prompt
             sess = self._session_of(req)
             if (sess is not None and sess.slot is not None
-                    and self.slots[sess.slot] is None):
+                    and self.slots[sess.slot] is None
+                    and sess.slot not in self._chunking):
                 self._slot_session[sess.slot] = None
                 if self.paged:
                     self._free_slot_blocks(sess.slot)
                 sess.slot = None
             want += 1
         free = [i for i in range(self.num_slots)
-                if self.slots[i] is None and self._slot_session[i] is None]
+                if self.slots[i] is None and self._slot_session[i] is None
+                and i not in self._chunking]
         while len(free) < want:
             slot = self._evict_lru_parked()
             if slot is None:
@@ -1271,15 +1537,28 @@ class InferenceEngine:
             return False
         reqs: List[Request] = []
         prompts: List[np.ndarray] = []
+        slot_ids: List[int] = []
         block_lists: List[List[int]] = []
+        used = 0
         progress = False
-        while (self.pending and len(reqs) < len(free)
+        while (self.pending and used < len(free)
                and not isinstance(self.pending[0], GroupRequest)
                and not self._is_resident_extend(self.pending[0])):
             if self._overflow_head():
                 progress = True
                 continue
             prompt = self._effective_prompt(self.pending[0])
+            if self._chunk_enabled and len(prompt) > self.chunk_prefill:
+                # long prompt: claim the slot now and stream the tokens in
+                # chunk-sized no-sample extends across the next steps —
+                # only the blocks the FIRST chunk covers are reserved
+                if not self._start_chunk(self.pending[0], prompt,
+                                         free[used]):
+                    break             # block backpressure: head waits
+                self.pending.popleft()
+                used += 1
+                progress = True
+                continue
             if self.paged:
                 # admission is gated on real KV capacity, not slot count:
                 # the prompt's blocks are claimed here (evicting parked
@@ -1293,8 +1572,10 @@ class InferenceEngine:
                 block_lists.append(blocks)
             reqs.append(self.pending.popleft())
             prompts.append(prompt)
+            slot_ids.append(free[used])
+            used += 1
         if reqs:
-            self._admit_batch(reqs, prompts, free[:len(reqs)], block_lists)
+            self._admit_batch(reqs, prompts, slot_ids, block_lists)
             progress = True
         return progress
 
@@ -1400,7 +1681,8 @@ class InferenceEngine:
             greq.members = []
             return True
         free = [i for i in range(self.num_slots)
-                if self.slots[i] is None and self._slot_session[i] is None]
+                if self.slots[i] is None and self._slot_session[i] is None
+                and i not in self._chunking]
         while len(free) < len(greq.members):
             slot = self._evict_lru_parked()
             if slot is None:
@@ -1650,6 +1932,259 @@ class InferenceEngine:
         self.stats.extend_requests += n
         self.stats.prefill_tokens += int(ext_lens[:n].sum())
 
+    # ------------------------------------------------------- chunked prefill
+
+    def _start_chunk(self, req: Request, tokens: np.ndarray, slot: int,
+                     base: int = 0, resident: bool = False) -> bool:
+        """Claim ``slot`` for a chunked prefill of ``tokens`` (cache
+        positions [base, base+len)). Reserves only the blocks the FIRST
+        chunk covers — the admission-control half of the SLO story: a
+        long prompt no longer has to find its whole block footprint free
+        at once. Returns False (head waits, backpressure) when even the
+        first chunk's blocks cannot be claimed."""
+        first = min(self.chunk_prefill, len(tokens))
+        if self.paged:
+            protect = {req.session_id} if req.session_id is not None else ()
+            if not self._reserve_slot_blocks(slot, base, first,
+                                             protect=protect):
+                return False
+        self._chunking[slot] = _ChunkedPrefill(
+            req=req, tokens=np.asarray(tokens, np.int32), base=base,
+            resident=resident, submit_step=req.submit_step,
+            start_version=self.policy_version)
+        self._slot_len[slot] = base
+        self.stats.chunked_admissions += 1
+        return True
+
+    def _admit_chunked_resident(self, req: Request) -> bool:
+        """Divert a long resident-session delta to the chunked path: the
+        parked slot keeps its cache and the [last history token] + delta
+        block streams in chunks from the session's position."""
+        sess = self.sessions[req.session_id]
+        tokens = np.concatenate([
+            sess.tokens[-1:], np.asarray(req.prompt_tokens, np.int32)])
+        base = self.n_prefix + len(sess.tokens) - 1
+        if not self._start_chunk(req, tokens, sess.slot, base=base,
+                                 resident=True):
+            return False
+        self.pending.popleft()
+        sess.last_use = self._next_use()
+        return True
+
+    def _advance_chunks(self) -> None:
+        """Advance every in-flight chunked prefill by (up to) one chunk,
+        highest scheduling priority first, within this tick's chunk-token
+        budget. Mid chunks dispatch as no-sample extends; a request's
+        last chunk goes through the sampling extend and activates (or
+        finishes) the slot. Block reservation is per-chunk; when every
+        chunking slot is starved for blocks AND nothing is decoding (so
+        no blocks will ever come back), the youngest chunking request is
+        sacrificed with ``finish_reason="overflow"`` to break the
+        deadlock."""
+        while self._chunking:
+            order = sorted(
+                self._chunking,
+                key=lambda s: (self._sched_priority(self._chunking[s].req),
+                               self._chunking[s].submit_step, s))
+            protect = {cs.req.session_id
+                       for cs in self._chunking.values()
+                       if cs.req.session_id is not None}
+            mid_rows: List[Tuple[int, int]] = []
+            fin_rows: List[Tuple[int, int]] = []
+            starved: List[int] = []
+            for slot in order:
+                cs = self._chunking[slot]
+                remaining = len(cs.tokens) - cs.written
+                take = min(self.chunk_prefill, remaining)
+                if self._budget_left is not None:
+                    if self._budget_left <= 0:
+                        self.stats.sched_budget_deferrals += 1
+                        continue
+                    take = min(take, self._budget_left)
+                if self.paged and not self._reserve_slot_blocks(
+                        slot, cs.base + cs.written, take, protect=protect):
+                    starved.append(slot)
+                    continue
+                if self._budget_left is not None:
+                    self._budget_left -= take
+                if cs.written + take == len(cs.tokens):
+                    fin_rows.append((slot, take))
+                else:
+                    mid_rows.append((slot, take))
+            if (starved and not mid_rows and not fin_rows
+                    and self.num_active == 0):
+                victim = max(starved,
+                             key=lambda s: (self._chunking[s].submit_step,
+                                            s))
+                self._abort_chunk(victim, "overflow")
+                continue   # retry with the sacrificed request's blocks
+            for S_b, rows in self._bucket_chunk_rows(mid_rows):
+                self._chunk_write(rows, S_b)
+            for S_b, rows in self._bucket_chunk_rows(fin_rows):
+                self._finish_chunk(rows, S_b)
+            return
+
+    def _bucket_chunk_rows(self, rows: List[Tuple[int, int]]):
+        """Group (slot, take) chunk rows by their extend bucket so each
+        group is one fused dispatch (deterministic ascending order)."""
+        groups: Dict[int, List[Tuple[int, int]]] = {}
+        for slot, take in rows:
+            cs = self._chunking[slot]
+            S_b = self._extend_bucket(take, cs.base + cs.written)
+            groups.setdefault(S_b, []).append((slot, take))
+        return sorted(groups.items())
+
+    def _chunk_write(self, rows: List[Tuple[int, int]], S_b: int) -> None:
+        """One fused mid-chunk dispatch: write each row's next chunk of
+        prompt K/V (no sampling, no RNG), scatter the advanced rows back
+        with inert sampling fields, and leave every row inactive."""
+        n = len(rows)
+        R = _pow2_bucket(n)
+        tokens = np.zeros((R, S_b), np.int32)
+        ext_lens = np.ones((R,), np.int32)
+        start_pos = np.zeros((R,), np.int32)
+        gather_idx = np.zeros((R,), np.int32)   # pad rows gather slot 0
+        slot_idx = np.full((R,), self.num_slots, np.int32)  # OOB rows drop
+        for r, (slot, take) in enumerate(rows):
+            cs = self._chunking[slot]
+            tokens[r, :take] = cs.tokens[cs.written:cs.written + take]
+            ext_lens[r] = take
+            start_pos[r] = cs.base + cs.written
+            gather_idx[r] = slot
+            slot_idx[r] = slot
+        st = self._chunk_exec(gather_idx, tokens, ext_lens, start_pos)
+        zeros_i = np.zeros((R,), np.int32)
+        ones_f = np.ones((R,), np.float32)
+        ones_i = np.ones((R,), np.int32)
+        row_active = np.zeros((R,), bool)
+        if self.paged:
+            coords = self._build_scatter_coords(slot_idx, S_b, start_pos)
+            self._scatter_exec(st, slot_idx, zeros_i, ones_f, ones_i,
+                               row_active, paged_coords=coords,
+                               row_gen=zeros_i)
+            # the scatter installed each row's full table from host truth
+            # (same stale-write hazard as the speculation round)
+            covered = {slot for slot, _ in rows}
+            self._table_dirty = [t for t in self._table_dirty
+                                 if t[0] not in covered]
+        else:
+            self._scatter_exec(st, slot_idx, zeros_i, ones_f, ones_i,
+                               row_active, row_gen=zeros_i)
+        for slot, take in rows:
+            cs = self._chunking[slot]
+            cs.written += take
+            self._slot_len[slot] = cs.base + cs.written
+            self.stats.chunk_tokens += take
+            self.stats.prefill_tokens += take
+        self.stats.prefill_chunks += 1
+
+    def _finish_chunk(self, rows: List[Tuple[int, int]], S_b: int) -> None:
+        """One fused final-chunk dispatch: the LAST chunk of each row's
+        prompt runs through the sampling extend (one RNG split — the
+        same split a monolithic admission would have consumed), the
+        first token records, and the slot activates (or finishes).
+        Session bookkeeping mirrors ``_admit_batch``/``_admit_extend``:
+        a fresh chunked prompt stamps ``cache_version`` with the policy
+        version AT ADMISSION — if weights updated mid-chunk the cache is
+        mixed-policy and the next turn must fall back to a re-prefill."""
+        n = len(rows)
+        R = _pow2_bucket(n)
+        tokens = np.zeros((R, S_b), np.int32)
+        ext_lens = np.ones((R,), np.int32)
+        start_pos = np.zeros((R,), np.int32)
+        temps = np.ones((R,), np.float32)
+        maxnew = np.ones((R,), np.int32)
+        gather_idx = np.zeros((R,), np.int32)   # pad rows gather slot 0
+        slot_idx = np.full((R,), self.num_slots, np.int32)  # OOB rows drop
+        for r, (slot, take) in enumerate(rows):
+            cs = self._chunking[slot]
+            req = cs.req
+            tokens[r, :take] = cs.tokens[cs.written:cs.written + take]
+            ext_lens[r] = take
+            start_pos[r] = cs.base + cs.written
+            temps[r] = req.temperature
+            maxnew[r] = max(1, req.max_new_tokens)
+            gather_idx[r] = slot
+            slot_idx[r] = slot
+        toks, lps, st = self._extend_exec(gather_idx, tokens, ext_lens,
+                                          start_pos, temps)
+        toks_h, lps_h = jax.device_get((toks, lps))
+
+        row_active = np.zeros((R,), bool)
+        deferred_free: List[int] = []
+        for r, (slot, take) in enumerate(rows):
+            cs = self._chunking.pop(slot)
+            req = cs.req
+            cs.written += take
+            self._slot_len[slot] = cs.base + cs.written
+            self.stats.chunk_tokens += take
+            self.stats.prefill_tokens += take
+            sess = self._session_of(req)
+            if sess is None:
+                # session closed (or none): no residency to maintain
+                self._slot_session[slot] = None
+            elif cs.resident:
+                sess.last_use = self._next_use()
+                self.stats.prefill_tokens_saved += cs.base - self.n_prefix
+            else:
+                if len(sess.tokens):
+                    self.stats.session_fallbacks += 1
+                sess.slot = slot
+                sess.last_use = self._next_use()
+                sess.cache_version = cs.start_version
+                self._slot_session[slot] = req.session_id
+            tok, lp = int(toks_h[r]), float(lps_h[r])
+            finished = (tok == self.eos_id) or (req.max_new_tokens <= 1)
+            self._record(req, tok, lp, finished)
+            if finished:
+                self._finish(req)
+                if self.paged and self._slot_session[slot] is None:
+                    deferred_free.append(slot)
+            else:
+                self.slots[slot] = req
+                row_active[r] = True
+        if self.paged:
+            coords = self._build_scatter_coords(slot_idx, S_b, start_pos)
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
+                               row_active, paged_coords=coords)
+            for slot in deferred_free:   # write-then-free, as everywhere
+                self._free_slot_blocks(slot)
+            covered = {slot for slot, _ in rows}
+            self._table_dirty = [t for t in self._table_dirty
+                                 if t[0] not in covered]
+        else:
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
+                               row_active)
+        self.stats.prefill_chunks += 1
+
+    def _abort_chunk(self, slot: int, reason: str) -> None:
+        """Tear down an in-flight chunked prefill on a terminal path
+        (overflow sacrifice, cancel): the request finishes with
+        ``reason`` and zero tokens, the session — if any — loses its
+        residency (the partially-written KV is inconsistent with the
+        un-updated history), and every reserved block returns to the
+        pool."""
+        cs = self._chunking.pop(slot)
+        req = cs.req
+        req.finished = True
+        req.finish_reason = reason
+        # no _finish(): nothing was generated; session history untouched
+        self.completed.append(req)
+        if reason == "cancelled":
+            self.stats.cancelled += 1
+        else:
+            self.stats.overflows += 1
+        sess = self._session_of(req)
+        if sess is not None and sess.slot == slot:
+            sess.slot = None
+        self._slot_session[slot] = None
+        if self.paged:
+            self._table_dirty = [t for t in self._table_dirty
+                                 if t[0] != slot]
+            self._free_slot_blocks(slot)
+            self._sync_kv_stats()
+        self._slot_len[slot] = 0
+
     def _finish(self, req: Request) -> None:
         """Bank a completed request and update its session: the turn's
         tokens join the host-side history and the slot parks (it is NOT
@@ -1664,6 +2199,14 @@ class InferenceEngine:
 
     def _record(self, req: Request, tok: int, lp: float,
                 finished: bool) -> None:
+        now = time.perf_counter()
+        if not req.completion:
+            req.first_token_ts = now
+            self.stats.ttft_window.append(now - req.submit_ts)
+        else:
+            self.stats.itl_window.append(now - req.last_token_ts)
+        req.last_token_ts = now
+        req.token_ts.append(now)
         req.completion.append(tok)
         req.logprobs.append(lp)
         req.versions.append(self.policy_version)
@@ -1738,6 +2281,12 @@ class InferenceEngine:
             # final (bonus/correction) token
             room = max(1, req.max_new_tokens) - len(req.completion) - 1
             k_r = min(self.spec_draft, room)
+            # the SLO token budget: a spec round commits up to k+1 tokens,
+            # so cap drafts at budget-1 — chunk writes claimed the budget
+            # first this tick, keeping chunked-prefill progress ahead of
+            # hot speculation
+            if self._budget_left is not None:
+                k_r = min(k_r, self._budget_left - 1)
             if k_r < 1:
                 continue
             draft = self._draft_tokens(req, k_r)
@@ -1813,6 +2362,8 @@ class InferenceEngine:
             self.stats.spec_rejected_tokens += k_r - m
             self.stats.spec_committed_tokens += committed
             committed_total += committed
+            if self._budget_left is not None:
+                self._budget_left = max(0, self._budget_left - committed)
             new_len = start + committed
             self._slot_len[i] = new_len
             row_pos[r] = new_len
@@ -1875,8 +2426,18 @@ class InferenceEngine:
         covered stream already advanced by the round's committed tokens
         and chains through its bonus token, so the tick would burn a
         dispatch re-deriving the next round's t0 sample. Returns tokens
-        generated this step (verify commits + decode tick)."""
+        generated this step (verify commits + decode tick).
+
+        With chunked prefill enabled, in-flight chunked prompts advance
+        by one chunk right after admission — chunk-tokens ride along
+        with the decode tick instead of monopolizing it — and the
+        per-tick token budget (when set) is claimed by chunk writes
+        first, speculation rounds second."""
+        self._step_count += 1
+        self._budget_left = (self.prefill_token_budget
+                             if self.prefill_token_budget > 0 else None)
         self._admit()
+        self._advance_chunks()
         self._overflow_full_slots()
         covered, spec_tokens = self._speculate()
         # a verify commit can land a slot exactly at max_seq: overflow it

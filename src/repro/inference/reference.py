@@ -20,6 +20,10 @@ fused engine and a reference engine constructed with the same seed must
 emit identical token / logprob / policy-version streams — including across
 in-flight ``update_weights`` — which is exactly what
 ``tests/test_engine.py::test_fused_engine_matches_host_reference`` asserts.
+The contract extends to chunked prefill: chunking decisions are shared
+deterministic host logic, mid chunks consume no RNG in either engine, and
+only the final (sampling) chunk splits the key — so chunked streams match
+byte-for-byte too.
 """
 from __future__ import annotations
 
@@ -145,6 +149,22 @@ class HostReferenceEngine(InferenceEngine):
             toks_h[r] = int(toks[r])                 # scalar sync per row
             lps_h[r] = float(logp[r, toks_h[r]])     # and per logprob
         return toks_h, lps_h, st
+
+    def _chunk_exec(self, gather_idx, tokens, ext_lens, start_pos):
+        """Host-path mid-prompt chunk: eager row gather + the jitted
+        extend logits call with the logits DISCARDED — no sampling and
+        no RNG split, exactly matching the fused no-sample chunk
+        dispatch. Chunking *decisions* (chunk sizes, scheduling order,
+        budget accounting) are deterministic host logic inherited from
+        the base engine, so both engines consume their RNG splits — only
+        at sampling chunks — in lockstep."""
+        gi = jnp.asarray(gather_idx)
+        rows = {key: (val[gi] if key == "pos" else val[:, gi])
+                for key, val in self.state.items()}
+        _, st = self._extend_logits(
+            self.params, rows, jnp.asarray(tokens), jnp.asarray(ext_lens),
+            jnp.asarray(start_pos))
+        return st
 
     def _verify_exec(self, gather_idx, tokens, ext_lens, start_pos, temps):
         """Host-path speculative verification: eager row gather + jitted

@@ -46,6 +46,18 @@ def main():
                         "and ring-cache families stay off regardless)")
     p.add_argument("--spec-ngram", type=int, default=3,
                    help="longest n-gram the prompt-lookup drafter matches")
+    p.add_argument("--chunk-prefill", type=int, default=0,
+                   help="chunked prefill: stream prompts longer than this "
+                        "many tokens in chunk-sized no-sample extends "
+                        "interleaved with decode ticks (0 = monolithic "
+                        "prefill; unsupported layouts stay monolithic)")
+    p.add_argument("--prefill-budget", type=int, default=0,
+                   help="SLO scheduler: max chunk+speculation tokens per "
+                        "engine tick (0 = unbounded)")
+    p.add_argument("--promote-after", type=int, default=64,
+                   help="promote a starved rollout-class request to "
+                        "interactive priority after this many ticks "
+                        "queued (0 = never)")
     args = p.parse_args()
 
     from repro.configs import get_config
@@ -70,7 +82,10 @@ def main():
         engines = [InferenceEngine(params, cfg, num_slots=args.slots,
                                    max_seq=args.max_seq, pcfg=pcfg,
                                    seed=i, spec_draft=args.spec_draft,
-                                   spec_ngram=args.spec_ngram, mesh=m)
+                                   spec_ngram=args.spec_ngram,
+                                   chunk_prefill=args.chunk_prefill,
+                                   prefill_token_budget=args.prefill_budget,
+                                   promote_after=args.promote_after, mesh=m)
                    for i, m in enumerate(meshes)]
         print(f"mesh serving: {dp} engine shard(s) x "
               f"{tp * ep} device(s) each "
@@ -79,7 +94,10 @@ def main():
         engines = [InferenceEngine(params, cfg, num_slots=args.slots,
                                    max_seq=args.max_seq, pcfg=pcfg, seed=i,
                                    spec_draft=args.spec_draft,
-                                   spec_ngram=args.spec_ngram)
+                                   spec_ngram=args.spec_ngram,
+                                   chunk_prefill=args.chunk_prefill,
+                                   prefill_token_budget=args.prefill_budget,
+                                   promote_after=args.promote_after)
                    for i in range(args.engines)]
     pool = InferencePool(engines)
 
@@ -120,6 +138,20 @@ def main():
               f"({accepted}/{drafted} drafts accepted, "
               f"{accepted / max(1, drafted):.0%} acceptance, "
               f"{stats['spec_saved_ticks']} decode ticks skipped)")
+    if stats["chunked_admissions"]:
+        print(f"chunked prefill: {stats['chunked_admissions']} admissions "
+              f"in {stats['prefill_chunks']} chunk dispatches "
+              f"({stats['chunk_tokens']} chunk tokens, "
+              f"{stats['sched_promotions']} deadline promotions, "
+              f"{stats['sched_budget_deferrals']} budget deferrals)")
+    lat = stats["latency"]
+    if lat["ttft_n"]:
+        print(f"latency (window of {lat['ttft_n']} requests): "
+              f"TTFT p50 {lat['ttft_p50'] * 1e3:.1f}ms / "
+              f"p99 {lat['ttft_p99'] * 1e3:.1f}ms; "
+              f"ITL p50 {lat['itl_p50'] * 1e3:.1f}ms / "
+              f"p99 {lat['itl_p99'] * 1e3:.1f}ms "
+              f"({lat['itl_n']} inter-token gaps)")
     if stats["kv_blocks_total"]:
         print(f"paged KV: peak {stats['kv_blocks_peak']}"
               f"/{stats['kv_blocks_total']} blocks "
