@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   sharded mesh-parallel engine: per-shard KV bytes, stream parity (§2.1)
   spec   self-drafting speculative decoding: multi-token ticks, parity-gated
   slo    chunked prefill vs monolithic under mixed open-loop traffic (p99 ITL)
+  prefix automatic prefix caching: shared-system-prompt traffic, parity-gated
   fig5   grouped-GEMM saturation vs experts (§2.1.8)
   fig10  IcePop vs GSPO stability under staleness (§3.3)
   tab    multi-client scaling (§2.1.4) + distributed Muon (§2.1.7)
@@ -34,6 +35,7 @@ MODULES = [
     ("fig_sharded_engine", "benchmarks.fig_sharded_engine"),
     ("fig_speculative", "benchmarks.fig_speculative"),
     ("fig_serving_slo", "benchmarks.fig_serving_slo"),
+    ("fig_prefix_cache", "benchmarks.fig_prefix_cache"),
     ("fig5_grouped_gemm", "benchmarks.fig5_grouped_gemm"),
     ("fig10_stability", "benchmarks.fig10_stability"),
     ("tab_scaling", "benchmarks.tab_scaling"),

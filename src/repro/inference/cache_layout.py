@@ -72,6 +72,17 @@ class CacheLayout:
     # modalities (VLM patch embeds), or a meta-token prefix (only
     # prefill prepends it).
     supports_chunked_prefill: bool
+    # whether full KV blocks may be content-addressed and shared across
+    # *unrelated* requests (automatic prefix caching). Requires EVERY
+    # growing state kind to be pageable: a hybrid layout pages its
+    # attention KV but carries per-slot recurrent rows that cannot be
+    # rebuilt from a claimed block chain, and a claimed prefix must
+    # reproduce the full per-slot state bit-for-bit (the byte-parity
+    # contract extends over cache hits). Ring caches and meta-token
+    # prefixes (prefill-injected, not content-addressed) also disqualify.
+    # Independent of ``allow_paging``: the host reference engine uses it
+    # to mirror the fused engine's cache decisions while staying unpaged.
+    supports_prefix_cache: bool
 
     @classmethod
     def from_config(cls, cfg: ModelConfig, max_seq: int,
@@ -93,11 +104,16 @@ class CacheLayout:
         paged = bool(allow_paging) and any(k.pageable for k in kinds)
         chunkable = (not ring and not cfg.is_encoder_decoder
                      and cfg.family != "vlm" and cfg.num_meta_tokens == 0)
+        prefix_cacheable = (bool(kinds)
+                            and all(k.pageable for k in kinds)
+                            and cfg.family != "vlm"
+                            and cfg.num_meta_tokens == 0)
         return cls(kinds=tuple(kinds), paged=paged,
                    supports_sessions=not ring,
                    has_recurrent_state=recurrent, ring=ring,
                    n_prefix=cfg.num_meta_tokens,
-                   supports_chunked_prefill=chunkable)
+                   supports_chunked_prefill=chunkable,
+                   supports_prefix_cache=prefix_cacheable)
 
     @property
     def supports_speculation(self) -> bool:

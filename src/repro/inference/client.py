@@ -315,6 +315,21 @@ class InferencePool:
             "sched_budget_deferrals": sum(e.stats.sched_budget_deferrals
                                           for e in self.engines),
             "cancelled": sum(e.stats.cancelled for e in self.engines),
+            # automatic prefix caching (all zero when prefix_cache=False)
+            "prefix_cache_hits": sum(e.stats.prefix_cache_hits
+                                     for e in self.engines),
+            "prefix_cache_misses": sum(e.stats.prefix_cache_misses
+                                       for e in self.engines),
+            "prefix_cache_hit_tokens": sum(e.stats.prefix_cache_hit_tokens
+                                           for e in self.engines),
+            "prefix_cache_cached_blocks": sum(
+                e.stats.prefix_cache_cached_blocks for e in self.engines),
+            "prefix_cache_retired": sum(e.stats.prefix_cache_retired
+                                        for e in self.engines),
+            "prefix_cache_reclaimed": sum(e.stats.prefix_cache_reclaimed
+                                          for e in self.engines),
+            "prefix_cache_swept": sum(e.stats.prefix_cache_swept
+                                      for e in self.engines),
             "latency": self.latency_snapshot(),
         }
 

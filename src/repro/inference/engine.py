@@ -193,7 +193,7 @@ from __future__ import annotations
 
 import contextlib
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
@@ -337,6 +337,14 @@ class EngineStats:
     kv_bytes_per_shard: int = 0  # K/V bytes resident per device shard
     cow_forks: int = 0           # copy-on-write private-block materializations
     blocks_freed_on_evict: int = 0  # blocks reclaimed by parked-session eviction
+    # automatic prefix caching (all zero when prefix_cache=False)
+    prefix_cache_hits: int = 0   # admissions that claimed >=1 cached block
+    prefix_cache_misses: int = 0  # cacheable admissions with no usable prefix
+    prefix_cache_hit_tokens: int = 0  # prompt tokens served from cached blocks
+    prefix_cache_cached_blocks: int = 0  # gauge: retired blocks claimable now
+    prefix_cache_retired: int = 0  # blocks ever retired into the cache
+    prefix_cache_reclaimed: int = 0  # cached blocks recycled for fresh allocs
+    prefix_cache_swept: int = 0  # stale-version mappings dropped on update
     # chunked prefill + SLO scheduler (all zero when chunk_prefill=0)
     chunked_admissions: int = 0  # requests admitted via chunked prefill
     prefill_chunks: int = 0      # no-sample chunk-write dispatches
@@ -416,7 +424,19 @@ class BlockAllocator:
     (copy-on-write), and a block returns to the free list only when its
     last reference drops (finish, eviction, ``close_session``, overflow).
     ``in_use`` counts *unique* blocks off the free list — the truth the
-    engine's KV stats and teardown leak assertions are written against."""
+    engine's KV stats and teardown leak assertions are written against.
+
+    Automatic prefix caching rides on top: a full block may be
+    *published* under a content-address node (an interned chained hash of
+    ``(parent node, block token ids, weights version)`` — interning makes
+    the chain collision-free by construction, strictly stronger than a
+    real hash). When a published block's last reference drops it is
+    *retired* into an LRU of zero-refcount-but-cached blocks instead of
+    returning to the free list; ``alloc`` reclaims from the LRU's oldest
+    end once the free list runs dry (unpublishing the victim — a
+    reclaimed block is never served as a hit again). Cache capacity is
+    therefore exactly the pool's idle space, and the leak invariant
+    extends to ``in_use + cached + free == total``."""
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
@@ -424,18 +444,44 @@ class BlockAllocator:
         self._ref = np.zeros((num_blocks,), np.int32)
         self.in_use = 0
         self.peak = 0
+        # -- prefix-cache state (inert until publish() is ever called) --
+        # interned chain nodes: (parent_node, token_tuple, version) -> id
+        self._node_ids: Dict[tuple, int] = {}
+        self._node_version: Dict[int, int] = {}
+        self._node_block: Dict[int, int] = {}     # node -> published block
+        self._block_node: Dict[int, int] = {}     # published block -> node
+        # zero-refcount published blocks, insertion order = retire order
+        # (oldest first — the reclaim end); block -> node
+        self._retired: "OrderedDict[int, int]" = OrderedDict()
+        self.retired_total = 0      # blocks ever retired into the cache
+        self.reclaimed_total = 0    # cached blocks recycled by alloc()
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def cached(self) -> int:
+        """Zero-refcount blocks held in the prefix cache (claimable)."""
+        return len(self._retired)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """All-or-nothing allocation; ``None`` means backpressure (the
-        caller leaves its request queued and retries after frees)."""
-        if n > len(self._free):
+        caller leaves its request queued and retries after frees). The
+        free list is preferred; once dry, cached (retired) blocks are
+        reclaimed oldest-retired-first and unpublished."""
+        if n > len(self._free) + len(self._retired):
             return None
-        ids = [self._free.pop() for _ in range(n)]
-        for b in ids:
+        ids = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                b, node = self._retired.popitem(last=False)  # oldest
+                del self._block_node[b]
+                del self._node_block[node]
+                self.reclaimed_total += 1
+            ids.append(b)
             self._ref[b] = 1
         self.in_use += n
         self.peak = max(self.peak, self.in_use)
@@ -450,17 +496,98 @@ class BlockAllocator:
         return int(self._ref[block])
 
     def free(self, ids) -> int:
-        """Drop one reference per id; returns how many blocks actually
-        went back to the free list (refcount reached zero)."""
+        """Drop one reference per id; returns how many blocks dropped to
+        refcount zero (left ``in_use``). A published block *retires* into
+        the prefix cache instead of rejoining the free list — eviction,
+        finish and close_session all retire rather than discard."""
         freed = 0
         for b in ids:
             assert self._ref[b] > 0, f"double free of block {b}"
             self._ref[b] -= 1
             if self._ref[b] == 0:
-                self._free.append(b)
+                if b in self._block_node:
+                    self._retired[b] = self._block_node[b]
+                    self.retired_total += 1
+                else:
+                    self._free.append(b)
                 freed += 1
         self.in_use -= freed
         return freed
+
+    # ------------------------------------------------- prefix-cache ops
+
+    def intern_node(self, parent: int, tokens: tuple, version: int) -> int:
+        """Content-address one full block: the collision-free realization
+        of the chained hash ``(parent_hash, block_token_ids,
+        weights_version)``. ``parent=-1`` roots a chain."""
+        key = (parent, tokens, version)
+        node = self._node_ids.get(key)
+        if node is None:
+            node = len(self._node_ids)
+            self._node_ids[key] = node
+            self._node_version[node] = version
+        return node
+
+    def lookup(self, node: int) -> Optional[int]:
+        """Block currently published under ``node`` (live or retired)."""
+        return self._node_block.get(node)
+
+    def claim(self, node: int) -> Optional[int]:
+        """Claim the block published under ``node`` as a prefix-cache
+        hit: a retired block revives (refcount 0 -> 1, back in use), a
+        live one gains a reference. None on miss."""
+        b = self._node_block.get(node)
+        if b is None:
+            return None
+        if b in self._retired:
+            del self._retired[b]
+            self._ref[b] = 1
+            self.in_use += 1
+            self.peak = max(self.peak, self.in_use)
+        else:
+            self._ref[b] += 1
+        return b
+
+    def publish(self, block: int, node: int) -> bool:
+        """Publish a full in-use block under its chain node. First
+        publisher wins: a concurrent duplicate (two requests prefilled
+        the same content before either published) keeps the existing
+        mapping and the duplicate block stays anonymous — it frees
+        normally instead of retiring."""
+        assert self._ref[block] > 0, f"publish of free block {block}"
+        if node in self._node_block or block in self._block_node:
+            return False
+        self._node_block[node] = block
+        self._block_node[block] = node
+        return True
+
+    def sweep_stale(self, version: int) -> int:
+        """Drop every published mapping whose node was interned under an
+        older weights version (the version in the chain key already makes
+        them unreachable — this reclaims the bytes). Stale *retired*
+        blocks return to the free list; stale live blocks just lose their
+        mapping and free normally when their refs drop."""
+        stale = [(b, n) for b, n in self._block_node.items()
+                 if self._node_version[n] != version]
+        for b, node in stale:
+            del self._block_node[b]
+            del self._node_block[node]
+            if b in self._retired:
+                del self._retired[b]
+                self._free.append(b)
+        return len(stale)
+
+    def assert_cache_consistent(self) -> None:
+        """The extended leak gate: every pool block is exactly one of
+        in-use, cached (retired), or free."""
+        assert self.in_use + len(self._retired) + len(self._free) \
+            == self.num_blocks, (
+            f"block pool leak: {self.in_use} in use + "
+            f"{len(self._retired)} cached + {len(self._free)} free "
+            f"!= {self.num_blocks} total")
+        for b in self._retired:
+            assert self._ref[b] == 0, f"retired block {b} has refs"
+            assert b in self._block_node, f"retired block {b} unpublished"
 
 
 class InferenceEngine:
@@ -489,8 +616,10 @@ class InferenceEngine:
                  kv_block_size: int = 16,
                  num_kv_blocks: Optional[int] = None,
                  spec_draft: int = 0, spec_ngram: int = 3,
-                 chunk_prefill: int = 0, prefill_token_budget: int = 0,
-                 promote_after: int = 64,
+                 chunk_prefill: int = 0,
+                 prefill_token_budget: Union[int, Dict[str, int]] = 0,
+                 promote_after: int = 64, promote_after_ms: float = 0.0,
+                 prefix_cache: bool = False,
                  mesh: Optional[Mesh] = None):
         self.mesh = mesh
         self.params = params
@@ -527,14 +656,46 @@ class InferenceEngine:
         # state shared with the reference engine, so chunking decisions
         # cannot perturb the parity contract.
         self.chunk_prefill = max(0, int(chunk_prefill))
-        self.prefill_token_budget = max(0, int(prefill_token_budget))
+        # prefill_token_budget: an int is the legacy engine-wide budget
+        # (one pool both classes draw from); a {"interactive": a,
+        # "rollout": b} dict gives each scheduler class its own per-tick
+        # pool, so rollout chunk floods cannot starve interactive first
+        # tokens. The engine-wide total stays the sum.
+        if isinstance(prefill_token_budget, dict):
+            self._budget_classes: Optional[Dict[int, int]] = {
+                0: max(0, int(prefill_token_budget.get("interactive", 0))),
+                1: max(0, int(prefill_token_budget.get("rollout", 0)))}
+            self.prefill_token_budget = sum(self._budget_classes.values())
+        else:
+            self._budget_classes = None
+            self.prefill_token_budget = max(0, int(prefill_token_budget))
         self.promote_after = max(0, int(promote_after))
+        # wall-clock deadline promotion (0 = off). NOT parity-safe across
+        # engines of different speeds — a fused run and the host oracle
+        # see different elapsed times — so parity suites leave it off;
+        # step-age promote_after stays the deterministic knob.
+        self.promote_after_ms = max(0.0, float(promote_after_ms))
         self._chunk_enabled = (self.chunk_prefill > 0
                                and self.layout.supports_chunked_prefill)
         # slot -> in-flight chunked admission (see _ChunkedPrefill)
         self._chunking: Dict[int, _ChunkedPrefill] = {}
-        self._budget_left: Optional[int] = None   # per-step, set in step()
+        # per-step remaining budget: class -> tokens (None = unbudgeted)
+        self._budget_left: Optional[Dict[int, int]] = None
         self._step_count = 0
+        # automatic prefix caching: full blocks become content-addressed
+        # and shared across unrelated requests. Gated by the layout (all
+        # growing state pageable, no meta prefix) — note the gate is
+        # paging-capability, not self.paged: the unpaged reference engine
+        # mirrors every cache/allocator decision host-side (``_kvacct``)
+        # so both engines claim the same prefixes in lockstep while the
+        # reference never skips compute.
+        self.prefix_cache = bool(prefix_cache) \
+            and self.layout.supports_prefix_cache
+        # host KV block accounting active? True for paged engines, and
+        # for the unpaged reference when prefix caching needs its shadow
+        # allocator. Device block ops stay gated on self.paged.
+        self._kvacct = self.paged or (self.prefix_cache
+                                      and self._shadow_kv_accounting())
         # meta-token prefix: cache entries (and _slot_len / block / bucket
         # accounting) include the n_prefix prepended slots prefill writes
         # before the text tokens
@@ -547,10 +708,16 @@ class InferenceEngine:
         while max_seq % bs:
             bs >>= 1
         self.kv_block_size = bs
+        if self.prefix_cache and self.chunk_prefill:
+            # chunk boundaries land on block boundaries, so a mid-chunk
+            # completion leaves behind fully-written (publishable) blocks
+            # — the same rounding on both engines (deterministic host
+            # config, shared with the reference)
+            self.chunk_prefill = -(-self.chunk_prefill // bs) * bs
 
         # cache dtype follows the served params dtype
         cache_dtype = jax.tree_util.tree_leaves(params)[0].dtype
-        if self.paged:
+        if self._kvacct:
             self._blocks_per_row = max_seq // bs
             if num_kv_blocks is None:
                 # default: byte parity with the dense layout — existing
@@ -560,18 +727,31 @@ class InferenceEngine:
                 num_kv_blocks = num_slots * self._blocks_per_row
             self.allocator: Optional[BlockAllocator] = \
                 BlockAllocator(num_kv_blocks)
-            self.state = init_paged_state(cfg, num_slots, num_kv_blocks, bs,
-                                          self._blocks_per_row, cache_dtype)
-            # host truth for every slot's block table; the device table is
-            # a mirror updated by scatters and _flush_table_updates
+            # host truth for every slot's block table; on a paged engine
+            # the device table is a mirror updated by scatters and
+            # _flush_table_updates (the unpaged reference keeps only the
+            # host truth — its shadow allocator mirrors the fused
+            # engine's cache decisions without any device pool)
             self._slot_blocks: List[List[int]] = \
                 [[] for _ in range(num_slots)]
             self._table_dirty: List[tuple] = []
             self.stats.kv_blocks_total = num_kv_blocks
         else:
             self.allocator = None
+        if self.paged:
+            self.state = init_paged_state(cfg, num_slots, num_kv_blocks, bs,
+                                          self._blocks_per_row, cache_dtype)
+        else:
             self.state = init_decode_state(cfg, num_slots, max_seq,
                                            cache_dtype)
+        # prefix-cache per-slot publication bookkeeping: the token ids
+        # written at cache positions [0, _slot_len), the chain nodes
+        # already published for the slot's leading full blocks, and the
+        # weights version the residency began under (a mid-flight weight
+        # update makes later blocks mixed-version: publication stops)
+        self._slot_toks: List[List[int]] = [[] for _ in range(num_slots)]
+        self._slot_nodes: List[List[int]] = [[] for _ in range(num_slots)]
+        self._slot_pubver = np.full((num_slots,), policy_version, np.int64)
         # logical K/V entries written per slot == the next decode write
         # position. Tracked for EVERY engine (incl. the host reference):
         # it drives the paged block-boundary allocs AND the shared
@@ -697,6 +877,15 @@ class InferenceEngine:
         path is gated by byte-identical streams against dense rows."""
         return True
 
+    def _shadow_kv_accounting(self) -> bool:
+        """Whether an *unpaged* engine should still run the full host
+        block-accounting (allocator, slot tables, prefix cache) as a
+        shadow. The reference engine opts in: prefix-cache hit decisions
+        depend on the complete allocator dynamics (refcounts, COW,
+        eviction, retire/reclaim order), so the oracle replays them
+        exactly — while never skipping compute."""
+        return False
+
     # ------------------------------------------------------------------ api
 
     def submit(self, req: Request) -> None:
@@ -751,7 +940,7 @@ class InferenceEngine:
             if sess is not None and sess.slot == i:
                 sess.slot = None   # partial-turn KV: drop residency
             self._slot_session[i] = None
-            if self.paged:
+            if self._kvacct:
                 self._free_slot_blocks(i)
                 self._sync_kv_stats()
             self._active = self._active.at[i].set(False)
@@ -780,7 +969,7 @@ class InferenceEngine:
                 and self.slots[sess.slot] is None \
                 and sess.slot not in self._chunking:
             self._slot_session[sess.slot] = None
-            if self.paged:
+            if self._kvacct:
                 self._free_slot_blocks(sess.slot)
                 self._sync_kv_stats()
 
@@ -804,6 +993,13 @@ class InferenceEngine:
         self.params = placed
         self.policy_version = version
         self.stats.weight_updates += 1
+        if self.prefix_cache:
+            # the version in the chain key already makes stale entries
+            # unreachable; the sweep reclaims their bytes immediately
+            # (deterministic host logic — the reference sweeps in
+            # lockstep, so cache decisions stay identical)
+            self.stats.prefix_cache_swept += \
+                self.allocator.sweep_stale(version)
 
     def update_weights(self, params, version: int) -> None:
         """In-flight policy update (relay + commit in one call)."""
@@ -1146,10 +1342,13 @@ class InferenceEngine:
 
     def _free_slot_blocks(self, slot: int, evicted: bool = False) -> None:
         """Return a slot's block references to the allocator (shared blocks
-        only free when the last referencing member drops them)."""
+        only free when the last referencing member drops them; published
+        full blocks *retire* into the prefix cache instead of freeing)."""
         n = self.allocator.free(self._slot_blocks[slot])
         self._slot_blocks[slot] = []
         self._slot_len[slot] = 0
+        self._slot_toks[slot] = []
+        self._slot_nodes[slot] = []
         if evicted:
             self.stats.blocks_freed_on_evict += n
 
@@ -1181,9 +1380,10 @@ class InferenceEngine:
         if ids is None:
             return False
         new = ids[0]
-        self.state["k"], self.state["v"] = self._copy_block_fn(
-            self.state["k"], self.state["v"], jnp.int32(new),
-            jnp.int32(old))
+        if self.paged:   # device copy; the shadow oracle is bookkeeping-only
+            self.state["k"], self.state["v"] = self._copy_block_fn(
+                self.state["k"], self.state["v"], jnp.int32(new),
+                jnp.int32(old))
         self.allocator.free([old])
         self._slot_blocks[slot][li] = new
         self._table_dirty.append((slot, li, new))
@@ -1192,8 +1392,12 @@ class InferenceEngine:
 
     def _flush_table_updates(self) -> None:
         """Push queued host-table changes (decode-growth allocations, COW
-        swaps) to the device block table in one dispatch."""
-        if not self.paged or not self._table_dirty:
+        swaps) to the device block table in one dispatch. The unpaged
+        shadow oracle has no device table: it just drops the queue."""
+        if not self._kvacct or not self._table_dirty:
+            return
+        if not self.paged:
+            self._table_dirty.clear()
             return
         rows = np.array([t[0] for t in self._table_dirty], np.int32)
         cols = np.array([t[1] for t in self._table_dirty], np.int32)
@@ -1270,7 +1474,7 @@ class InferenceEngine:
         list is short); a shared block is copy-on-write'd. A slot the
         pool genuinely cannot serve finishes gracefully with
         ``finish_reason="overflow"`` instead of crashing the pump loop."""
-        if not self.paged:
+        if not self._kvacct:
             return
         bs = self.kv_block_size
         starved = []
@@ -1320,16 +1524,20 @@ class InferenceEngine:
         sess = self._session_of(req)
         if sess is None or sess.slot != slot:
             self._slot_session[slot] = None
-            if self.paged:
+            if self._kvacct:
                 self._free_slot_blocks(slot)
         self._active = self._active.at[slot].set(False)
         if self._slot_sharding is not None:
             self._active = jax.device_put(self._active, self._slot_sharding)
 
     def _sync_kv_stats(self) -> None:
-        if self.paged:
+        if self._kvacct:
             self.stats.kv_blocks_in_use = self.allocator.in_use
             self.stats.kv_blocks_peak = self.allocator.peak
+            self.stats.prefix_cache_cached_blocks = self.allocator.cached
+            self.stats.prefix_cache_retired = self.allocator.retired_total
+            self.stats.prefix_cache_reclaimed = \
+                self.allocator.reclaimed_total
         if self._state_row_bytes:
             parked = sum(1 for i in range(self.num_slots)
                          if self.slots[i] is None
@@ -1340,9 +1548,12 @@ class InferenceEngine:
         """Block-leak gate (runs at every ``run_until_idle`` teardown):
         each in-use pool block must be reachable from an occupied or
         parked slot, and freed slots must hold no blocks — so with no
-        resident sessions, ``in_use == 0``."""
-        if not self.paged:
+        resident sessions, ``in_use == 0``. With prefix caching the gate
+        extends: every pool block is exactly one of in-use, cached
+        (retired into the prefix cache), or free."""
+        if not self._kvacct:
             return
+        self.allocator.assert_cache_consistent()
         held = set()
         for i in range(self.num_slots):
             if (self.slots[i] is not None
@@ -1370,12 +1581,16 @@ class InferenceEngine:
         hist = len(sess.tokens) if sess is not None else 0
         return self.n_prefix + hist + len(req.prompt_tokens)
 
-    def _is_resident_extend(self, req: Request) -> bool:
+    def _is_resident_extend(self, req) -> bool:
         """True when the request continues a session whose slot + KV cache
         are still resident (parked) AND still built under the current
         policy — the extend fast path. A stale cache (weight update since
         the prefix was built) forces the full-re-prefill fallback so fresh
-        turns sample against self-consistent new-policy KV."""
+        turns sample against self-consistent new-policy KV. Accepts a
+        GroupRequest (always False): the extend-run batching loop walks
+        the pending queue past the head, where groups may sit."""
+        if isinstance(req, GroupRequest):
+            return False
         sess = self._session_of(req)
         return (sess is not None and len(sess.tokens) > 0
                 and sess.slot is not None
@@ -1392,7 +1607,7 @@ class InferenceEngine:
         rollout."""
         req = self.pending[0]
         fits = self._required_len(req) <= self.max_seq
-        if fits and self.paged:
+        if fits and self._kvacct:
             fits = (self._blocks_for(self._required_len(req))
                     <= self.allocator.num_blocks)
         if fits:
@@ -1422,7 +1637,10 @@ class InferenceEngine:
         sess = self.sessions[sid]
         slot, sess.slot = sess.slot, None
         self._slot_session[slot] = None
-        if self.paged:
+        if self._kvacct:
+            # published full blocks retire into the prefix cache here
+            # instead of freeing — an evicted conversation's prefix is
+            # exactly the kind of content the next request re-sends
             self._free_slot_blocks(slot, evicted=True)
         self.stats.session_evictions += 1
         return slot
@@ -1475,15 +1693,47 @@ class InferenceEngine:
 
     def _sched_priority(self, req: Request) -> int:
         """0 = high (interactive, or a rollout promoted past its deadline),
-        1 = normal. Promotion is sticky and counted once per request."""
+        1 = normal. Promotion is sticky and counted once per request.
+        Two deadlines promote: step age (``promote_after``, deterministic
+        — the parity-safe default) and wall-clock age
+        (``promote_after_ms`` against the ``submit_ts`` stamp, for real
+        latency SLOs where a step is not a unit of time)."""
         if req.sched_class == "interactive" or req.promoted:
             return 0
-        if (self.promote_after > 0
-                and self._step_count - req.submit_step >= self.promote_after):
+        aged = (self.promote_after > 0
+                and self._step_count - req.submit_step >= self.promote_after)
+        if not aged and self.promote_after_ms > 0 and req.submit_ts > 0:
+            aged = (time.perf_counter() - req.submit_ts) * 1e3 \
+                >= self.promote_after_ms
+        if aged:
             req.promoted = True
             self.stats.sched_promotions += 1
             return 0
         return 1
+
+    # ------------------------------------------- per-class prefill budget
+
+    def _budget_class(self, req: Request) -> int:
+        """Which per-tick budget pool a request draws from: promoted
+        rollouts spend from the interactive pool — promotion exists to
+        let aged work cut the line, budget included."""
+        return self._sched_priority(req)
+
+    def _budget_for(self, req: Request) -> Optional[int]:
+        """Remaining prefill-token budget for ``req`` this tick (None =
+        unbudgeted). With an engine-wide (int) budget both classes share
+        pool 0."""
+        if self._budget_left is None:
+            return None
+        if self._budget_classes is None:
+            return self._budget_left[0]
+        return self._budget_left[self._budget_class(req)]
+
+    def _budget_take(self, req: Request, n: int) -> None:
+        if self._budget_left is None or n <= 0:
+            return
+        c = 0 if self._budget_classes is None else self._budget_class(req)
+        self._budget_left[c] = max(0, self._budget_left[c] - n)
 
     def _schedule_pending(self) -> None:
         """Stable two-class partition of the pending queue: interactive
@@ -1501,6 +1751,179 @@ class InferenceEngine:
         hi = [g for g, p in pri if p == 0]
         lo = [g for g, p in pri if p == 1]
         self.pending = deque(hi + lo)
+
+    # --------------------------------------------- automatic prefix caching
+
+    def _match_cached_prefix(self, prompt: np.ndarray) -> List[int]:
+        """Walk the prompt's chained block hashes against the published
+        map and return the leading run of cached chain nodes. Capped at
+        ``(len(prompt)-1) // block_size`` blocks so the admission dispatch
+        always has at least one uncached token to feed (the model needs a
+        real forward to sample the first output token). Deterministic
+        host logic shared verbatim with the reference engine — both
+        engines see the same allocator state, so they match (and claim)
+        identical prefixes in lockstep."""
+        bs = self.kv_block_size
+        nodes: List[int] = []
+        parent = -1
+        for j in range((len(prompt) - 1) // bs):
+            node = self.allocator.intern_node(
+                parent, tuple(int(t) for t in prompt[j * bs:(j + 1) * bs]),
+                self.policy_version)
+            if self.allocator.lookup(node) is None:
+                break
+            nodes.append(node)
+            parent = node
+        return nodes
+
+    def _admit_cached(self, req: Request, prompt: np.ndarray, slot: int,
+                      nodes: List[int]) -> bool:
+        """Admit one prefix-cache-hit request: claim the cached leading
+        blocks by refcount bump (zero recompute, zero new KV bytes for
+        the prefix), allocate blocks for the uncached suffix, and run a
+        single-row extend over the suffix at ``start_pos = cached_len``
+        — the same dispatch shape PR 2's session-extend parity test pins
+        bitwise against a full re-prefill. A suffix longer than the
+        chunk threshold streams through the chunked path from the cached
+        base instead. Returns False on pool backpressure (claim released
+        — retired blocks return to the cache unharmed; head waits)."""
+        bs = self.kv_block_size
+        claimed: List[int] = []
+        for node in nodes:
+            b = self.allocator.claim(node)
+            assert b is not None, "matched node vanished within admission"
+            claimed.append(b)
+        c = len(claimed) * bs
+        suffix = prompt[c:]
+        # attach the claim before any further allocation: _alloc_evicting
+        # may evict parked sessions, and the claim must be reachable (and
+        # releasable through _free_slot_blocks on every failure path)
+        self._slot_blocks[slot] = claimed
+        self._slot_toks[slot] = [int(t) for t in prompt[:c]]
+        self._slot_nodes[slot] = list(nodes)
+        self._slot_pubver[slot] = self.policy_version
+        if self.paged:
+            # the hit dispatch (extend or first chunk) GATHERS the slot's
+            # pages before any scatter installs a table: the device table
+            # must hold the claimed blocks up front
+            for j, b in enumerate(claimed):
+                self._table_dirty.append((slot, j, b))
+            self._flush_table_updates()
+        # the unpaged oracle recomputes the claimed prefix K/V into its
+        # dense row here (no RNG) — the fused engine's blocks already
+        # hold it, so this is a no-op for us
+        self._restore_cached_prefix(slot, prompt, c)
+        if self._chunk_enabled and len(suffix) > self.chunk_prefill:
+            # long uncached suffix: stream it in chunks from the cached
+            # base (c is block-aligned, so the first chunk's boundary
+            # block is freshly allocated — no COW against the claim)
+            if not self._start_chunk(req, suffix, slot, base=c):
+                self._free_slot_blocks(slot)
+                return False
+        else:
+            need = self._blocks_for(c + len(suffix)) - len(claimed)
+            blocks = self._alloc_evicting(need) if need > 0 else []
+            if blocks is None:
+                self._free_slot_blocks(slot)
+                return False
+            self._slot_blocks[slot] = claimed + blocks
+            self._slot_len[slot] = c + len(suffix)
+            if self.paged:
+                for j, b in enumerate(blocks):
+                    self._table_dirty.append((slot, len(claimed) + j, b))
+                self._flush_table_updates()
+            tok, lp = self._cached_admit_exec(slot, prompt, c, req)
+            sess = self._session_of(req)
+            if sess is not None:
+                if len(sess.tokens):
+                    self.stats.session_fallbacks += 1
+                sess.slot = slot
+                sess.last_use = self._next_use()
+                sess.cache_version = self.policy_version
+                self._slot_session[slot] = req.session_id
+            finished = (tok == self.eos_id) or (req.max_new_tokens <= 1)
+            self._record(req, tok, lp, finished)
+            self._publish_slot_blocks(slot)
+            if finished:
+                self._finish(req)
+                if self._slot_session[slot] is None:
+                    # write-then-free, as everywhere: the suffix scatter
+                    # is already enqueued when the blocks recycle
+                    self._free_slot_blocks(slot)
+            else:
+                self.slots[slot] = req
+            self.stats.prefills += 1
+            self.stats.prefill_requests += 1
+            self.stats.prefill_tokens += len(suffix)
+        self.stats.prefix_cache_hits += 1
+        self.stats.prefix_cache_hit_tokens += c
+        self.stats.prefill_tokens_saved += c
+        return True
+
+    def _restore_cached_prefix(self, slot: int, prompt: np.ndarray,
+                               c: int) -> None:
+        """Hook for the unpaged oracle: recompute a claimed prefix's K/V
+        into the dense slot row (see ``HostReferenceEngine``). The fused
+        engine's claimed blocks already hold the bytes — no-op here."""
+
+    def _cached_admit_exec(self, slot: int, prompt: np.ndarray, c: int,
+                           req: Request) -> Tuple[int, float]:
+        """Device half of a cache-hit admission: one single-row extend
+        over the uncached suffix against the (claimed, or — oracle —
+        restored) prefix KV, sampling the first token. One RNG split:
+        exactly the split a full prefill of this prompt would have
+        consumed, so hit admissions keep both engines' RNG schedules in
+        lockstep. PR 2's extend-vs-reprefill test pins this dispatch
+        shape to bitwise-equal logits against a monolithic prefill."""
+        suffix = prompt[c:]
+        S_b = self._extend_bucket(len(suffix), c)
+        tokens = np.zeros((1, S_b), np.int32)
+        tokens[0, :len(suffix)] = suffix
+        ext_lens = np.array([len(suffix)], np.int32)
+        start_pos = np.array([c], np.int32)
+        temps = np.array([req.temperature], np.float32)
+        maxnew = np.array([max(1, req.max_new_tokens)], np.int32)
+        gather_idx = np.array([slot], np.int32)
+        slot_idx = np.array([slot], np.int32)
+        toks, lps, st = self._extend_exec(gather_idx, tokens, ext_lens,
+                                          start_pos, temps)
+        toks_h, lps_h = jax.device_get((toks, lps))
+        tok, lp = int(toks_h[0]), float(lps_h[0])
+        finished = (tok == self.eos_id) or (req.max_new_tokens <= 1)
+        row_active = np.array([not finished], bool)
+        if self.paged:
+            coords = self._build_scatter_coords(slot_idx, S_b, start_pos)
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
+                               row_active, paged_coords=coords)
+        else:
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
+                               row_active)
+        return tok, lp
+
+    def _publish_slot_blocks(self, slot: int) -> None:
+        """Publish the slot's newly-filled full blocks under their chain
+        nodes (first publisher wins — a duplicate stays anonymous and
+        frees normally). Publication stops the moment the policy version
+        moves past the version the residency was admitted under: KV
+        written after a weight update would extend an old-version chain
+        with mixed-version content."""
+        if not self.prefix_cache:
+            return
+        if int(self._slot_pubver[slot]) != self.policy_version:
+            return
+        bs = self.kv_block_size
+        toks = self._slot_toks[slot]
+        nodes = self._slot_nodes[slot]
+        blocks = self._slot_blocks[slot]
+        nfull = min(len(toks) // bs, len(blocks))
+        while len(nodes) < nfull:
+            j = len(nodes)
+            parent = nodes[-1] if nodes else -1
+            node = self.allocator.intern_node(
+                parent, tuple(toks[j * bs:(j + 1) * bs]),
+                self.policy_version)
+            self.allocator.publish(blocks[j], node)
+            nodes.append(node)
 
     def _admit_prefill_run(self) -> bool:
         """Admit the head run of prefill-type requests. Returns False when
@@ -1521,7 +1944,7 @@ class InferenceEngine:
                     and self.slots[sess.slot] is None
                     and sess.slot not in self._chunking):
                 self._slot_session[sess.slot] = None
-                if self.paged:
+                if self._kvacct:
                     self._free_slot_blocks(sess.slot)
                 sess.slot = None
             want += 1
@@ -1548,6 +1971,24 @@ class InferenceEngine:
                 progress = True
                 continue
             prompt = self._effective_prompt(self.pending[0])
+            nodes = (self._match_cached_prefix(prompt)
+                     if self.prefix_cache else [])
+            if nodes:
+                # prefix-cache hit: the head admits through its own
+                # single-row dispatch (claim cached blocks, compute only
+                # the uncached suffix). Flush the dense batch accumulated
+                # so far first — FIFO dispatch order is part of the
+                # parity contract — and let the next run (same _admit
+                # pass) take the hit with a clean accumulator.
+                if reqs:
+                    break
+                if not self._admit_cached(self.pending[0], prompt,
+                                          free[used], nodes):
+                    break             # block backpressure: head waits
+                self.pending.popleft()
+                used += 1
+                progress = True
+                continue
             if self._chunk_enabled and len(prompt) > self.chunk_prefill:
                 # long prompt: claim the slot now and stream the tokens in
                 # chunk-sized no-sample extends across the next steps —
@@ -1555,11 +1996,13 @@ class InferenceEngine:
                 if not self._start_chunk(self.pending[0], prompt,
                                          free[used]):
                     break             # block backpressure: head waits
+                if self.prefix_cache:
+                    self.stats.prefix_cache_misses += 1
                 self.pending.popleft()
                 used += 1
                 progress = True
                 continue
-            if self.paged:
+            if self._kvacct:
                 # admission is gated on real KV capacity, not slot count:
                 # the prompt's blocks are claimed here (evicting parked
                 # LRU sessions if the free list is short) and the request
@@ -1570,6 +2013,8 @@ class InferenceEngine:
                 if blocks is None:
                     break
                 block_lists.append(blocks)
+            if self.prefix_cache:
+                self.stats.prefix_cache_misses += 1
             reqs.append(self.pending.popleft())
             prompts.append(prompt)
             slot_ids.append(free[used])
@@ -1603,7 +2048,7 @@ class InferenceEngine:
             pos = self.n_prefix + len(sess.tokens) - 1
             if 1 + len(req.prompt_tokens) > S_b or pos + S_b > self.max_seq:
                 break
-            if self.paged and not self._reserve_extend_blocks(
+            if self._kvacct and not self._reserve_extend_blocks(
                     sess, pos, 1 + len(req.prompt_tokens),
                     protect=seen | {req.session_id}):
                 break
@@ -1664,7 +2109,7 @@ class InferenceEngine:
         # shared blocks ahead of the prompt tokens
         full, tail = divmod(self.n_prefix + plen, self.kv_block_size)
         doomed = self.n_prefix + plen > self.max_seq
-        if not doomed and self.paged:
+        if not doomed and self._kvacct:
             # one member needs the shared full blocks plus (maybe) a tail
             # block; if even that exceeds the whole pool, waiting would
             # deadlock the queue
@@ -1693,7 +2138,7 @@ class InferenceEngine:
         k = min(len(free), len(greq.members))
         shared: List[int] = []
         tails: List[int] = []
-        if self.paged:
+        if self._kvacct:
             # claim the shared prompt blocks once, then one private tail
             # block per member (copy-on-write: members share the full
             # blocks via refcounts and own only the partial tail they
@@ -1750,7 +2195,11 @@ class InferenceEngine:
             maxnew[r] = max(1, req.max_new_tokens)
         for r in range(k):
             self._slot_len[slot_ids[r]] = self.n_prefix + plen
-        if self.paged:
+            if self.prefix_cache:
+                self._slot_toks[slot_ids[r]] = [int(t) for t in prompt]
+                self._slot_nodes[slot_ids[r]] = []
+                self._slot_pubver[slot_ids[r]] = self.policy_version
+        if self._kvacct:
             for r in range(k):
                 if r:
                     self.allocator.incref(shared)
@@ -1788,17 +2237,22 @@ class InferenceEngine:
                                              k, shared, tails)
             self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
                                     row_active, paged_coords=coords)
-            # first-token finishes with no session to park for release
-            # their blocks right after the scatter wrote them (write then
-            # free keeps dispatch order sound: a later admission can only
-            # recycle the block after this scatter is enqueued)
+        else:
+            self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
+                                    row_active)
+        if self._kvacct:
+            # publish the shared full prompt blocks (first member wins,
+            # siblings' publishes are first-wins no-ops on the same
+            # physical blocks), THEN release first-token finishes with
+            # no session to park for — write then publish then free
+            # keeps dispatch order sound: a later admission can only
+            # recycle a block after this fork scatter is enqueued
+            for r in range(k):
+                self._publish_slot_blocks(slot_ids[r])
             for r, req in enumerate(members):
                 if req.finished and self.slots[slot_ids[r]] is None \
                         and self._slot_session[slot_ids[r]] is None:
                     self._free_slot_blocks(slot_ids[r])
-        else:
-            self._fork_scatter_exec(st, slot_idx, toks, temps, maxnew,
-                                    row_active)
         self.stats.group_prefills += 1
         self.stats.group_fork_requests += k
         self.stats.prefill_tokens += plen               # prefilled ONCE
@@ -1829,7 +2283,11 @@ class InferenceEngine:
             temps[r] = req.temperature
             maxnew[r] = max(1, req.max_new_tokens)
             self._slot_len[slot_ids[r]] = self.n_prefix + len(p)
-            if self.paged:
+            if self.prefix_cache:
+                self._slot_toks[slot_ids[r]] = [int(t) for t in p]
+                self._slot_nodes[slot_ids[r]] = []
+                self._slot_pubver[slot_ids[r]] = self.policy_version
+            if self._kvacct:
                 assert not self._slot_blocks[slot_ids[r]], \
                     f"slot {slot_ids[r]} re-admitted while holding blocks"
                 self._slot_blocks[slot_ids[r]] = block_lists[r]
@@ -1863,15 +2321,18 @@ class InferenceEngine:
                 slot_idx, self.n_prefix + S_b, np.zeros((R,), np.int32))
             self._scatter_exec(st, slot_idx, toks, temps, maxnew,
                                row_active, paged_coords=coords)
-            # first-token finishes with no session to park for: reclaim
-            # (after the scatter — write-then-free keeps dispatch order
-            # sound for any admission that recycles the block)
+        else:
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
+        if self._kvacct:
+            # publish full prompt blocks, then reclaim first-token
+            # finishes with no session to park for (write then publish
+            # then free keeps dispatch order sound for any admission
+            # that recycles the block)
             for r, req in enumerate(reqs):
+                self._publish_slot_blocks(slot_ids[r])
                 if req.finished and self.slots[slot_ids[r]] is None \
                         and self._slot_session[slot_ids[r]] is None:
                     self._free_slot_blocks(slot_ids[r])
-        else:
-            self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
         self.stats.prefills += 1
         self.stats.prefill_requests += n
         self.stats.prefill_tokens += int(sum(lens))
@@ -1902,6 +2363,8 @@ class InferenceEngine:
             gather_idx[r] = sess.slot
             slot_idx[r] = sess.slot
             sess.last_use = self._next_use()
+            if self.prefix_cache:
+                self._slot_toks[sess.slot].extend(int(t) for t in block)
             self._slot_len[sess.slot] = int(start_pos[r] + ext_lens[r])
         toks, lps, st = self._extend_exec(gather_idx, tokens, ext_lens,
                                           start_pos, temps)
@@ -1928,6 +2391,9 @@ class InferenceEngine:
                                row_active, paged_coords=coords)
         else:
             self._scatter_exec(st, slot_idx, toks, temps, maxnew, row_active)
+        if self.prefix_cache:
+            for req in reqs:
+                self._publish_slot_blocks(self.sessions[req.session_id].slot)
         self.stats.extends += 1
         self.stats.extend_requests += n
         self.stats.prefill_tokens += int(ext_lens[:n].sum())
@@ -1943,7 +2409,7 @@ class InferenceEngine:
         at once. Returns False (head waits, backpressure) when even the
         first chunk's blocks cannot be claimed."""
         first = min(self.chunk_prefill, len(tokens))
-        if self.paged:
+        if self._kvacct:
             protect = {req.session_id} if req.session_id is not None else ()
             if not self._reserve_slot_blocks(slot, base, first,
                                              protect=protect):
@@ -1952,6 +2418,8 @@ class InferenceEngine:
             req=req, tokens=np.asarray(tokens, np.int32), base=base,
             resident=resident, submit_step=req.submit_step,
             start_version=self.policy_version)
+        if self.prefix_cache and not resident:
+            self._slot_pubver[slot] = self.policy_version
         self._slot_len[slot] = base
         self.stats.chunked_admissions += 1
         return True
@@ -1996,17 +2464,17 @@ class InferenceEngine:
                 cs = self._chunking[slot]
                 remaining = len(cs.tokens) - cs.written
                 take = min(self.chunk_prefill, remaining)
-                if self._budget_left is not None:
-                    if self._budget_left <= 0:
+                b = self._budget_for(cs.req)
+                if b is not None:
+                    if b <= 0:
                         self.stats.sched_budget_deferrals += 1
                         continue
-                    take = min(take, self._budget_left)
-                if self.paged and not self._reserve_slot_blocks(
+                    take = min(take, b)
+                if self._kvacct and not self._reserve_slot_blocks(
                         slot, cs.base + cs.written, take, protect=protect):
                     starved.append(slot)
                     continue
-                if self._budget_left is not None:
-                    self._budget_left -= take
+                self._budget_take(cs.req, take)
                 if cs.written + take == len(cs.tokens):
                     fin_rows.append((slot, take))
                 else:
@@ -2062,18 +2530,26 @@ class InferenceEngine:
             self._scatter_exec(st, slot_idx, zeros_i, ones_f, ones_i,
                                row_active, paged_coords=coords,
                                row_gen=zeros_i)
-            # the scatter installed each row's full table from host truth
-            # (same stale-write hazard as the speculation round)
-            covered = {slot for slot, _ in rows}
-            self._table_dirty = [t for t in self._table_dirty
-                                 if t[0] not in covered]
         else:
             self._scatter_exec(st, slot_idx, zeros_i, ones_f, ones_i,
                                row_active, row_gen=zeros_i)
+        if self._kvacct:
+            # the paged scatter installed each row's full table from host
+            # truth (same stale-write hazard as the speculation round)
+            covered = {slot for slot, _ in rows}
+            self._table_dirty = [t for t in self._table_dirty
+                                 if t[0] not in covered]
         for slot, take in rows:
             cs = self._chunking[slot]
+            if self.prefix_cache:
+                self._slot_toks[slot].extend(
+                    int(t) for t in cs.tokens[cs.written:cs.written + take])
             cs.written += take
             self._slot_len[slot] = cs.base + cs.written
+            # mid-chunk completions leave behind fully-written blocks —
+            # publish them now (chunk size is block-aligned under prefix
+            # caching, so every mid chunk ends on a block boundary)
+            self._publish_slot_blocks(slot)
             self.stats.chunk_tokens += take
             self.stats.prefill_tokens += take
         self.stats.prefill_chunks += 1
@@ -2115,6 +2591,9 @@ class InferenceEngine:
         for r, (slot, take) in enumerate(rows):
             cs = self._chunking.pop(slot)
             req = cs.req
+            if self.prefix_cache:
+                self._slot_toks[slot].extend(
+                    int(t) for t in cs.tokens[cs.written:cs.written + take])
             cs.written += take
             self._slot_len[slot] = cs.base + cs.written
             self.stats.chunk_tokens += take
@@ -2138,7 +2617,7 @@ class InferenceEngine:
             self._record(req, tok, lp, finished)
             if finished:
                 self._finish(req)
-                if self.paged and self._slot_session[slot] is None:
+                if self._kvacct and self._slot_session[slot] is None:
                     deferred_free.append(slot)
             else:
                 self.slots[slot] = req
@@ -2147,14 +2626,17 @@ class InferenceEngine:
             coords = self._build_scatter_coords(slot_idx, S_b, start_pos)
             self._scatter_exec(st, slot_idx, toks, temps, maxnew,
                                row_active, paged_coords=coords)
+        else:
+            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
+                               row_active)
+        if self._kvacct:
+            for slot, _ in rows:       # publish before any free
+                self._publish_slot_blocks(slot)
             for slot in deferred_free:   # write-then-free, as everywhere
                 self._free_slot_blocks(slot)
             covered = {slot for slot, _ in rows}
             self._table_dirty = [t for t in self._table_dirty
                                  if t[0] not in covered]
-        else:
-            self._scatter_exec(st, slot_idx, toks, temps, maxnew,
-                               row_active)
         self.stats.prefill_chunks += 1
 
     def _abort_chunk(self, slot: int, reason: str) -> None:
@@ -2178,7 +2660,7 @@ class InferenceEngine:
         if sess is not None and sess.slot == slot:
             sess.slot = None
         self._slot_session[slot] = None
-        if self.paged:
+        if self._kvacct:
             self._table_dirty = [t for t in self._table_dirty
                                  if t[0] != slot]
             self._free_slot_blocks(slot)
@@ -2285,14 +2767,15 @@ class InferenceEngine:
             # so cap drafts at budget-1 — chunk writes claimed the budget
             # first this tick, keeping chunked-prefill progress ahead of
             # hot speculation
-            if self._budget_left is not None:
-                k_r = min(k_r, self._budget_left - 1)
+            b = self._budget_for(req)
+            if b is not None:
+                k_r = min(k_r, b - 1)
             if k_r < 1:
                 continue
             draft = self._draft_tokens(req, k_r)
             if not len(draft):
                 continue
-            if self.paged:
+            if self._kvacct:
                 pre = len(self._slot_blocks[i])
                 if not self._reserve_slot_blocks(i, start, 1 + len(draft)):
                     # claim-then-release: restore the exact pre-round
@@ -2362,8 +2845,12 @@ class InferenceEngine:
             self.stats.spec_rejected_tokens += k_r - m
             self.stats.spec_committed_tokens += committed
             committed_total += committed
-            if self._budget_left is not None:
-                self._budget_left = max(0, self._budget_left - committed)
+            self._budget_take(req, committed)
+            if self.prefix_cache:
+                # the round's fed (KV-committed) tokens: t0 plus the
+                # accepted draft prefix — exactly tokens[r, :committed]
+                self._slot_toks[i].extend(
+                    int(tokens[r, j]) for j in range(committed))
             new_len = start + committed
             self._slot_len[i] = new_len
             row_pos[r] = new_len
@@ -2371,7 +2858,7 @@ class InferenceEngine:
             row_gen[r] = len(req.completion)
             row_maxnew[r] = max(1, req.max_new_tokens)
             row_active[r] = not req.finished
-            if self.paged:
+            if self._kvacct:
                 # roll back the rejected tail BEFORE building scatter
                 # coords: positions past the kept blocks resolve to the
                 # out-of-bounds sentinel and their pool writes drop
@@ -2386,7 +2873,7 @@ class InferenceEngine:
                 sess = self._session_of(req)
                 if sess is None or sess.slot != i:
                     self._slot_session[i] = None
-                    if self.paged:
+                    if self._kvacct:
                         # write-then-free: the commit scatter below still
                         # writes this slot's accepted K/V region
                         deferred_free.append(i)
@@ -2401,6 +2888,12 @@ class InferenceEngine:
             self._scatter_exec(st, slot_idx, row_last, temps, row_maxnew,
                                row_active, paged_coords=coords,
                                row_gen=row_gen)
+        else:
+            self._scatter_exec(st, slot_idx, row_last, temps, row_maxnew,
+                               row_active, row_gen=row_gen)
+        if self._kvacct:
+            for i in sorted(covered):  # publish committed full blocks
+                self._publish_slot_blocks(i)
             for i in deferred_free:
                 self._free_slot_blocks(i)
             # the scatter installed each row's FULL table from host truth
@@ -2410,9 +2903,6 @@ class InferenceEngine:
             # time the slot may have been reassigned (stale-write hazard)
             self._table_dirty = [t for t in self._table_dirty
                                  if t[0] not in covered]
-        else:
-            self._scatter_exec(st, slot_idx, row_last, temps, row_maxnew,
-                               row_active, row_gen=row_gen)
         return covered, committed_total
 
     # ----------------------------------------------------------------- step
@@ -2434,8 +2924,12 @@ class InferenceEngine:
         per-tick token budget (when set) is claimed by chunk writes
         first, speculation rounds second."""
         self._step_count += 1
-        self._budget_left = (self.prefill_token_budget
-                             if self.prefill_token_budget > 0 else None)
+        if self._budget_classes is not None:
+            self._budget_left = dict(self._budget_classes)
+        elif self.prefill_token_budget > 0:
+            self._budget_left = {0: self.prefill_token_budget}
+        else:
+            self._budget_left = None
         self._admit()
         self._advance_chunks()
         self._overflow_full_slots()
@@ -2468,17 +2962,23 @@ class InferenceEngine:
         toks_h, lps_h, fin_h = self._decode_exec()
         for i in active:
             req = self.slots[i]
+            if self.prefix_cache:
+                # the tick fed the previous sample (completion[-1] before
+                # this _record): that's the token whose K/V it wrote
+                self._slot_toks[i].append(int(req.completion[-1]))
             self._slot_len[i] += 1          # this tick wrote K/V at wpos
             self._record(req, int(toks_h[i]), float(lps_h[i]), bool(fin_h[i]))
+            self._publish_slot_blocks(i)    # tail block may just have filled
             if req.finished:
                 self._finish(req)
                 self.slots[i] = None
                 sess = self._session_of(req)
                 if sess is None or sess.slot != i:
                     # no live session to park for -> free the slot (and,
-                    # when paged, return its KV blocks to the pool)
+                    # when paged, return its KV blocks to the pool —
+                    # published full blocks retire into the prefix cache)
                     self._slot_session[i] = None
-                    if self.paged:
+                    if self._kvacct:
                         self._free_slot_blocks(i)
         self.stats.decode_steps += 1
         self._sync_kv_stats()

@@ -24,6 +24,17 @@ The contract extends to chunked prefill: chunking decisions are shared
 deterministic host logic, mid chunks consume no RNG in either engine, and
 only the final (sampling) chunk splits the key — so chunked streams match
 byte-for-byte too.
+
+With automatic prefix caching the oracle goes one step further: it runs
+the complete host block accounting (allocator, refcounts, COW, LRU
+eviction, retire/reclaim) as a *shadow* (``_shadow_kv_accounting``) so
+its hit/miss decisions replay the fused engine's exactly — but it NEVER
+skips compute. A cache-hit admission first *recomputes* the claimed
+prefix K/V into the dense row with a no-RNG chunk-style dispatch
+(``_restore_cached_prefix``) and then runs the inherited suffix dispatch
+— K/V at a position is a pure function of (token, position, weights), so
+the restored row is bitwise what the fused engine's claimed blocks hold,
+and the streams stay byte-identical.
 """
 from __future__ import annotations
 
@@ -56,6 +67,13 @@ class HostReferenceEngine(InferenceEngine):
         # oracle the paged engine's block-table reads, COW forks and
         # scatter paths must stream-match byte-for-byte
         return False
+
+    def _shadow_kv_accounting(self) -> bool:
+        # prefix-cache hit decisions depend on the full allocator
+        # dynamics (refcounts, COW, eviction, retire/reclaim order): the
+        # oracle replays them host-side so both engines claim identical
+        # prefixes in lockstep — while its dense rows never skip compute
+        return True
 
     def __init__(self, *args, **kwargs):
         # the oracle stays single-device by definition: sharded engines
@@ -119,7 +137,7 @@ class HostReferenceEngine(InferenceEngine):
         return toks_h, lps_h, st
 
     def _fork_scatter_exec(self, st, slot_idx, toks, row_temps, row_max_new,
-                           row_active) -> None:
+                           row_active, paged_coords=None) -> None:
         """Old-style cache fork: eagerly broadcast the single prefilled row
         into member rows on host, then write them slot by slot (one eager
         dispatch per tensor per row — the N-small-transfers pattern the
@@ -149,6 +167,32 @@ class HostReferenceEngine(InferenceEngine):
             toks_h[r] = int(toks[r])                 # scalar sync per row
             lps_h[r] = float(logp[r, toks_h[r]])     # and per logprob
         return toks_h, lps_h, st
+
+    def _restore_cached_prefix(self, slot, prompt, c) -> None:
+        """Oracle half of a prefix-cache hit: the reference NEVER skips
+        compute. Where the fused engine's claimed blocks already hold
+        the prefix K/V, the oracle recomputes it into its dense row with
+        one no-sample, no-RNG chunk-style dispatch (K/V at position j is
+        a pure function of token j, position j and the weights — which
+        is the soundness basis of prefix caching itself — so the
+        restored row is bitwise what the claimed blocks hold). The
+        shadow allocator still claimed the cached blocks, so both
+        engines' cache states evolve identically; only the compute
+        differs. The subsequent suffix dispatch (extend or chunk
+        stream) is then the inherited base-engine path, consuming RNG
+        splits in lockstep with the fused engine."""
+        S_b = self._extend_bucket(c, 0)
+        tokens = np.zeros((1, S_b), np.int32)
+        tokens[0, :c] = np.asarray(prompt[:c], np.int32)
+        st = self._chunk_exec(np.array([slot], np.int32), tokens,
+                              np.array([c], np.int32),
+                              np.array([0], np.int32))
+        self._scatter_exec(st, np.array([slot], np.int32),
+                           np.zeros((1,), np.int32),
+                           np.ones((1,), np.float32),
+                           np.ones((1,), np.int32),
+                           np.zeros((1,), bool),
+                           row_gen=np.zeros((1,), np.int32))
 
     def _chunk_exec(self, gather_idx, tokens, ext_lens, start_pos):
         """Host-path mid-prompt chunk: eager row gather + the jitted

@@ -85,14 +85,24 @@ def _tokens(rng: np.random.Generator, n: int) -> np.ndarray:
 
 def make_workload(seed: int, events: int, *, rate: float = 20.0,
                   step_gap: int = 2, long_len: int = 224,
-                  group_size: int = 4, temperature: float = 0.0
+                  group_size: int = 4, temperature: float = 0.0,
+                  shared_prefix: int = 0, shared_prefix_len: int = 64
                   ) -> List[ArrivalEvent]:
     """Generate a deterministic mixed workload. ``rate`` is the Poisson
     arrival rate (events/s) for the wall clock; ``step_gap`` the mean
     inter-arrival gap in engine steps for the step clock. Both schedules
     come from one generator, so a workload is fully determined by
-    ``seed``/``events`` regardless of which clock later replays it."""
+    ``seed``/``events`` regardless of which clock later replays it.
+
+    ``shared_prefix=N`` prepends one of N distinct ``shared_prefix_len``-
+    token system prompts to every event's (first) prompt — the RL-traffic
+    shape automatic prefix caching exists for: unrelated requests re-send
+    the same system prompt and only the cache can amortize it (group
+    members already share theirs via fork). N=0 leaves prompts untouched
+    and draws nothing, so existing workload seeds replay unchanged."""
     rng = np.random.default_rng(seed)
+    sys_prompts = [_tokens(rng, shared_prefix_len)
+                   for _ in range(shared_prefix)]
     # quota-based mix (largest share fills the remainder), shuffled: every
     # kind is guaranteed present for events >= len(MIX) — a sampled mix
     # can unluckily draw zero long-context events and void the workload
@@ -106,6 +116,8 @@ def make_workload(seed: int, events: int, *, rate: float = 20.0,
     for i, kind in enumerate(seq):
         step += int(rng.poisson(step_gap))
         t += float(rng.exponential(1.0 / rate))
+        sysp = (sys_prompts[int(rng.integers(len(sys_prompts)))]
+                if sys_prompts else None)
         if kind == "chat":
             ev = ArrivalEvent(i, kind, step, t, _tokens(rng, int(
                 rng.integers(4, 12))), int(rng.integers(6, 16)),
@@ -125,6 +137,10 @@ def make_workload(seed: int, events: int, *, rate: float = 20.0,
             ev = ArrivalEvent(i, kind, step, t, turns[0],
                               int(rng.integers(4, 8)), temperature,
                               "rollout", turn_prompts=turns)
+        if sysp is not None:  # first prompt of the event carries the
+            ev.prompt = np.concatenate([sysp, ev.prompt])  # system prompt
+            if ev.turn_prompts:
+                ev.turn_prompts[0] = ev.prompt
         out.append(ev)
     return out
 
@@ -263,9 +279,20 @@ def _build_pool(args, chunk: int):
                                max_seq=args.max_seq, seed=i,
                                chunk_prefill=chunk,
                                prefill_token_budget=args.prefill_budget,
-                               promote_after=args.promote_after)
+                               promote_after=args.promote_after,
+                               prefix_cache=args.prefix_cache)
                for i in range(args.engines)]
     return InferencePool(engines)
+
+
+def _print_hit_rate(stats: dict) -> None:
+    """Prefix-cache hit-rate summary line (silent when caching never ran)."""
+    looked = stats["prefix_cache_hits"] + stats["prefix_cache_misses"]
+    if looked:
+        print(f"  prefix cache: {stats['prefix_cache_hits']}/{looked} "
+              f"admissions hit ({stats['prefix_cache_hits'] / looked:.0%} "
+              f"hit rate, {stats['prefix_cache_hit_tokens']} prompt tokens "
+              f"served from cache)")
 
 
 def _fmt(report: dict) -> str:
@@ -294,6 +321,14 @@ def main():
     p.add_argument("--chunk-prefill", type=int, default=32)
     p.add_argument("--prefill-budget", type=int, default=0)
     p.add_argument("--promote-after", type=int, default=64)
+    p.add_argument("--shared-prefix", type=int, default=0,
+                   help="prepend one of N distinct 64-token system prompts "
+                        "to every event (0 = off) — the workload shape "
+                        "automatic prefix caching amortizes")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="enable automatic prefix caching on the engines "
+                        "(pair with --shared-prefix; summary reports the "
+                        "hit rate)")
     p.add_argument("--itl-p99-bound", type=float, default=0.0,
                    help="--check: also require chunked p99 ITL below this "
                         "many seconds (0 = only require improvement)")
@@ -302,14 +337,18 @@ def main():
                         "+ p99 ITL improvement + zero leaked blocks")
     args = p.parse_args()
 
-    events = make_workload(args.seed, args.events)
+    events = make_workload(args.seed, args.events,
+                           shared_prefix=args.shared_prefix)
 
     if not args.check:
         pool = _build_pool(args, args.chunk_prefill)
         report, _ = run_workload(pool, events, clock=args.clock,
-                                 warmup=make_workload(args.seed + 1, 6))
+                                 warmup=make_workload(
+                                     args.seed + 1, 6,
+                                     shared_prefix=args.shared_prefix))
         print(f"loadgen ({args.clock} clock, chunk={args.chunk_prefill}): "
               f"{_fmt(report)}")
+        _print_hit_rate(pool.stats())
         return
 
     # --check: the CI serving-SLO smoke. Step clock (deterministic
@@ -329,6 +368,7 @@ def main():
                 f"chunk={chunk}: {eng.stats.kv_blocks_in_use} blocks leaked"
         runs[chunk] = (report, streams, pool.stats())
         print(f"  chunk={chunk}: {_fmt(report)}")
+        _print_hit_rate(runs[chunk][2])
     (rep_c, str_c, st_c) = runs[args.chunk_prefill]
     (rep_u, str_u, st_u) = runs[0]
     assert st_c["chunked_admissions"] > 0, "no chunked admissions happened"

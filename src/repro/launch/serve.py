@@ -51,14 +51,31 @@ def main():
                         "many tokens in chunk-sized no-sample extends "
                         "interleaved with decode ticks (0 = monolithic "
                         "prefill; unsupported layouts stay monolithic)")
-    p.add_argument("--prefill-budget", type=int, default=0,
+    p.add_argument("--prefill-budget", default="0",
                    help="SLO scheduler: max chunk+speculation tokens per "
-                        "engine tick (0 = unbounded)")
+                        "engine tick (0 = unbounded). Either one int, or "
+                        "'I,R' for per-class pools (interactive,rollout); "
+                        "the engine-wide total is the sum")
     p.add_argument("--promote-after", type=int, default=64,
                    help="promote a starved rollout-class request to "
                         "interactive priority after this many ticks "
                         "queued (0 = never)")
+    p.add_argument("--promote-after-ms", type=float, default=0.0,
+                   help="wall-clock companion to --promote-after: promote "
+                        "a queued rollout-class request after this many "
+                        "milliseconds (0 = never; breaks replayability)")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="automatic prefix caching: content-address full KV "
+                        "blocks so unrelated requests sharing a prompt "
+                        "prefix skip its prefill (unsupported layouts "
+                        "stay off)")
     args = p.parse_args()
+
+    if "," in args.prefill_budget:
+        inter, roll = (int(x) for x in args.prefill_budget.split(","))
+        prefill_budget = {"interactive": inter, "rollout": roll}
+    else:
+        prefill_budget = int(args.prefill_budget)
 
     from repro.configs import get_config
     from repro.configs.base import ParallelConfig
@@ -84,8 +101,10 @@ def main():
                                    seed=i, spec_draft=args.spec_draft,
                                    spec_ngram=args.spec_ngram,
                                    chunk_prefill=args.chunk_prefill,
-                                   prefill_token_budget=args.prefill_budget,
-                                   promote_after=args.promote_after, mesh=m)
+                                   prefill_token_budget=prefill_budget,
+                                   promote_after=args.promote_after,
+                                   promote_after_ms=args.promote_after_ms,
+                                   prefix_cache=args.prefix_cache, mesh=m)
                    for i, m in enumerate(meshes)]
         print(f"mesh serving: {dp} engine shard(s) x "
               f"{tp * ep} device(s) each "
@@ -96,8 +115,10 @@ def main():
                                    spec_draft=args.spec_draft,
                                    spec_ngram=args.spec_ngram,
                                    chunk_prefill=args.chunk_prefill,
-                                   prefill_token_budget=args.prefill_budget,
-                                   promote_after=args.promote_after)
+                                   prefill_token_budget=prefill_budget,
+                                   promote_after=args.promote_after,
+                                   promote_after_ms=args.promote_after_ms,
+                                   prefix_cache=args.prefix_cache)
                    for i in range(args.engines)]
     pool = InferencePool(engines)
 
@@ -144,6 +165,14 @@ def main():
               f"({stats['chunk_tokens']} chunk tokens, "
               f"{stats['sched_promotions']} deadline promotions, "
               f"{stats['sched_budget_deferrals']} budget deferrals)")
+    if stats["prefix_cache_hits"] or stats["prefix_cache_misses"]:
+        looked = stats["prefix_cache_hits"] + stats["prefix_cache_misses"]
+        print(f"prefix cache: {stats['prefix_cache_hits']}/{looked} "
+              f"admissions hit ({stats['prefix_cache_hit_tokens']} prompt "
+              f"tokens served from cache; {stats['prefix_cache_cached_blocks']}"
+              f" blocks cached, {stats['prefix_cache_retired']} retired / "
+              f"{stats['prefix_cache_reclaimed']} reclaimed / "
+              f"{stats['prefix_cache_swept']} swept stale)")
     lat = stats["latency"]
     if lat["ttft_n"]:
         print(f"latency (window of {lat['ttft_n']} requests): "

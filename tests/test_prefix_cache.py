@@ -1,0 +1,338 @@
+"""Automatic prefix caching: allocator cache mechanics + engine rehits.
+
+PR 10 makes full KV blocks content-addressed: publishing a block under an
+interned chain node ``(parent, block tokens, weights version)`` lets a
+later unrelated admission claim the whole leading run of cached blocks by
+refcount bump and prefill only the uncached suffix. The allocator grows
+three lifecycle moves — *retire* (a freed published block parks in an LRU
+instead of the free list), *reclaim* (``alloc`` unpublishes the oldest
+retired block once the free list runs dry), and *sweep* (a weights update
+drops every mapping interned under an older version) — and the leak
+invariant extends to ``in_use + cached + free == total``.
+
+The property suite drives random op sequences against a content mirror:
+every block gets a fresh stamp when (re)allocated, every publish records
+the stamp, and every successful claim must return the published stamp —
+so a reclaimed or swept block being served as a hit is caught as a stamp
+mismatch, not just a bookkeeping error. Engine-level integration (hit
+admissions, stream parity with the host reference, eviction retire) is
+covered here with small engines; the full four-way parity gate including
+an in-flight weight update lives in ``benchmarks/fig_prefix_cache.py``.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import TOKENIZER
+from repro.inference import HostReferenceEngine, InferenceEngine, Request
+from repro.inference.engine import BlockAllocator
+from repro.models import init_params
+from tests.utils import given, settings, st
+
+BS = 8   # engine tests: block size (divides the prompt lengths below)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("minitron-4b:reduced"),
+                              vocab_size=TOKENIZER.vocab_size, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _req(i, prompt, max_new=4, temp=0.0):
+    return Request(request_id=i, problem_id=f"p{i}",
+                   prompt_tokens=np.asarray(prompt, np.int32),
+                   max_new_tokens=max_new, temperature=temp)
+
+
+def _drain(eng):
+    eng.run_until_idle()
+    done = {r.request_id: r for r in eng.drain_completed()}
+    eng.assert_kv_consistent()
+    assert eng.stats.kv_blocks_in_use == 0
+    return done
+
+
+# --------------------------------------------------- allocator unit tests
+
+
+def test_retire_and_rehit():
+    """Freeing a published block retires it (cached, not free); a claim
+    revives the very same block refcount 0 -> 1."""
+    a = BlockAllocator(4)
+    (b,) = a.alloc(1)
+    node = a.intern_node(-1, (1, 2, 3), 0)
+    assert a.publish(b, node)
+    a.free([b])
+    assert a.in_use == 0 and a.cached == 1 and a.free_blocks == 3
+    a.assert_cache_consistent()
+    assert a.claim(node) == b
+    assert a.in_use == 1 and a.cached == 0 and a.refcount(b) == 1
+    a.free([b])
+    a.assert_cache_consistent()
+
+
+def test_reclaim_unpublishes_oldest_first():
+    """Once the free list is dry, alloc reclaims from the LRU's oldest
+    end; the victim's node stops hitting while younger entries survive."""
+    a = BlockAllocator(2)
+    (b0,) = a.alloc(1)
+    (b1,) = a.alloc(1)
+    n0 = a.intern_node(-1, (0,), 0)
+    n1 = a.intern_node(-1, (1,), 0)
+    a.publish(b0, n0)
+    a.publish(b1, n1)
+    a.free([b0])          # retired first -> oldest
+    a.free([b1])
+    assert a.cached == 2 and a.free_blocks == 0
+    got = a.alloc(1)      # must reclaim b0, the oldest retiree
+    assert got == [b0] and a.reclaimed_total == 1
+    assert a.claim(n0) is None, "a reclaimed block must never hit again"
+    assert a.claim(n1) == b1, "the younger entry must survive the reclaim"
+    a.free(got)
+    a.free([b1])
+    a.assert_cache_consistent()
+
+
+def test_version_sweep_drops_stale_mappings():
+    """A weights update makes old-version nodes unreachable (the version
+    is in the chain key); sweep returns their retired bytes to the free
+    list and live stale blocks just lose their mapping."""
+    a = BlockAllocator(4)
+    (b0,) = a.alloc(1)
+    (b1,) = a.alloc(1)
+    n0 = a.intern_node(-1, (0,), 0)
+    n1 = a.intern_node(-1, (1,), 0)
+    a.publish(b0, n0)
+    a.publish(b1, n1)
+    a.free([b0])                       # n0 retired, n1 still live
+    assert a.sweep_stale(1) == 2       # both mappings were version 0
+    assert a.cached == 0 and a.free_blocks == 3   # b0 back on free list
+    assert a.lookup(n0) is None and a.lookup(n1) is None
+    assert a.in_use == 1               # b1 unaffected, frees normally
+    a.free([b1])
+    assert a.free_blocks == 4
+    a.assert_cache_consistent()
+
+
+def test_duplicate_publish_first_wins():
+    """Two blocks holding identical content: the second publish is
+    refused, the duplicate stays anonymous and frees normally."""
+    a = BlockAllocator(4)
+    (b0,) = a.alloc(1)
+    (b1,) = a.alloc(1)
+    node = a.intern_node(-1, (7,), 0)
+    assert a.publish(b0, node)
+    assert not a.publish(b1, node)
+    a.free([b1])
+    assert a.cached == 0, "anonymous duplicate must not retire"
+    a.free([b0])
+    assert a.cached == 1
+    a.assert_cache_consistent()
+
+
+# ---------------------------------------------------- property suite
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=150))
+def test_allocator_cache_lifecycle_property(ops):
+    """Random retire/reclaim/rehit/sweep sequences against a content
+    mirror. Invariants after EVERY op:
+
+      * in_use + cached + free == total (the extended leak gate);
+      * a successful claim returns the exact content published under the
+        node — a reclaimed or swept block re-stamped by its new owner can
+        never masquerade as a hit;
+      * immediately after a sweep, no node interned under an older
+        version resolves.
+    """
+    a = BlockAllocator(10)
+    held = []            # blocks we hold one reference to (dups allowed)
+    contents = {}        # block -> stamp of what is "written" in it
+    node_content = {}    # node  -> stamp recorded at publish time
+    node_version = {}    # node  -> version it was interned under
+    nodes = []
+    version, stamp = 0, 0
+
+    for op_raw in ops:
+        op, arg = op_raw % 6, op_raw // 6
+        if op == 0:                      # alloc fresh blocks (new content)
+            got = a.alloc(1 + arg % 3)
+            if got is not None:
+                for b in got:
+                    stamp += 1
+                    contents[b] = stamp  # overwrites a reclaimed block
+                    held.append(b)
+        elif op == 1 and held:           # publish a held block
+            b = held[arg % len(held)]
+            parent = -1 if (not nodes or arg % 3 == 0) \
+                else nodes[arg % len(nodes)]
+            node = a.intern_node(parent, (arg % 4,), version)
+            if node not in node_version:
+                nodes.append(node)
+                node_version[node] = version
+            if a.publish(b, node):
+                node_content[node] = contents[b]
+        elif op == 2 and held:           # drop one held reference
+            a.free([held.pop(arg % len(held))])
+        elif op == 3 and nodes:          # claim: the hit-integrity check
+            node = nodes[arg % len(nodes)]
+            b = a.claim(node)
+            if b is not None:
+                assert contents[b] == node_content[node], \
+                    "hit served a block whose content was overwritten"
+                held.append(b)
+        elif op == 4:                    # weights update
+            version += 1
+            a.sweep_stale(version)
+            for n, v in node_version.items():
+                if v != version:
+                    assert a.lookup(n) is None, \
+                        "stale-version node survived the sweep"
+        else:                            # drain free list: force reclaims
+            got = a.alloc(a.free_blocks + (arg % 2 if a.cached else 0))
+            if got is not None:
+                for b in got:
+                    stamp += 1
+                    contents[b] = stamp
+                    held.append(b)
+        a.assert_cache_consistent()
+
+    for b in held:                       # teardown: all refs returned
+        a.free([b])
+    a.assert_cache_consistent()
+    assert a.in_use == 0
+
+
+# ---------------------------------------------------- engine integration
+
+
+def test_engine_rehit_skips_prefix_and_matches_reference(setup):
+    """Two unrelated requests sharing a 32-token prefix: the second
+    admission claims the cached blocks (hit counted, prefix tokens
+    saved), streams stay byte-identical to the host reference with
+    caching on AND off, and greedy streams match across on/off."""
+    cfg, params = setup
+    shared = ((np.arange(32, dtype=np.int32) * 5) % 40) + 10
+    prompts = [np.concatenate([shared, np.full(6, 11 + i, np.int32)])
+               for i in range(3)]
+
+    def run(engine_cls, cache):
+        eng = engine_cls(params, cfg, num_slots=2, max_seq=128, seed=3,
+                         kv_block_size=BS, prefix_cache=cache)
+        for i, p in enumerate(prompts):
+            eng.submit(_req(i, p, max_new=5))
+            _drain_partial(eng)          # serialize: publish before rehit
+        done = _drain(eng)
+        return [(tuple(done[i].completion), tuple(done[i].logprobs),
+                 tuple(done[i].versions)) for i in sorted(done)], eng
+
+    def _drain_partial(eng):
+        while not eng.idle:
+            eng.step()
+
+    fused_on, eng_on = run(InferenceEngine, True)
+    fused_off, eng_off = run(InferenceEngine, False)
+    ref_on, _ = run(HostReferenceEngine, True)
+    ref_off, _ = run(HostReferenceEngine, False)
+
+    assert fused_on == ref_on, "cached fused != cached reference"
+    assert fused_off == ref_off, "uncached fused != uncached reference"
+    for (t_on, lp_on, v_on), (t_off, lp_off, v_off) in zip(fused_on,
+                                                           fused_off):
+        assert t_on == t_off and v_on == v_off
+        np.testing.assert_allclose(lp_on, lp_off, atol=1e-5)
+    assert eng_on.stats.prefix_cache_hits == 2       # 2nd and 3rd request
+    assert eng_on.stats.prefix_cache_hit_tokens == 2 * 32
+    assert eng_on.stats.prefill_tokens \
+        == eng_off.stats.prefill_tokens - 2 * 32
+    assert eng_off.stats.prefix_cache_hits == 0
+
+
+def test_engine_update_weights_sweeps_and_remisses(setup):
+    """A weight update must invalidate the cache: the same prompt that
+    hit at v0 re-misses (and re-pays its prefill) at v1, then hits again
+    within v1 — and the sweep counter records the drop."""
+    cfg, params = setup
+    prompt = ((np.arange(40, dtype=np.int32) * 3) % 40) + 10
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=3,
+                          kv_block_size=BS, prefix_cache=True)
+    for i in range(2):
+        eng.submit(_req(i, prompt, max_new=3))
+        eng.run_until_idle()
+    assert eng.stats.prefix_cache_hits == 1
+    eng.commit_weights(eng.params, 1)     # same params, bumped version
+    assert eng.stats.prefix_cache_swept > 0
+    for i in range(2, 4):
+        eng.submit(_req(i, prompt, max_new=3))
+        eng.run_until_idle()
+    assert eng.stats.prefix_cache_misses == 2   # first at v0, first at v1
+    assert eng.stats.prefix_cache_hits == 2     # rehit within each version
+    _drain(eng)
+
+
+def test_unsupported_layout_stays_off(setup):
+    """Layouts that cannot content-address their full per-slot state
+    (hybrid: pooled SSM rows) silently keep the knob off."""
+    cfg = dataclasses.replace(get_config("hymba-1.5b:reduced"),
+                              vocab_size=TOKENIZER.vocab_size, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    eng = InferenceEngine(params, cfg, num_slots=2, max_seq=128, seed=0,
+                          prefix_cache=True)
+    assert not eng.prefix_cache
+    eng.submit(_req(0, ((np.arange(24) * 3) % 40 + 10).astype(np.int32)))
+    done = _drain(eng)
+    assert len(done) == 1
+    assert eng.stats.prefix_cache_hits == 0
+    assert eng.stats.prefix_cache_misses == 0
+
+
+# ------------------------------------------- scheduler satellites (PR 10)
+
+
+def test_per_class_prefill_budget_isolates_pools(setup):
+    """Dict-valued ``prefill_token_budget`` gives each class its own
+    per-tick pool (engine-wide total = the sum), so rollout chunk floods
+    draw from the rollout pool and cannot starve interactive chunk
+    writes; an int keeps the legacy single shared pool."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=256, seed=9,
+                          chunk_prefill=8,
+                          prefill_token_budget={"interactive": 8,
+                                                "rollout": 8})
+    assert eng.prefill_token_budget == 16
+    rng = np.random.default_rng(4)
+    for i in range(4):
+        r = _req(i, rng.integers(10, 40, 42).astype(np.int32), max_new=4)
+        r.sched_class = "rollout" if i else "interactive"
+        eng.submit(r)
+    done = _drain(eng)
+    assert len(done) == 4
+    assert eng.stats.sched_budget_deferrals > 0
+    assert eng.stats.chunked_admissions == 4
+
+
+def test_promote_after_ms_wall_clock_promotion(setup):
+    """`promote_after_ms` promotes a queued rollout on wall-clock age:
+    with an (unrealistically) 0.0001ms deadline and step-age promotion
+    off, a starved rollout is promoted almost immediately."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=1, max_seq=64, seed=0,
+                          promote_after=0, promote_after_ms=0.0001)
+    eng.submit(_req(0, ((np.arange(4) * 3) % 40 + 10).astype(np.int32),
+                    max_new=12))
+    roll = _req(1, ((np.arange(4) * 7) % 40 + 10).astype(np.int32),
+                max_new=3)
+    roll.sched_class = "rollout"
+    eng.submit(roll)
+    eng.step()                 # queued at least one tick, wall-age > 0
+    eng.step()
+    done = _drain(eng)
+    assert len(done) == 2
+    assert eng.stats.sched_promotions >= 1

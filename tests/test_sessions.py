@@ -21,8 +21,8 @@ from repro.configs.base import ParallelConfig
 from repro.core.orchestrator import AsyncPoolClient
 from repro.data import TOKENIZER
 from repro.envs import MultiTurnEnv, Rubric
-from repro.inference import (HostReferenceEngine, InferenceEngine,
-                             InferencePool, Request)
+from repro.inference import (GroupRequest, HostReferenceEngine,
+                             InferenceEngine, InferencePool, Request)
 from repro.models import forward, init_params
 from tests.utils import run_async
 
@@ -219,6 +219,27 @@ def test_lru_eviction_fallback_parity(fam_setup):
     assert st_s.session_evictions >= 2
     assert st_s.session_fallbacks >= 2
     assert st_s.extends == 0     # never resident at its next turn
+
+
+def test_group_queued_behind_extend_turn(setup):
+    """Regression: ``_admit_extend_run`` walks the pending queue past the
+    head while batching a run of resident-session extend turns. A
+    ``GroupRequest`` sitting behind such a turn has no ``session_id`` —
+    it must stop the run (admitted next tick by the group path), not
+    crash the scheduler."""
+    cfg, params = setup
+    eng = InferenceEngine(params, cfg, num_slots=4, max_seq=128, seed=0)
+    eng.open_session(7)
+    _drain_one(eng, Request(0, "s7", PROMPT, 4, session_id=7))
+    # second turn (resident extend) with a group queued right behind it
+    eng.submit(Request(1, "s7", DELTAS[0], 4, session_id=7))
+    eng.submit_group(GroupRequest(9, "g", PROMPT, members=[
+        Request(10 + i, "g", np.asarray(PROMPT, np.int32), 4, group_id=9)
+        for i in range(2)]))
+    while not eng.idle:
+        eng.step()
+    assert {r.request_id for r in eng.drain_completed()} == {1, 10, 11}
+    eng.close_session(7)
 
 
 def test_parked_cache_survives_unrelated_decode_traffic(setup):
